@@ -1,0 +1,89 @@
+"""Shared benchmark fixtures: corpus -> LSA -> index -> gold standard.
+
+The paper's setup (§3) scaled to CPU: topic-mixture corpus standing in for
+Wikipedia, LSA with ``--features`` (default 200; paper: 400 over 4.18M
+docs), 1,000->--queries query docs, gold = brute-force cosine top-10.
+Fixtures are cached under artifacts/ so the table/figure benches share one
+build.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import VectorIndex
+from repro.data import make_corpus
+from repro.lsa import build_lsa
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+class Fixture:
+    def __init__(self, n_docs=20000, vocab=30000, topics=96, features=200,
+                 n_queries=200, seed=0):
+        os.makedirs(ART, exist_ok=True)
+        tag = f"{n_docs}_{vocab}_{topics}_{features}_{seed}"
+        cache = os.path.join(ART, f"bench_fixture_{tag}.npz")
+        if os.path.exists(cache):
+            z = np.load(cache)
+            self.doc_vectors = jnp.asarray(z["doc_vectors"])
+            self.doc_terms = z["doc_terms"]
+            self.doc_tf = z["doc_tf"]
+            self.vocab_size = int(z["vocab_size"])
+        else:
+            t0 = time.time()
+            corpus = make_corpus(n_docs=n_docs, vocab_size=vocab, n_topics=topics,
+                                 seed=seed)
+            pipe = build_lsa(corpus, n_features=features)
+            self.doc_vectors = pipe.doc_vectors
+            self.doc_terms = corpus.doc_terms
+            self.doc_tf = corpus.doc_tf
+            self.vocab_size = corpus.vocab_size
+            np.savez(cache, doc_vectors=np.asarray(self.doc_vectors),
+                     doc_terms=corpus.doc_terms, doc_tf=corpus.doc_tf,
+                     vocab_size=corpus.vocab_size)
+            print(f"# fixture built in {time.time()-t0:.0f}s -> {cache}")
+        self.n_docs = self.doc_vectors.shape[0]
+        self.n_features = self.doc_vectors.shape[1]
+        self.n_queries = n_queries
+        rng = np.random.default_rng(seed + 1)
+        self.query_ids = rng.choice(self.n_docs, size=n_queries, replace=False)
+        self.queries = self.doc_vectors[self.query_ids]
+        # Combined P1+I10 encoder: the bucket width has to match the corpus'
+        # feature-magnitude scale (mean |x| ~ 1/sqrt(n_features) ~ 0.05 at
+        # n=200).  P2 cells (0.01) are too fine -- measured P@10@page=640
+        # drops from 0.95 to 0.28 (the encoder sweep that established this is
+        # recorded in EXPERIMENTS.md §Quality).
+        from repro.core import CombinedEncoder, IntervalEncoder, RoundingEncoder
+        self.index = VectorIndex.build(
+            self.doc_vectors,
+            CombinedEncoder(RoundingEncoder(1), IntervalEncoder(0.1)))
+        self.gold_ids, self.gold_sims = self.index.gold_topk(self.queries, 10)
+
+
+_FIXTURE = None
+
+
+def fixture(**kw) -> Fixture:
+    global _FIXTURE
+    if _FIXTURE is None:
+        _FIXTURE = Fixture(**kw)
+    return _FIXTURE
+
+
+def timed(fn, *args, repeats=3, **kw):
+    """-> (result, best seconds) with block_until_ready."""
+    import jax
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best

@@ -1,0 +1,49 @@
+"""Paper §2.3 complexity table, probed empirically.
+
+Checks the scaling claims: naive search O(nd) in docs; postings time driven
+by posting-window work (trim cuts it ~linearly); codes engine linear in d
+with a small constant (int8 stream).
+Usage: PYTHONPATH=src python -m benchmarks.complexity_probe
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import TrimFilter, VectorIndex
+
+from .common import ART, timed
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    n = 64
+    rows = []
+    sizes = [2000, 8000] if quick else [2000, 8000, 32000]
+    for d in sizes:
+        V = rng.normal(size=(d, n)).astype(np.float32)
+        idx = VectorIndex.build(V)
+        Q = jnp.asarray(V[:8])
+        for name, fn in {
+            "naive": lambda: idx.gold_topk(Q, 10),
+            "codes": lambda: idx.search(Q, k=10, page=min(320, d), engine="codes"),
+            "postings": lambda: idx.search(Q, k=10, page=min(320, d),
+                                           engine="postings", max_postings=2048),
+            "codes_trim": lambda: idx.search(Q, k=10, page=min(320, d),
+                                             trim=TrimFilter(0.1), engine="codes"),
+        }.items():
+            _, secs = timed(fn, repeats=2)
+            rows.append({"n_docs": d, "engine": name, "s": secs})
+            print(f"d={d:<7d} {name:12s} {secs*1e3:9.2f} ms")
+
+    import csv, os
+    with open(os.path.join(ART, "complexity_probe.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Paper Figure 2: the precision / request-time trade-off scatter.
+
+Points = (avg precision, per-request seconds) for trim x page; the paper's
+reading: page size is nearly free, trim dominates latency -- retrieve as
+large a page as latency allows, trim to ~0.05.
+Usage: PYTHONPATH=src python -m benchmarks.fig2_tradeoff [--quick]
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.core import TrimFilter, precision_at_k
+
+from .common import ART, fixture, timed
+
+
+def run(quick: bool = False):
+    fx = fixture()
+    idx = fx.index
+    nb = 4
+    Q = fx.queries[:nb]
+    gold = fx.gold_ids[:nb]
+
+    trims = [0.0, 0.05, 0.1]
+    pages = [20, 80, 320]
+    if quick:
+        trims, pages = [0.0, 0.1], [20, 320]
+
+    rows = []
+    for trim in trims:
+        tf = TrimFilter(trim) if trim else None
+        for page in pages:
+            (ids, _), secs = timed(
+                lambda: idx.search(Q, k=10, page=page, trim=tf, engine="postings",
+                                   max_postings=4096),
+                repeats=2 if quick else 3)
+            p = float(precision_at_k(ids, gold).mean())
+            rows.append({"trim": trim, "page": page, "avg_p10": p,
+                         "per_request_s": secs / nb})
+            print(f"trim={trim:<5.2f} page={page:<4d} P@10={p:.4f} "
+                  f"t/req={secs/nb*1e3:8.2f}ms")
+
+    import csv, os
+    with open(os.path.join(ART, "fig2_tradeoff.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

@@ -1,0 +1,188 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Perf hillclimb variants (EXPERIMENTS.md §Perf): lower+compile modified
+configurations of the three chosen cells and record the same roofline
+artifacts as the baseline dry-run, under artifacts/dryrun_variants/<name>/.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb [variant ...]
+
+Chosen cells (from the baseline table):
+* llama4-maverick train_4k  -- worst useful-fraction + largest memory term
+* mixtral decode_32k/long_500k -- most collective-bound
+* vectordb-wiki search_b128/b1 -- the paper's own technique
+"""
+
+import dataclasses
+import functools
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _lm_variant(arch_id, shape, cfg_patch, accum=None, cache_seq_model=False,
+                inference_specs=False):
+    from repro.configs import get_arch
+    from repro.configs.base import LMArch
+    from repro.dist.sharding import (batch_axes, lm_param_spec_inference,
+                                     tree_specs)
+    from repro.launch.mesh import make_production_mesh
+
+    base = get_arch(arch_id)
+    cfg = dataclasses.replace(base.cfg, **cfg_patch)
+    arch = LMArch(cfg, optimizer=base.optimizer,
+                  skip_shapes=base.skip_shapes, accum=accum or base.accum)
+    if inference_specs:
+        arch.param_specs = lambda mesh, pa: tree_specs(pa, mesh, lm_param_spec_inference)
+    mesh = make_production_mesh()
+    cell = arch.cell(shape, mesh)
+    if cache_seq_model:
+        # shard the KV-cache seq axis over "model" (kv heads indivisible):
+        # decode attention reduces over the sharded seq with one small psum
+        bd = batch_axes(mesh)
+        nb = 1
+        for a in bd:
+            nb *= mesh.shape[a]
+
+        def patch_spec(leaf_spec, leaf):
+            if not isinstance(leaf_spec, P) or len(leaf.shape) != 5:
+                return leaf_spec
+            if leaf.shape[1] % nb == 0 and leaf.shape[1] >= nb:
+                return P(None, bd, "model", None, None)
+            # batch=1 (long_500k): seq over data axes AND model
+            return P(None, None, (*bd, "model"), None, None)
+
+        cache_abs = cell.args[1]
+        new_cache_specs = jax.tree.map(
+            patch_spec, cell.in_specs[1], cache_abs,
+            is_leaf=lambda x: isinstance(x, P))
+        pos_fix = jax.tree_util.tree_map_with_path(
+            lambda path, s: P(None, "model")
+            if "pos" in str(path[-2:]) and isinstance(s, P) else s,
+            new_cache_specs, is_leaf=lambda x: isinstance(x, P))
+        cell = dataclasses.replace(
+            cell,
+            in_specs=(cell.in_specs[0], pos_fix, *cell.in_specs[2:]),
+            out_specs=(cell.out_specs[0], pos_fix),
+        )
+    return cell, mesh
+
+
+def _vectordb_variant(shape, engine):
+    from repro.configs.base import SDS, _bspec
+    from repro.configs.vectordb_wiki import ENCODER, N_DOCS, N_FEATURES, VectorDBArch
+    from repro.configs.base import Cell
+    from repro.core.codes import score_onehot
+    from repro.core.filtering import TrimFilter, expand_mask, feature_mask
+    from repro.core.rerank import normalize, rerank_topk
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh()
+    nq = 128 if shape == "search_b128" else 1
+
+    if engine == "onehot":
+        def fn(doc_vecs, doc_codes, queries):
+            q = normalize(queries.astype(jnp.float32))
+            qcodes = ENCODER.encode(q)
+            mask = expand_mask(feature_mask(q, trim=TrimFilter(0.05)), qcodes.shape[-1])
+            w = jnp.where(mask, 1.0, 0.0)
+            s1 = score_onehot(doc_codes, qcodes, w, ENCODER.max_abs_bucket)
+            _, cand = jax.lax.top_k(s1, 320)
+            return rerank_topk(doc_vecs, cand, q, 10)
+    elif engine == "colmajor":
+        def fn(doc_vecs, codes_T, queries):
+            # column-major codes: only the query's surviving columns are
+            # streamed -- bytes ~ m/C of the full matrix for small batches
+            q = normalize(queries.astype(jnp.float32))
+            qcodes = ENCODER.encode(q)                       # (Q, C)
+            m = 120
+            _, sel = jax.lax.top_k(jnp.abs(q[0]), m)         # (m,) columns
+            sub = jnp.take(codes_T, sel, axis=0)             # (m, N)
+            qsel = jnp.take(qcodes, sel, axis=1)             # (Q, m)
+            eq = (sub[None] == qsel[:, :, None]).astype(jnp.int8)
+            s1 = jnp.einsum("qmn,qm->qn", eq,
+                            jnp.ones((q.shape[0], m), jnp.float32),
+                            preferred_element_type=jnp.float32)
+            _, cand = jax.lax.top_k(s1, 320)
+            return rerank_topk(doc_vecs, cand, q, 10)
+    else:
+        raise ValueError(engine)
+
+    vecs = SDS((N_DOCS, N_FEATURES), jnp.float32)
+    if engine == "colmajor":
+        codes = SDS((N_FEATURES, N_DOCS), jnp.dtype(ENCODER.code_dtype))
+        codes_spec = P(None, ("pod", "data") if "pod" in mesh.axis_names else ("data",))
+        codes_spec = _bspec(mesh, codes, batch_dim=1)
+    else:
+        codes = SDS((N_DOCS, N_FEATURES), jnp.dtype(ENCODER.code_dtype))
+        codes_spec = _bspec(mesh, codes)
+    qs = SDS((nq, N_FEATURES), jnp.float32)
+    return Cell(
+        arch="vectordb-wiki", shape=shape, kind="search", fn=fn,
+        args=(vecs, codes, qs),
+        in_specs=(_bspec(mesh, vecs), codes_spec, P()),
+        out_specs=(P(), P()), note=f"variant engine={engine}",
+    ), mesh
+
+
+VARIANTS = {
+    # --- llama4 train_4k (worst useful fraction / memory term) ---
+    "llama4_moechunk8k": lambda: _lm_variant(
+        "llama4-maverick-400b-a17b", "train_4k", dict(moe_token_chunk=8192)),
+    "llama4_seqpar": lambda: _lm_variant(
+        "llama4-maverick-400b-a17b", "train_4k",
+        dict(seq_parallel_attn=True, q_chunk=256)),
+    "llama4_seqpar_moechunk": lambda: _lm_variant(
+        "llama4-maverick-400b-a17b", "train_4k",
+        dict(seq_parallel_attn=True, q_chunk=256, moe_token_chunk=8192)),
+    "llama4_seqpar_localmoe": lambda: _lm_variant(
+        "llama4-maverick-400b-a17b", "train_4k",
+        dict(seq_parallel_attn=True, q_chunk=256, moe_dispatch="local")),
+    # --- mixtral decode (most collective-bound) ---
+    "mixtral_decode_seqcache": lambda: _lm_variant(
+        "mixtral-8x22b", "decode_32k", dict(cache_update="masked"),
+        cache_seq_model=True),
+    "mixtral_long_seqcache": lambda: _lm_variant(
+        "mixtral-8x22b", "long_500k", dict(cache_update="masked"),
+        cache_seq_model=True),
+    "mixtral_decode_noFSDP": lambda: _lm_variant(
+        "mixtral-8x22b", "decode_32k", dict(), inference_specs=True),
+    "mixtral_decode_noFSDP_seqcache": lambda: _lm_variant(
+        "mixtral-8x22b", "decode_32k", dict(cache_update="masked"),
+        cache_seq_model=True, inference_specs=True),
+    "mixtral_long_noFSDP_seqcache": lambda: _lm_variant(
+        "mixtral-8x22b", "long_500k", dict(cache_update="masked"),
+        cache_seq_model=True, inference_specs=True),
+    # --- vectordb (the paper's cell) ---
+    "vectordb_b128_onehot": lambda: _vectordb_variant("search_b128", "onehot"),
+    "vectordb_b1_colmajor": lambda: _vectordb_variant("search_b1", "colmajor"),
+    "vectordb_b128_colmajor": lambda: _vectordb_variant("search_b128", "colmajor"),
+}
+
+
+def main():
+    from repro.launch.dryrun import run_cell
+
+    names = sys.argv[1:] or list(VARIANTS)
+    for name in names:
+        try:
+            cell, mesh = VARIANTS[name]()
+            rec = run_cell(cell, mesh, name, "artifacts/dryrun_variants", force=True)
+            mem = rec.get("memory_analysis") or {}
+            print(f"{name:28s} flops/dev={rec['flops_per_device']:.3e} "
+                  f"bytes/dev={rec['bytes_per_device']:.3e} "
+                  f"coll/dev={rec['collective_bytes_per_device']:.3e} "
+                  f"temp={(mem.get('temp_size_in_bytes') or 0)/2**30:.1f}GiB")
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            print(f"{name:28s} FAILED: {e!r}")
+
+
+if __name__ == "__main__":
+    main()

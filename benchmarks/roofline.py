@@ -1,0 +1,165 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / ICI_bw
+(all in seconds/step/device; the max = the bound), plus
+    MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) -- per device,
+    usefulness = MODEL_FLOPS / HLO_FLOPs  (remat/replication waste shows up
+    here), and the dominant term.
+
+Hardware model (brief-mandated): TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (we charge the whole collective byte count against one
+link's bandwidth: a conservative single-bottleneck-link model).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s per link
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def model_flops_per_device(rec: Dict) -> Optional[float]:
+    """Analytic 6*N(_active)*D for the cell, divided over chips."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.configs import ARCH_IDS, get_arch
+    from repro.configs.base import GNNArch, LMArch, RecsysArch
+
+    n_chips = 1
+    for v in rec["mesh_shape"].values():
+        n_chips *= v
+    arch_id = rec["arch"]
+    if arch_id == "vectordb-wiki":
+        # search: phase1 ~ 2*Q*N*C (int8 compare+acc ~ 2 ops) + rerank 2*Q*page*n
+        from repro.configs.vectordb_wiki import N_DOCS, N_FEATURES
+        if rec["kind"] == "encode":
+            return 3.0 * N_DOCS * N_FEATURES / n_chips
+        q = 128 if "b128" in rec["shape"] else 1
+        return (2.0 * q * N_DOCS * N_FEATURES + 2.0 * q * 320 * N_FEATURES) / n_chips
+    try:
+        arch = get_arch(arch_id)
+    except KeyError:
+        return None
+    if isinstance(arch, LMArch):
+        cfg = arch.cfg
+        info = LMArch.SHAPES[rec["shape"]]
+        if rec["kind"] == "train":
+            tokens = info["batch"] * info["seq"]
+            fl = 6.0 * cfg.active_param_count() * tokens
+        elif rec["kind"] == "prefill":
+            tokens = info["batch"] * info["seq"]
+            fl = 2.0 * cfg.active_param_count() * tokens
+        else:  # decode: one token per sequence
+            fl = 2.0 * cfg.active_param_count() * info["batch"]
+        return fl / n_chips
+    if isinstance(arch, GNNArch):
+        info = GNNArch.SHAPES[rec["shape"]]
+        cfg = arch.cfg_for(rec["shape"])
+        # per GIN layer: MLP 2*(d_in*2h + 2h*h) per node (x3 for train) + edges
+        n = info.get("nodes", 0) * info.get("batch", 1)
+        e = info.get("edges", 0) * info.get("batch", 1)
+        h = cfg.d_hidden
+        per_node = 0
+        d = cfg.d_in
+        for i in range(cfg.n_layers):
+            per_node += 2 * (d * 2 * h + 2 * h * h)
+            d = h
+        fl = 3.0 * (n * per_node + e * h * 2)      # fwd+bwd ~ 3x fwd
+        return fl / n_chips
+    if isinstance(arch, RecsysArch):
+        info = RecsysArch.SHAPES[rec["shape"]]
+        b = info["batch"]
+        c = arch.cfg
+        name = c.name
+        if name == "xdeepfm":
+            m, D = c.n_sparse, c.embed_dim
+            cin = 0
+            hp = m
+            for hk in c.cin_layers:
+                cin += 2 * hp * m * D + 2 * hp * m * hk * D
+                hp = hk
+            mlp = 2 * (m * D + c.n_dense) * c.mlp[0] + 2 * c.mlp[0] * c.mlp[1]
+            fl = b * (cin + mlp)
+        elif name == "autoint":
+            m, D, H, dk = c.n_sparse, c.embed_dim, c.n_heads, c.d_attn
+            att = 3 * 2 * m * D * H * dk + 2 * m * m * H * dk * 2 + 2 * m * D * H * dk
+            fl = b * att * c.n_attn_layers
+        elif name == "din":
+            D, L = c.embed_dim, c.seq_len
+            att = 2 * L * 4 * D * c.attn_mlp[0] + 2 * L * c.attn_mlp[0] * c.attn_mlp[1]
+            mlp = 2 * (2 * D + c.n_dense) * c.mlp[0] + 2 * c.mlp[0] * c.mlp[1]
+            fl = b * (att + mlp)
+        else:  # bst
+            D, L = c.embed_dim, c.seq_len + 1
+            att = 4 * 2 * L * D * D + 4 * L * L * D + 8 * L * D * D
+            mlp = 2 * (L * D + c.n_dense) * c.mlp[0] + \
+                2 * c.mlp[0] * c.mlp[1] + 2 * c.mlp[1] * c.mlp[2]
+            fl = b * (att * c.n_blocks + mlp)
+        if info["kind"] == "train":
+            fl *= 3.0
+        if info["kind"] == "retrieval":
+            from repro.configs.base import RecsysArch as RA
+            fl = 2.0 * info["n_cand"] * c.embed_dim * (1 + b)
+        return fl / n_chips
+    return None
+
+
+def load_records(mesh: str = "single_16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, mesh, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: Dict) -> Dict:
+    t_comp = rec["flops_per_device"] / PEAK_FLOPS
+    t_mem = rec["bytes_per_device"] / HBM_BW
+    t_coll = rec["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    useful = (mf / rec["flops_per_device"]) if (mf and rec["flops_per_device"]) else None
+    bound = max(terms.values())
+    mem = rec.get("memory_analysis") or {}
+    hbm_gib = None
+    if mem.get("temp_size_in_bytes") is not None:
+        hbm_gib = (mem["temp_size_in_bytes"] + (mem.get("argument_size_in_bytes") or 0)) / 2**30
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "bound_s": bound, "dominant": dom,
+        "model_flops_per_device": mf, "useful_fraction": useful,
+        "hbm_gib": hbm_gib,
+    }
+
+
+def main():
+    for mesh in ["single_16x16", "multi_2x16x16"]:
+        recs = load_records(mesh)
+        if not recs:
+            continue
+        print(f"\n== roofline ({mesh}) ==")
+        print(f"{'arch':28s} {'shape':15s} {'compute_s':>10s} {'memory_s':>10s} "
+              f"{'coll_s':>10s} {'dom':>10s} {'useful':>7s} {'HBM_GiB':>8s}")
+        for rec in recs:
+            row = roofline_row(rec)
+            uf = f"{row['useful_fraction']:.3f}" if row["useful_fraction"] else "   -"
+            hbm = f"{row['hbm_gib']:.1f}" if row["hbm_gib"] is not None else "-"
+            print(f"{row['arch']:28s} {row['shape']:15s} {row['t_compute_s']:10.3e} "
+                  f"{row['t_memory_s']:10.3e} {row['t_collective_s']:10.3e} "
+                  f"{row['dominant']:>10s} {uf:>7s} {hbm:>8s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark aggregator: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default is the quick grid (CPU-friendly); --full runs the complete paper
+grids.  Prints ``name,us_per_call,derived`` CSV lines per the scaffold
+contract, then the roofline summary from the dry-run artifacts.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    quick = not full
+    from . import (complexity_probe, fig1_page_sweep, fig2_tradeoff, roofline,
+                   table2_quality, table3_speed, table4_mlt)
+
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    rows2 = table2_quality.run(quick=quick)
+    best = max(r["avg_p10"] for r in rows2 if r["system"] == "encoded")
+    mlt = max((r["avg_p10"] for r in rows2 if r["system"] == "MLT"), default=0)
+    print(f"table2_quality,{(time.perf_counter()-t0)*1e6:.0f},"
+          f"best_avg_p10={best:.4f};mlt_avg_p10={mlt:.4f}")
+
+    t0 = time.perf_counter()
+    rows3 = table3_speed.run(quick=quick)
+    fastest = min(r["per_query_s"] for r in rows3)
+    print(f"table3_speed,{(time.perf_counter()-t0)*1e6:.0f},"
+          f"fastest_per_query_s={fastest:.5f}")
+
+    t0 = time.perf_counter()
+    rows4 = table4_mlt.run(quick=quick)
+    print(f"table4_mlt,{(time.perf_counter()-t0)*1e6:.0f},"
+          f"mlt25_per_query_s={rows4[0]['per_query_s']:.5f}")
+
+    t0 = time.perf_counter()
+    rows_f1 = fig1_page_sweep.run(quick=quick)
+    print(f"fig1_page_sweep,{(time.perf_counter()-t0)*1e6:.0f},rows={len(rows_f1)}")
+
+    t0 = time.perf_counter()
+    rows_f2 = fig2_tradeoff.run(quick=quick)
+    print(f"fig2_tradeoff,{(time.perf_counter()-t0)*1e6:.0f},rows={len(rows_f2)}")
+
+    t0 = time.perf_counter()
+    rows_cp = complexity_probe.run(quick=quick)
+    print(f"complexity_probe,{(time.perf_counter()-t0)*1e6:.0f},rows={len(rows_cp)}")
+
+    t0 = time.perf_counter()
+    roofline.main()
+    print(f"roofline,{(time.perf_counter()-t0)*1e6:.0f},see_EXPERIMENTS_md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Paper Table 2: quality grid -- trim x best x page -> P@10 / nDCG10 / avg.diff,
+plus the MLT baseline rows (max_query_terms sweep).
+
+Usage: PYTHONPATH=src python -m benchmarks.table2_quality [--quick]
+Writes artifacts/table2_quality.csv; prints the table.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (BestFilter, MLTIndex, TrimFilter, avg_diff, ndcg_k,
+                        precision_at_k)
+
+from .common import ART, fixture
+
+
+def run(quick: bool = False):
+    fx = fixture()
+    idx, Q = fx.index, fx.queries
+    gold_ids, gold_sims = fx.gold_ids, fx.gold_sims
+
+    trims = [0.0, 0.05, 0.1]
+    bests = [17, 40, 90, None]          # None = all features
+    pages = [10, 20, 40, 80, 160, 320, 640]
+    if quick:
+        trims, bests, pages = [0.0, 0.05], [40, None], [20, 160, 640]
+
+    rows = []
+    for trim in trims:
+        for best in bests:
+            for page in pages:
+                ids, sims = idx.search(
+                    Q, k=10, page=page,
+                    trim=TrimFilter(trim) if trim else None,
+                    best=BestFilter(best) if best else None,
+                    engine="codes",
+                )
+                p = precision_at_k(ids, gold_ids)
+                rows.append({
+                    "system": "encoded", "trim": trim,
+                    "best": best if best else "all", "page": page,
+                    "min_p10": float(p.min()), "avg_p10": float(p.mean()),
+                    "max_p10": float(p.max()),
+                    "ndcg10": float(ndcg_k(sims, gold_sims).mean()),
+                    "avg_diff": float(avg_diff(sims, gold_sims).mean()),
+                })
+
+    # MLT baseline (paper: max_query_terms in the 'best' column, page=10)
+    mlt = MLTIndex.build(jnp.asarray(fx.doc_terms), jnp.asarray(fx.doc_tf),
+                         fx.vocab_size)
+    qt = jnp.asarray(fx.doc_terms[fx.query_ids])
+    qtf = jnp.asarray(fx.doc_tf[fx.query_ids])
+    V = np.asarray(idx.vectors)
+    qn = np.asarray(fx.queries)
+    for mqt in ([25] if quick else [17, 25, 40, 90, 400]):
+        ids, _ = mlt.more_like_this(qt, qtf, max_query_terms=mqt, k=10)
+        sims = jnp.asarray(np.take_along_axis(qn @ V.T, np.asarray(ids), axis=1))
+        p = precision_at_k(ids, gold_ids)
+        rows.append({
+            "system": "MLT", "trim": "-", "best": mqt, "page": 10,
+            "min_p10": float(p.min()), "avg_p10": float(p.mean()),
+            "max_p10": float(p.max()),
+            "ndcg10": float(ndcg_k(sims, gold_sims).mean()),
+            "avg_diff": float(avg_diff(sims, gold_sims).mean()),
+        })
+
+    import csv, os
+    path = os.path.join(ART, "table2_quality.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+    hdr = f"{'system':8s} {'trim':>5s} {'best':>5s} {'page':>5s} {'avgP@10':>8s} {'nDCG10':>7s} {'avg.diff':>9s}"
+    print(hdr)
+    for r in rows:
+        print(f"{r['system']:8s} {str(r['trim']):>5s} {str(r['best']):>5s} "
+              f"{r['page']:>5d} {r['avg_p10']:8.4f} {r['ndcg10']:7.4f} {r['avg_diff']:9.5f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

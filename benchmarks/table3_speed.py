@@ -1,0 +1,65 @@
+"""Paper Table 3: speed grid -- engine x trim x page x query-batch.
+
+The paper's 'parallel queries 1/4/16' maps to the query batch dimension
+(DESIGN.md §2); 'ES took' maps to the jitted search step time;
+'Vec. size avg/std' = features surviving the trim, exactly as in the paper.
+
+Usage: PYTHONPATH=src python -m benchmarks.table3_speed [--quick]
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import TrimFilter
+
+from .common import ART, fixture, timed
+
+
+def run(quick: bool = False):
+    fx = fixture()
+    idx = fx.index
+
+    engines = ["codes", "postings"]
+    trims = [0.0, 0.05, 0.1]
+    pages = [20, 80, 320]
+    batches = [1, 4, 16]
+    if quick:
+        engines, trims, pages, batches = ["codes"], [0.0, 0.1], [20, 320], [4]
+
+    rows = []
+    for engine in engines:
+        for nb in batches:
+            Q = fx.queries[:nb]
+            for trim in trims:
+                tf = TrimFilter(trim) if trim else None
+                _, _, w = idx.encode_queries(Q, tf, None, "idf")
+                sizes = np.asarray((w > 0).sum(-1), np.float64)
+                for page in pages:
+                    fn = lambda: idx.search(Q, k=10, page=page, trim=tf,
+                                            engine=engine,
+                                            max_postings=4096 if engine == "postings" else None)
+                    _, secs = timed(fn, repeats=2 if quick else 3)
+                    rows.append({
+                        "engine": engine, "parallel_q": nb, "trim": trim,
+                        "page": page, "step_avg_s": secs,
+                        "per_query_s": secs / nb,
+                        "vec_size_avg": float(sizes.mean()),
+                        "vec_size_std": float(sizes.std()),
+                    })
+                    print(f"{engine:9s} q={nb:<3d} trim={trim:<5.2f} page={page:<4d} "
+                          f"step={secs*1e3:8.2f}ms per_q={secs/nb*1e3:8.2f}ms "
+                          f"vec={sizes.mean():6.1f}±{sizes.std():4.1f}")
+
+    import csv, os
+    with open(os.path.join(ART, "table3_speed.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

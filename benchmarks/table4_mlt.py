@@ -1,0 +1,43 @@
+"""Paper Table 4: native MLT search speed vs max_query_terms.
+
+Usage: PYTHONPATH=src python -m benchmarks.table4_mlt [--quick]
+"""
+
+from __future__ import annotations
+
+import sys
+
+import jax.numpy as jnp
+
+from repro.core import MLTIndex
+
+from .common import ART, fixture, timed
+
+
+def run(quick: bool = False):
+    fx = fixture()
+    mlt = MLTIndex.build(jnp.asarray(fx.doc_terms), jnp.asarray(fx.doc_tf),
+                         fx.vocab_size)
+    nq = 16
+    qt = jnp.asarray(fx.doc_terms[fx.query_ids[:nq]])
+    qtf = jnp.asarray(fx.doc_tf[fx.query_ids[:nq]])
+
+    rows = []
+    for mqt in ([25, 90] if quick else [17, 25, 40, 90, 400]):
+        mqt_eff = min(mqt, qt.shape[1])
+        fn = lambda: mlt.more_like_this(qt, qtf, max_query_terms=mqt_eff, k=10)
+        _, secs = timed(fn, repeats=2 if quick else 3)
+        rows.append({"max_query_terms": mqt, "step_s": secs,
+                     "per_query_s": secs / nq})
+        print(f"MLT mqt={mqt:<4d} step={secs*1e3:8.2f}ms per_q={secs/nq*1e3:7.2f}ms")
+
+    import csv, os
+    with open(os.path.join(ART, "table4_mlt.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

@@ -1,0 +1,402 @@
+"""Config layer: per-family cell builders for the multi-pod dry-run.
+
+Every assigned architecture exposes, per input shape, one ``Cell``:
+the jittable step function, abstract args (ShapeDtypeStructs -- nothing is
+allocated), and in/out PartitionSpec trees for the production mesh.  The
+dry-run (launch/dryrun.py) lowers+compiles each cell on the 16x16 and
+2x16x16 meshes; smoke tests instantiate ``smoke()`` reduced configs with
+real arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.sharding import (
+    MODEL_AXIS,
+    batch_axes,
+    generic_param_spec,
+    lm_param_spec,
+    opt_state_spec,
+    tree_specs,
+)
+from repro.models.gnn import gin
+from repro.models.recsys import models as rs
+from repro.models.transformer import model as lm
+from repro.train.grad import make_train_step
+from repro.train.optimizer import (
+    AdafactorState,
+    AdamWConfig,
+    AdamWState,
+    adafactor_init,
+    adamw_init,
+)
+
+SDS = jax.ShapeDtypeStruct
+
+METRIC_SPECS = {"loss": P(), "grad_norm": P(), "lr_scale": P()}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                    # train | prefill | decode | serve | retrieval
+    fn: Callable
+    args: Tuple
+    in_specs: Tuple
+    out_specs: Any               # None -> compiler-chosen
+    note: str = ""
+
+
+def _key_sds():
+    return SDS((2,), jnp.uint32)
+
+
+def _bspec(mesh: Mesh, sds, batch_dim: int = 0) -> P:
+    """Shard the batch dim over the data axes iff it divides evenly."""
+    bd = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in bd]))
+    parts = [None] * len(sds.shape)
+    if sds.shape and sds.shape[batch_dim] % n == 0 and sds.shape[batch_dim] >= n:
+        parts[batch_dim] = bd
+    return P(*parts)
+
+
+def _batch_specs(mesh, batch):
+    return jax.tree.map(lambda s: _bspec(mesh, s), batch)
+
+
+# ===================================================================== LM
+class LMArch:
+    family = "lm"
+    SHAPES = {
+        # accum=8: microbatched grad accumulation keeps the (B, S, V) logits
+        # tensor at 1/8 size (the full-batch logits alone would be ~1 TB/dev
+        # for 150k-vocab archs; found via dry-run memory_analysis)
+        "train_4k": dict(kind="train", seq=4096, batch=256, accum=8),
+        "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+        "decode_32k": dict(kind="decode", seq=32768, batch=128),
+        "long_500k": dict(kind="decode", seq=524288, batch=1, seq_sharded=True),
+    }
+
+    def __init__(self, cfg: lm.LMConfig, optimizer: str = "adamw",
+                 skip_shapes: Tuple[str, ...] = (), smoke_cfg=None,
+                 accum: Optional[int] = None):
+        self.cfg = cfg
+        self.optimizer = optimizer
+        self.skip_shapes = skip_shapes
+        self._smoke = smoke_cfg
+        self.accum = accum              # override SHAPES accum (MoE memory)
+
+    # ---------------------------------------------------------- abstractions
+    def params_abstract(self):
+        return jax.eval_shape(lambda k: lm.init_params(k, self.cfg), _key_sds())
+
+    def opt_abstract(self, params_abs):
+        init = adamw_init if self.optimizer == "adamw" else adafactor_init
+        return jax.eval_shape(init, params_abs)
+
+    def param_specs(self, mesh, params_abs):
+        return tree_specs(params_abs, mesh, lm_param_spec)
+
+    def opt_specs(self, mesh, params_abs):
+        pspecs = self.param_specs(mesh, params_abs)
+        if self.optimizer == "adamw":
+            return AdamWState(step=P(), mu=pspecs, nu=pspecs)
+        vr = jax.tree.map(
+            lambda sp, pa: opt_state_spec(sp, len(pa.shape), "vr") if len(pa.shape) >= 2 else P(),
+            pspecs, params_abs)
+        vc = jax.tree.map(
+            lambda sp, pa: opt_state_spec(sp, len(pa.shape), "vc") if len(pa.shape) >= 2 else P(),
+            pspecs, params_abs)
+        v = jax.tree.map(lambda sp, pa: P() if len(pa.shape) >= 2 else sp,
+                         pspecs, params_abs)
+        return AdafactorState(step=P(), vr=vr, vc=vc, v=v)
+
+    def _cache_abstract(self, cfg, batch, seq):
+        return jax.eval_shape(lambda: lm.init_cache(cfg, batch, seq))
+
+    def _cache_specs(self, mesh, cfg, batch, seq, seq_sharded: bool):
+        ms = mesh.shape[MODEL_AXIS]
+        bd = batch_axes(mesh)
+        ndata = int(np.prod([mesh.shape[a] for a in bd]))
+
+        def kv_spec(leaf):
+            # (L, B, S_c, KV, dh)
+            L, B, S_c, KV, dh = leaf.shape
+            model_dim = 3 if KV % ms == 0 and KV >= ms else (4 if dh % ms == 0 else None)
+            parts: list = [None] * 5
+            if model_dim is not None:
+                parts[model_dim] = MODEL_AXIS
+            if seq_sharded:
+                if S_c % ndata == 0:
+                    parts[2] = bd
+            elif B % ndata == 0 and B >= ndata:
+                parts[1] = bd
+            return P(*parts)
+
+        cache_abs = self._cache_abstract(cfg, batch, seq)
+        return jax.tree.map(
+            lambda leaf: kv_spec(leaf) if leaf.ndim == 5 else P(), cache_abs
+        )
+
+    # ----------------------------------------------------------------- cells
+    def cell(self, shape_name: str, mesh: Mesh) -> Optional[Cell]:
+        if shape_name in self.skip_shapes:
+            return None
+        info = self.SHAPES[shape_name]
+        cfg = self.cfg
+        params_abs = self.params_abstract()
+        pspecs = self.param_specs(mesh, params_abs)
+        name = cfg.name
+
+        if info["kind"] == "train":
+            opt_abs = self.opt_abstract(params_abs)
+            ospecs = self.opt_specs(mesh, params_abs)
+            loss = functools.partial(_lm_loss_cfg, cfg=cfg)
+            accum = self.accum or info.get("accum", 1)
+            step = make_train_step(loss, AdamWConfig(), accum=accum,
+                                   optimizer=self.optimizer)
+            batch = {
+                "tokens": SDS((info["batch"], info["seq"]), jnp.int32),
+                "labels": SDS((info["batch"], info["seq"]), jnp.int32),
+            }
+            return Cell(
+                arch=name, shape=shape_name, kind="train", fn=step,
+                args=(params_abs, opt_abs, batch),
+                in_specs=(pspecs, ospecs, _batch_specs(mesh, batch)),
+                out_specs=(pspecs, ospecs, METRIC_SPECS),
+            )
+
+        if info["kind"] == "prefill":
+            fn = functools.partial(_lm_prefill_cfg, cfg=cfg, max_seq=info["seq"])
+            toks = SDS((info["batch"], info["seq"]), jnp.int32)
+            cache_specs = self._cache_specs(mesh, cfg, info["batch"], info["seq"], False)
+            logits_spec = P(batch_axes(mesh), None,
+                            MODEL_AXIS if cfg.vocab % mesh.shape[MODEL_AXIS] == 0 else None)
+            return Cell(
+                arch=name, shape=shape_name, kind="prefill", fn=fn,
+                args=(params_abs, toks),
+                in_specs=(pspecs, _bspec(mesh, toks)),
+                out_specs=(logits_spec, cache_specs),
+            )
+
+        # decode
+        seq_sharded = info.get("seq_sharded", False)
+        dcfg = dataclasses.replace(cfg, cache_update="masked") if seq_sharded else cfg
+        fn = functools.partial(_lm_decode_cfg, cfg=dcfg)
+        cache_abs = self._cache_abstract(dcfg, info["batch"], info["seq"])
+        cache_specs = self._cache_specs(mesh, dcfg, info["batch"], info["seq"], seq_sharded)
+        toks = SDS((info["batch"], 1), jnp.int32)
+        pos = SDS((), jnp.int32)
+        logits_spec = P(
+            batch_axes(mesh) if not seq_sharded else None, None,
+            MODEL_AXIS if cfg.vocab % mesh.shape[MODEL_AXIS] == 0 else None)
+        return Cell(
+            arch=name, shape=shape_name, kind="decode", fn=fn,
+            args=(params_abs, cache_abs, toks, pos),
+            in_specs=(pspecs, cache_specs, _bspec(mesh, toks), P()),
+            out_specs=(logits_spec, cache_specs),
+            note="seq-sharded masked-ring cache" if seq_sharded else "",
+        )
+
+    def smoke(self):
+        return self._smoke
+
+
+def _lm_loss_cfg(params, batch, cfg):
+    return lm.lm_loss(params, batch, cfg)
+
+
+def _lm_prefill_cfg(params, tokens, cfg, max_seq):
+    return lm.prefill(params, tokens, cfg, max_seq)
+
+
+def _lm_decode_cfg(params, cache, tokens, cur_pos, cfg):
+    return lm.serve_step(params, cache, tokens, cur_pos, cfg)
+
+
+# ===================================================================== GNN
+def _pad512(n: int) -> int:
+    return ((n + 511) // 512) * 512
+
+
+class GNNArch:
+    family = "gnn"
+    # (d_feat, n_classes, nodes, edges) per shape; padded to /512 so the
+    # fixed meshes shard evenly (pads are masked: -1 edges, 0 label_mask).
+    SHAPES = {
+        "full_graph_sm": dict(kind="train", mode="node", d_in=1433, classes=7,
+                              nodes=_pad512(2708), edges=_pad512(10556)),
+        "minibatch_lg": dict(kind="train", mode="node", d_in=602, classes=41,
+                             nodes=_pad512(1024 + 1024 * 15 + 1024 * 150),
+                             edges=_pad512(1024 * 15 + 1024 * 150)),
+        "ogb_products": dict(kind="train", mode="node", d_in=100, classes=47,
+                             nodes=_pad512(2_449_029), edges=_pad512(61_859_140)),
+        "molecule": dict(kind="train", mode="graph", d_in=16, classes=2,
+                         batch=128, nodes=30, edges=64),
+    }
+
+    def __init__(self, base_cfg: gin.GINConfig):
+        self.base_cfg = base_cfg
+
+    def cfg_for(self, shape_name: str) -> gin.GINConfig:
+        info = self.SHAPES[shape_name]
+        return dataclasses.replace(
+            self.base_cfg, d_in=info["d_in"], n_classes=info["classes"]
+        )
+
+    def cell(self, shape_name: str, mesh: Mesh) -> Cell:
+        info = self.SHAPES[shape_name]
+        cfg = self.cfg_for(shape_name)
+        params_abs = jax.eval_shape(lambda k: gin.init_params(k, cfg), _key_sds())
+        pspecs = tree_specs(params_abs, mesh, generic_param_spec)
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        ospecs = AdamWState(step=P(), mu=pspecs, nu=pspecs)
+
+        if info["mode"] == "node":
+            loss = functools.partial(_gnn_node_loss, cfg=cfg)
+            N, E = info["nodes"], info["edges"]
+            batch = {
+                "x": SDS((N, info["d_in"]), jnp.float32),
+                "edge_src": SDS((E,), jnp.int32),
+                "edge_dst": SDS((E,), jnp.int32),
+                "labels": SDS((N,), jnp.int32),
+                "label_mask": SDS((N,), jnp.float32),
+            }
+        else:
+            loss = functools.partial(_gnn_graph_loss, cfg=cfg)
+            B, N, E = info["batch"], info["nodes"], info["edges"]
+            batch = {
+                "x": SDS((B, N, info["d_in"]), jnp.float32),
+                "edge_src": SDS((B, E), jnp.int32),
+                "edge_dst": SDS((B, E), jnp.int32),
+                "node_mask": SDS((B, N), jnp.float32),
+                "labels": SDS((B,), jnp.int32),
+            }
+        step = make_train_step(loss, AdamWConfig())
+        return Cell(
+            arch=self.base_cfg.name, shape=shape_name, kind="train", fn=step,
+            args=(params_abs, opt_abs, batch),
+            in_specs=(pspecs, ospecs, _batch_specs(mesh, batch)),
+            out_specs=(pspecs, ospecs, METRIC_SPECS),
+            note="nodes/edges padded to x512 (masked)",
+        )
+
+
+def _gnn_node_loss(params, batch, cfg):
+    return gin.node_loss(params, batch, cfg)
+
+
+def _gnn_graph_loss(params, batch, cfg):
+    return gin.graph_loss(params, batch, cfg)
+
+
+# =================================================================== RecSys
+class RecsysArch:
+    family = "recsys"
+    SHAPES = {
+        "train_batch": dict(kind="train", batch=65536),
+        "serve_p99": dict(kind="serve", batch=512),
+        "serve_bulk": dict(kind="serve", batch=262144),
+        "retrieval_cand": dict(kind="retrieval", batch=1, n_cand=1_000_000),
+    }
+
+    def __init__(self, cfg, init_fn, forward_fn, user_fn, seq: bool):
+        self.cfg = cfg
+        self.init_fn = init_fn
+        self.forward_fn = forward_fn
+        self.user_fn = user_fn
+        self.seq = seq                      # DIN/BST style history batches
+
+    def _batch_sds(self, B: int):
+        c = self.cfg
+        if self.seq:
+            return {
+                "hist_ids": SDS((B, c.seq_len), jnp.int32),
+                "hist_mask": SDS((B, c.seq_len), jnp.float32),
+                "target_id": SDS((B,), jnp.int32),
+                "dense": SDS((B, c.n_dense), jnp.float32),
+                "label": SDS((B,), jnp.float32),
+            }
+        return {
+            "sparse_ids": SDS((B, c.n_sparse), jnp.int32),
+            "dense": SDS((B, c.n_dense), jnp.float32),
+            "label": SDS((B,), jnp.float32),
+        }
+
+    def cell(self, shape_name: str, mesh: Mesh) -> Cell:
+        info = self.SHAPES[shape_name]
+        cfg = self.cfg
+        params_abs = jax.eval_shape(lambda k: self.init_fn(k, cfg), _key_sds())
+        pspecs = tree_specs(params_abs, mesh, generic_param_spec)
+        name = cfg.name
+
+        if info["kind"] == "train":
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            ospecs = AdamWState(step=P(), mu=pspecs, nu=pspecs)
+            loss = functools.partial(_rs_loss, fwd=self.forward_fn, cfg=cfg)
+            step = make_train_step(loss, AdamWConfig())
+            batch = self._batch_sds(info["batch"])
+            return Cell(
+                arch=name, shape=shape_name, kind="train", fn=step,
+                args=(params_abs, opt_abs, batch),
+                in_specs=(pspecs, ospecs, _batch_specs(mesh, batch)),
+                out_specs=(pspecs, ospecs, METRIC_SPECS),
+            )
+
+        if info["kind"] == "serve":
+            fn = functools.partial(_rs_forward, fwd=self.forward_fn, cfg=cfg)
+            batch = self._batch_sds(info["batch"])
+            return Cell(
+                arch=name, shape=shape_name, kind="serve", fn=fn,
+                args=(params_abs, batch),
+                in_specs=(pspecs, _batch_specs(mesh, batch)),
+                out_specs=_bspec(mesh, SDS((info["batch"],), jnp.float32)),
+            )
+
+        # retrieval: the paper's two-phase search over candidate embeddings
+        from repro.serve.retrieval import retrieval_step
+        from repro.core.encoding import RoundingEncoder
+
+        D = cfg.embed_dim
+        enc = RoundingEncoder(2)
+        fn = functools.partial(
+            _rs_retrieval, user_fn=self.user_fn, cfg=cfg, encoder=enc
+        )
+        batch = self._batch_sds(info["batch"])
+        N = info["n_cand"]
+        cand_vecs = SDS((N, D), jnp.float32)
+        cand_codes = SDS((N, D), jnp.dtype(enc.code_dtype))
+        return Cell(
+            arch=name, shape=shape_name, kind="retrieval", fn=fn,
+            args=(params_abs, batch, cand_vecs, cand_codes),
+            in_specs=(pspecs, _batch_specs(mesh, batch),
+                      _bspec(mesh, cand_vecs), _bspec(mesh, cand_codes)),
+            out_specs=(P(), P()),
+            note="paper-integrated two-phase retrieval",
+        )
+
+
+def _rs_loss(params, batch, fwd, cfg):
+    return rs.bce_loss(fwd, params, batch, cfg)
+
+
+def _rs_forward(params, batch, fwd, cfg):
+    return fwd(params, batch, cfg)
+
+
+def _rs_retrieval(params, batch, cand_vecs, cand_codes, user_fn, cfg, encoder):
+    from repro.serve.retrieval import retrieval_step
+
+    u = user_fn(params, batch, cfg)
+    return retrieval_step(u, cand_vecs, cand_codes, encoder=encoder,
+                          page=512, k=100, trim_threshold=0.05)

@@ -1,0 +1,81 @@
+"""The paper's own system as a dry-runnable arch: English-Wikipedia-scale
+semantic search (4,181,352 articles -- padded to 4,181,504 = 8167 x 512 --
+x LSA-400, unit-normalised), rounding-P2 int8 codes, trim 0.05, page 320.
+
+Cells (extra, beyond the 40 assigned):
+* ``search_b128`` -- throughput shape: 128 queries, two-phase search
+* ``search_b1``   -- latency shape: 1 query
+* ``encode_4m``   -- index build: fused normalize+quantize of the corpus
+
+Docs shard over ("pod","data") -- the analogue of the paper's 48 ES shards;
+features/codes columns stay unsharded (400 is awkward /16; the hillclimb in
+EXPERIMENTS.md §Perf evaluates a "model"-axis code-column split instead).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Cell, SDS, _bspec, batch_axes
+from repro.core.encoding import RoundingEncoder
+from repro.core.filtering import TrimFilter, expand_mask, feature_mask
+from repro.core.codes import score_codes
+from repro.core.rerank import normalize, rerank_topk
+
+N_DOCS = 4_181_504          # 4,181,352 padded to x512
+N_FEATURES = 400
+ENCODER = RoundingEncoder(2)
+
+
+def _search(doc_vecs, doc_codes, queries, page: int, k: int, trim: float):
+    q = normalize(queries.astype(jnp.float32))
+    qcodes = ENCODER.encode(q)
+    mask = expand_mask(feature_mask(q, trim=TrimFilter(trim)), qcodes.shape[-1])
+    w = jnp.where(mask, 1.0, 0.0)
+    scores1 = score_codes(doc_codes, qcodes, w, block=131072)
+    _, cand = jax.lax.top_k(scores1, page)
+    return rerank_topk(doc_vecs, cand, q, k)
+
+
+def _encode(vectors):
+    from repro.kernels.bucketize.ref import bucketize_ref
+    return bucketize_ref(vectors, "round", float(ENCODER.scale),
+                         jnp.dtype(ENCODER.code_dtype))
+
+
+class VectorDBArch:
+    family = "vectordb"
+    SHAPES = {
+        "search_b128": dict(kind="search", queries=128, page=320),
+        "search_b1": dict(kind="search", queries=1, page=320),
+        "encode_4m": dict(kind="encode"),
+    }
+    skip_shapes = ()
+
+    def cell(self, shape_name: str, mesh) -> Cell:
+        info = self.SHAPES[shape_name]
+        vecs = SDS((N_DOCS, N_FEATURES), jnp.float32)
+        codes = SDS((N_DOCS, N_FEATURES), jnp.dtype(ENCODER.code_dtype))
+        if info["kind"] == "encode":
+            return Cell(
+                arch="vectordb-wiki", shape=shape_name, kind="encode",
+                fn=_encode, args=(vecs,),
+                in_specs=(_bspec(mesh, vecs),),
+                out_specs=_bspec(mesh, codes),
+            )
+        fn = functools.partial(_search, page=info["page"], k=10, trim=0.05)
+        qs = SDS((info["queries"], N_FEATURES), jnp.float32)
+        return Cell(
+            arch="vectordb-wiki", shape=shape_name, kind="search",
+            fn=fn, args=(vecs, codes, qs),
+            in_specs=(_bspec(mesh, vecs), _bspec(mesh, codes), P()),
+            out_specs=(P(), P()),
+            note="paper system: trim=0.05, page=320, P2 int8 codes",
+        )
+
+
+ARCH = VectorDBArch()

@@ -1,0 +1,93 @@
+"""TPU-native phase-1 engines over the integer code matrix (beyond-paper).
+
+Identity this rests on (see DESIGN.md §2): a feature-token match is exactly a
+per-column bucket equality, so the paper's inverted-index score is
+
+    score(q, d) = sum_j  w[q, j] * [qcodes[q, j] == doc_codes[d, j]]
+
+Two lowerings:
+
+* ``codes``  -- stream the (d, C) int8/int16 code matrix block-by-block and
+  compare against the (trimmed) query codes.  Regular memory access, no
+  gathers; the Pallas kernel :mod:`repro.kernels.code_match` is the TPU fast
+  path, this module's ``score_codes`` is the jnp reference/CPU path.
+* ``onehot`` -- expand codes into a {0,1} int8 matrix over the
+  (column x bucket) token vocabulary and lower phase 1 to an actual MXU
+  matmul ``Q1 @ D1.T``.  This is literally the CSC/inverted-index identity:
+  D1's columns ARE the posting lists.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["score_codes", "score_onehot", "onehot_expand"]
+
+
+def _pad_rows(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    d = x.shape[0]
+    pad = (-d) % multiple
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+
+
+@partial(jax.jit, static_argnames=("block",))
+def score_codes(
+    doc_codes: jnp.ndarray,   # (d, C) int
+    qcodes: jnp.ndarray,      # (Q, C) int
+    col_weights: jnp.ndarray,  # (Q, C) f32 -- 0 where the query token is filtered
+    block: int = 2048,
+) -> jnp.ndarray:
+    """Masked quantized-Hamming scores (Q, d), blocked over documents."""
+    d, C = doc_codes.shape
+    padded = _pad_rows(doc_codes, block)
+    nb = padded.shape[0] // block
+    blocks = padded.reshape(nb, block, C)
+
+    def body(_, blk):
+        eq = (qcodes[:, None, :] == blk[None, :, :]).astype(jnp.int8)  # (Q, blk, C)
+        s = jnp.einsum(
+            "qbc,qc->qb", eq, col_weights, preferred_element_type=jnp.float32
+        )
+        return _, s
+
+    _, out = jax.lax.scan(body, None, blocks)        # (nb, Q, block)
+    out = jnp.moveaxis(out, 1, 0).reshape(qcodes.shape[0], nb * block)
+    return out[:, :d]
+
+
+def onehot_expand(codes: jnp.ndarray, max_abs_bucket: int) -> jnp.ndarray:
+    """(d, C) int codes -> (d, C * B) int8 one-hot token matrix.
+
+    B = 2 * max_abs_bucket + 1 buckets per column; out-of-range codes clip to
+    the boundary buckets (unit-normalised vectors never hit the clip).
+    """
+    B = 2 * max_abs_bucket + 1
+    idx = jnp.clip(codes.astype(jnp.int32) + max_abs_bucket, 0, B - 1)  # (d, C)
+    oh = jax.nn.one_hot(idx, B, dtype=jnp.int8)                          # (d, C, B)
+    return oh.reshape(codes.shape[0], -1)
+
+
+@partial(jax.jit, static_argnames=("max_abs_bucket",))
+def score_onehot(
+    doc_codes: jnp.ndarray,    # (d, C) int
+    qcodes: jnp.ndarray,       # (Q, C) int
+    col_weights: jnp.ndarray,  # (Q, C) f32
+    max_abs_bucket: int,
+) -> jnp.ndarray:
+    """Phase-1 scores as an MXU matmul over the one-hot token vocabulary."""
+    B = 2 * max_abs_bucket + 1
+    D1 = onehot_expand(doc_codes, max_abs_bucket)             # (d, C*B) int8
+    Q1 = onehot_expand(qcodes, max_abs_bucket).astype(jnp.float32)
+    Q1 = Q1.reshape(qcodes.shape[0], qcodes.shape[1], B) * col_weights[..., None]
+    Q1 = Q1.reshape(qcodes.shape[0], -1)                      # (Q, C*B) f32
+    return jax.lax.dot_general(
+        Q1,
+        D1,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )

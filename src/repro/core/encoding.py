@@ -1,0 +1,173 @@
+"""Vector -> integer-code encoders (paper §2.2.1).
+
+The paper encodes each feature value of a dense semantic vector into a string
+"feature token".  A token is fully determined by the pair
+
+    (column j, bucket b)
+
+where ``b`` is an integer quantization of the feature value.  All engines in
+this package operate on the integer *code matrix* directly; the exact
+paper-format strings are only materialized by :mod:`repro.core.tokens` (for
+interop with a real fulltext engine and for the paper-example tests).
+
+Three encoders are provided, mirroring the paper:
+
+* :class:`RoundingEncoder`  -- ``P<p>``: round to ``p`` decimals.
+* :class:`IntervalEncoder`  -- ``I<1/w>``: floor-quantize into width-``w`` bins.
+* :class:`CombinedEncoder`  -- union of both token sets (codes concatenated
+  along the column axis; columns ``[0, n)`` are the rounding part and columns
+  ``[n, 2n)`` the interval part).
+
+Every encoder maps ``x : (..., n) float`` -> ``codes : (..., n_columns) int``,
+with ``n_columns == n`` (single) or ``2n`` (combined).  Codes use the smallest
+signed integer dtype that can represent the encoder's bucket range for
+unit-normalised inputs (|x| <= 1), which is what makes the TPU ``codes``
+engine byte-efficient (int8 for the paper's default settings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "RoundingEncoder",
+    "IntervalEncoder",
+    "CombinedEncoder",
+    "Encoder",
+    "smallest_int_dtype",
+]
+
+
+def smallest_int_dtype(max_abs: int) -> np.dtype:
+    """Smallest signed integer dtype holding values in [-max_abs, max_abs]."""
+    if max_abs <= 127:
+        return np.dtype(np.int8)
+    if max_abs <= 32767:
+        return np.dtype(np.int16)
+    return np.dtype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundingEncoder:
+    """Paper's *rounding* scheme ``P<precision>``.
+
+    ``bucket = round(x * 10**precision)`` -- e.g. precision=2 maps 0.12 -> 12,
+    -0.13 -> -13, 0.065 -> 7 (ties-to-even is NOT used; the paper rounds
+    half-away-from-zero as ordinary decimal rounding does).
+    """
+
+    precision: int = 2
+
+    @property
+    def scale(self) -> int:
+        return 10 ** self.precision
+
+    @property
+    def scheme_id(self) -> str:
+        return f"P{self.precision}"
+
+    @property
+    def max_abs_bucket(self) -> int:
+        # unit-normalised features are in [-1, 1]
+        return self.scale
+
+    @property
+    def code_dtype(self) -> np.dtype:
+        return smallest_int_dtype(self.max_abs_bucket)
+
+    def n_columns(self, n_features: int) -> int:
+        return n_features
+
+    def encode(self, x: jnp.ndarray) -> jnp.ndarray:
+        scaled = x * self.scale
+        # round half away from zero (decimal-style), not jnp.round's
+        # ties-to-even: floor(|v| + 0.5) * sign(v).
+        b = jnp.sign(scaled) * jnp.floor(jnp.abs(scaled) + 0.5)
+        return b.astype(self.code_dtype)
+
+    def column_feature(self, n_features: int) -> np.ndarray:
+        """Original feature index of every code column."""
+        return np.arange(n_features)
+
+    def decode_center(self, codes: jnp.ndarray) -> jnp.ndarray:
+        """Representative value of a bucket (for reconstruction tests)."""
+        return codes.astype(jnp.float32) / self.scale
+
+
+@dataclasses.dataclass(frozen=True)
+class IntervalEncoder:
+    """Paper's *interval* scheme ``I<round(1/width)>``.
+
+    ``bucket = floor(x / width)`` -- e.g. width=0.1 maps 0.12 -> 1 (interval
+    starting at 0.1), -0.13 -> -2 (interval starting at -0.2), 0.065 -> 0.
+    """
+
+    width: float = 0.1
+
+    @property
+    def scheme_id(self) -> str:
+        return f"I{round(1.0 / self.width)}"
+
+    @property
+    def max_abs_bucket(self) -> int:
+        return int(np.ceil(1.0 / self.width)) + 1
+
+    @property
+    def code_dtype(self) -> np.dtype:
+        return smallest_int_dtype(self.max_abs_bucket)
+
+    def n_columns(self, n_features: int) -> int:
+        return n_features
+
+    def encode(self, x: jnp.ndarray) -> jnp.ndarray:
+        b = jnp.floor(x / self.width)
+        return b.astype(self.code_dtype)
+
+    def column_feature(self, n_features: int) -> np.ndarray:
+        return np.arange(n_features)
+
+    def decode_center(self, codes: jnp.ndarray) -> jnp.ndarray:
+        return (codes.astype(jnp.float32) + 0.5) * self.width
+
+
+@dataclasses.dataclass(frozen=True)
+class CombinedEncoder:
+    """Paper's *combined* scheme: rounding and interval tokens together."""
+
+    rounding: RoundingEncoder = RoundingEncoder(3)
+    interval: IntervalEncoder = IntervalEncoder(0.2)
+
+    @property
+    def scheme_id(self) -> str:
+        return f"{self.rounding.scheme_id}+{self.interval.scheme_id}"
+
+    @property
+    def max_abs_bucket(self) -> int:
+        return max(self.rounding.max_abs_bucket, self.interval.max_abs_bucket)
+
+    @property
+    def code_dtype(self) -> np.dtype:
+        return smallest_int_dtype(self.max_abs_bucket)
+
+    def n_columns(self, n_features: int) -> int:
+        return 2 * n_features
+
+    def encode(self, x: jnp.ndarray) -> jnp.ndarray:
+        dt = self.code_dtype
+        r = self.rounding.encode(x).astype(dt)
+        i = self.interval.encode(x).astype(dt)
+        return jnp.concatenate([r, i], axis=-1)
+
+    def column_feature(self, n_features: int) -> np.ndarray:
+        f = np.arange(n_features)
+        return np.concatenate([f, f])
+
+    def decode_center(self, codes: jnp.ndarray) -> jnp.ndarray:  # pragma: no cover
+        raise NotImplementedError("combined codes have no single center")
+
+
+Encoder = Union[RoundingEncoder, IntervalEncoder, CombinedEncoder]

@@ -1,0 +1,79 @@
+"""High-pass filters (paper §2.2.2): *trim* and *best*.
+
+Both produce a boolean *feature mask* over the **original** feature axis of a
+vector; :func:`expand_mask` tiles it to the code-column axis of an encoder
+(identity for single encoders, 2x tile for :class:`CombinedEncoder`).
+
+The paper applies filters to the *query* (always legal, choosable per request
+-- its §5 "pleasant practical consequence") and optionally to the *index*
+(``best`` at index time).  Both paths are supported by
+:class:`repro.core.search.VectorIndex`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax.numpy as jnp
+
+__all__ = ["TrimFilter", "BestFilter", "Filter", "feature_mask", "expand_mask"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrimFilter:
+    """Keep features with ``|x_j| >= threshold`` (paper: 0.05 / 0.10 / 0.20)."""
+
+    threshold: float = 0.05
+
+    def mask(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.abs(x) >= self.threshold
+
+
+@dataclasses.dataclass(frozen=True)
+class BestFilter:
+    """Keep only the ``m`` features with the largest ``|x_j|``."""
+
+    m: int = 90
+
+    def mask(self, x: jnp.ndarray) -> jnp.ndarray:
+        n = x.shape[-1]
+        if self.m >= n:
+            return jnp.ones(x.shape, dtype=bool)
+        a = jnp.abs(x)
+        # threshold = m-th largest magnitude; ties broken by index via top_k's
+        # deterministic ordering on the magnitude values.
+        kth = jnp.sort(a, axis=-1)[..., n - self.m]
+        keep = a >= kth[..., None]
+        # in case of ties producing > m survivors, drop the lowest-index extras
+        # deterministically so |mask| == m exactly.
+        order = jnp.argsort(jnp.argsort(-a, axis=-1, stable=True), axis=-1)
+        return keep & (order < self.m)
+
+
+Filter = Union[TrimFilter, BestFilter]
+
+
+def feature_mask(
+    x: jnp.ndarray,
+    trim: Optional[TrimFilter] = None,
+    best: Optional[BestFilter] = None,
+) -> jnp.ndarray:
+    """Combined boolean mask on the feature axis (AND of the active filters)."""
+    m = jnp.ones(x.shape, dtype=bool)
+    if trim is not None:
+        m = m & trim.mask(x)
+    if best is not None:
+        m = m & best.mask(x)
+    return m
+
+
+def expand_mask(mask: jnp.ndarray, n_columns: int) -> jnp.ndarray:
+    """Tile a feature mask to an encoder's code-column axis."""
+    n = mask.shape[-1]
+    if n_columns == n:
+        return mask
+    if n_columns % n != 0:
+        raise ValueError(f"n_columns={n_columns} not a multiple of n={n}")
+    reps = n_columns // n
+    return jnp.concatenate([mask] * reps, axis=-1)

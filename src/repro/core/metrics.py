@@ -1,0 +1,31 @@
+"""Evaluation metrics from paper §3.1: Precision@k, nDCG_k, avg. diff."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["precision_at_k", "ndcg_k", "avg_diff"]
+
+
+def precision_at_k(retrieved: jnp.ndarray, gold: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of gold ids present in retrieved ids (both (Q, k))."""
+    hit = (retrieved[:, :, None] == gold[:, None, :]).any(-1)  # (Q, k)
+    return hit.mean(-1)
+
+
+def ndcg_k(retrieved_sims: jnp.ndarray, gold_sims: jnp.ndarray) -> jnp.ndarray:
+    """nDCG_k with graded relevance = cosine similarity to the query.
+
+    ``retrieved_sims``: (Q, k) cosine of the retrieved docs, in rank order.
+    ``gold_sims``: (Q, k) cosine of the ideal (gold) docs, in rank order.
+    """
+    k = retrieved_sims.shape[-1]
+    discounts = 1.0 / jnp.log2(jnp.arange(2, k + 2).astype(jnp.float32))
+    dcg = (retrieved_sims * discounts).sum(-1)
+    idcg = (gold_sims * discounts).sum(-1)
+    return dcg / jnp.maximum(idcg, 1e-12)
+
+
+def avg_diff(retrieved_sims: jnp.ndarray, gold_sims: jnp.ndarray) -> jnp.ndarray:
+    """Mean loss between ideal and actual cosine similarities of the top k."""
+    return (gold_sims - retrieved_sims).mean(-1)

@@ -1,0 +1,74 @@
+"""Phase 2: exact cosine re-ranking of phase-1 candidates (paper §2.2).
+
+All vectors are unit-normalised at index build, so cosine == dot.  Because of
+re-ranking, phase-1 *rank positions* are irrelevant -- only membership of the
+gold documents in the candidate page matters (paper §3.1 note); the tests pin
+this exactness property (``page >= n_docs`` => identical to brute force).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["normalize", "rerank_topk", "brute_force_topk"]
+
+
+def normalize(x: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def rerank_topk(
+    vectors: jnp.ndarray,    # (d, n) unit-normalised index vectors
+    cand_ids: jnp.ndarray,   # (Q, page) int32 phase-1 candidates
+    queries: jnp.ndarray,    # (Q, n) unit-normalised queries
+    k: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact cosine top-k among the candidates -> (ids (Q,k), scores (Q,k))."""
+    cand = vectors[cand_ids]                            # (Q, page, n)
+    scores = jnp.einsum(
+        "qpn,qn->qp", cand, queries, preferred_element_type=jnp.float32
+    )
+    top_scores, top_pos = jax.lax.top_k(scores, k)
+    top_ids = jnp.take_along_axis(cand_ids, top_pos, axis=1)
+    return top_ids, top_scores
+
+
+@partial(jax.jit, static_argnames=("k", "block"))
+def brute_force_topk(
+    vectors: jnp.ndarray,   # (d, n)
+    queries: jnp.ndarray,   # (Q, n)
+    k: int,
+    block: int = 8192,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The paper's naive baseline: one linear scan, O(nd) (gold standard)."""
+    d, n = vectors.shape
+    Q = queries.shape[0]
+    pad = (-d) % block
+    padded = jnp.pad(vectors, ((0, pad), (0, 0)))
+    nb = padded.shape[0] // block
+    blocks = padded.reshape(nb, block, n)
+
+    def body(carry, inp):
+        best_s, best_i = carry
+        blk, base = inp
+        s = queries @ blk.T                              # (Q, block)
+        ids = base + jnp.arange(block, dtype=jnp.int32)
+        valid = ids < d
+        s = jnp.where(valid[None, :], s, -jnp.inf)
+        cat_s = jnp.concatenate([best_s, s], axis=1)
+        cat_i = jnp.concatenate([best_i, jnp.broadcast_to(ids, (Q, block))], axis=1)
+        ts, tp = jax.lax.top_k(cat_s, k)
+        ti = jnp.take_along_axis(cat_i, tp, axis=1)
+        return (ts, ti), None
+
+    init = (
+        jnp.full((Q, k), -jnp.inf, jnp.float32),
+        jnp.zeros((Q, k), jnp.int32),
+    )
+    bases = (jnp.arange(nb) * block).astype(jnp.int32)
+    (best_s, best_i), _ = jax.lax.scan(body, init, (blocks, bases))
+    return best_i, best_s

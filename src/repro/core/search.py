@@ -1,0 +1,181 @@
+"""Public two-phase search API (paper §2.2): VectorIndex.
+
+    idx = VectorIndex.build(vectors, encoder=RoundingEncoder(2))
+    ids, sims = idx.search(queries, k=10, page=320, trim=TrimFilter(0.05))
+
+Phase 1 retrieves ``page`` candidates with one of three engines
+
+* ``postings`` -- paper-faithful inverted index (:mod:`repro.core.postings`)
+* ``codes``    -- TPU-native code-match streaming (:mod:`repro.core.codes`)
+* ``onehot``   -- MXU matmul over the one-hot token vocabulary
+
+and phase 2 re-ranks them by exact cosine (:mod:`repro.core.rerank`).
+Filtering (trim/best) is query-side by default -- choosable per request, the
+paper's §5 recommendation -- with optional index-side ``best`` at build time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .codes import score_codes, score_onehot
+from .encoding import Encoder, RoundingEncoder
+from .filtering import BestFilter, TrimFilter, expand_mask, feature_mask
+from .postings import (
+    Postings,
+    build_postings,
+    idf_weights,
+    lookup,
+    score_postings_batch,
+)
+from .rerank import brute_force_topk, normalize, rerank_topk
+
+__all__ = ["VectorIndex", "SearchParams"]
+
+_SENTINEL = {  # never-matching code per dtype (outside any bucket range)
+    jnp.int8.dtype: 127,
+    jnp.int16.dtype: 32767,
+    jnp.int32.dtype: 2**31 - 1,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    k: int = 10
+    page: int = 320
+    trim: Optional[TrimFilter] = None
+    best: Optional[BestFilter] = None
+    engine: str = "postings"       # postings | codes | onehot | codes_pallas
+    weighting: str = "idf"         # idf | count
+    max_postings: Optional[int] = None  # None -> exact (= n_docs)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class VectorIndex:
+    """Immutable two-phase search index over unit-normalised vectors."""
+
+    vectors: jnp.ndarray           # (d, n) f32, unit rows
+    codes: jnp.ndarray             # (d, C) int
+    postings: Postings
+    encoder: Encoder
+    index_best: Optional[int]      # index-side 'best' filter used at build
+
+    # -- pytree plumbing (lets the whole index cross jit/shard boundaries) --
+    def tree_flatten(self):
+        return (self.vectors, self.codes, self.postings), (self.encoder, self.index_best)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        vectors, codes, postings = children
+        encoder, index_best = aux
+        return cls(vectors, codes, postings, encoder, index_best)
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(
+        cls,
+        vectors: jnp.ndarray,
+        encoder: Encoder = RoundingEncoder(2),
+        index_best: Optional[int] = None,
+    ) -> "VectorIndex":
+        vectors = normalize(jnp.asarray(vectors, jnp.float32))
+        codes = encoder.encode(vectors)
+        if index_best is not None:
+            mask = expand_mask(
+                feature_mask(vectors, best=BestFilter(index_best)), codes.shape[-1]
+            )
+            sentinel = _SENTINEL[codes.dtype]
+            codes = jnp.where(mask, codes, jnp.asarray(sentinel, codes.dtype))
+        postings = build_postings(codes)
+        return cls(vectors, codes, postings, encoder, index_best)
+
+    @property
+    def n_docs(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def n_features(self) -> int:
+        return self.vectors.shape[1]
+
+    # ---------------------------------------------------------- query encode
+    def encode_queries(
+        self,
+        queries: jnp.ndarray,
+        trim: Optional[TrimFilter],
+        best: Optional[BestFilter],
+        weighting: str,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """-> (queries_normalised (Q,n), qcodes (Q,C), col_weights (Q,C))."""
+        q = normalize(jnp.asarray(queries, jnp.float32))
+        qcodes = self.encoder.encode(q)
+        mask = expand_mask(feature_mask(q, trim=trim, best=best), qcodes.shape[-1])
+        if weighting == "idf":
+            lo, hi = jax.vmap(lambda qc: lookup(self.postings, qc))(qcodes)
+            w = idf_weights(hi - lo, self.postings.n_docs)
+        elif weighting == "count":
+            w = jnp.ones(qcodes.shape, jnp.float32)
+        else:
+            raise ValueError(f"unknown weighting {weighting!r}")
+        return q, qcodes, jnp.where(mask, w, 0.0)
+
+    # ----------------------------------------------------------------- phase 1
+    def phase1_scores(
+        self,
+        qcodes: jnp.ndarray,
+        col_weights: jnp.ndarray,
+        engine: str,
+        max_postings: Optional[int],
+    ) -> jnp.ndarray:
+        if engine == "postings":
+            L = self.n_docs if max_postings is None else max_postings
+            return score_postings_batch(
+                self.postings,
+                qcodes,
+                col_weights > 0,
+                max_postings=L,
+                weighting="count",   # weights already folded into col_weights
+                col_weights=col_weights,
+            )
+        if engine == "codes":
+            return score_codes(self.codes, qcodes, col_weights)
+        if engine == "codes_pallas":
+            from repro.kernels.code_match import ops as cm_ops
+
+            return cm_ops.code_match(self.codes, qcodes, col_weights)
+        if engine == "onehot":
+            return score_onehot(
+                self.codes, qcodes, col_weights, self.encoder.max_abs_bucket
+            )
+        raise ValueError(f"unknown engine {engine!r}")
+
+    # ------------------------------------------------------------------ search
+    def search(
+        self,
+        queries: jnp.ndarray,
+        k: int = 10,
+        page: int = 320,
+        trim: Optional[TrimFilter] = None,
+        best: Optional[BestFilter] = None,
+        engine: str = "postings",
+        weighting: str = "idf",
+        max_postings: Optional[int] = None,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Two-phase search -> (ids (Q,k), cosine scores (Q,k))."""
+        queries = jnp.atleast_2d(queries)
+        page = min(page, self.n_docs)
+        k = min(k, page)
+        q, qcodes, w = self.encode_queries(queries, trim, best, weighting)
+        scores1 = self.phase1_scores(qcodes, w, engine, max_postings)
+        _, cand = jax.lax.top_k(scores1, page)                  # (Q, page)
+        return rerank_topk(self.vectors, cand, q, k)
+
+    def gold_topk(self, queries: jnp.ndarray, k: int = 10):
+        """Paper's gold standard: brute-force cosine scan over all vectors."""
+        q = normalize(jnp.atleast_2d(jnp.asarray(queries, jnp.float32)))
+        return brute_force_topk(self.vectors, q, k)

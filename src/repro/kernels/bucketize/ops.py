@@ -1,0 +1,50 @@
+"""Public wrapper for the bucketize kernel: encoder-aware fused encode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import CombinedEncoder, Encoder, IntervalEncoder, RoundingEncoder
+
+from .kernel import DEFAULT_BLOCK_B, bucketize_pallas
+from .ref import bucketize_ref
+
+_INTERPRET_ELEMENT_LIMIT = 1 << 20
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _single(x, mode, param, out_dtype, block_b, force_pallas):
+    B, n = x.shape
+    on_tpu = _on_tpu()
+    if not on_tpu and not force_pallas and B * n > _INTERPRET_ELEMENT_LIMIT:
+        return bucketize_ref(x, mode, param, out_dtype)
+    block_b = min(block_b, B)
+    pad = (-B) % block_b
+    xp = jnp.pad(x, ((0, pad), (0, 0)), constant_values=1.0)
+    out = bucketize_pallas(
+        xp, mode, param, out_dtype=out_dtype, block_b=block_b, interpret=not on_tpu
+    )
+    return out[:B]
+
+
+def encode(
+    x: jnp.ndarray,
+    encoder: Encoder,
+    block_b: int = DEFAULT_BLOCK_B,
+    force_pallas: bool = False,
+) -> jnp.ndarray:
+    """Fused normalize+quantize; matches ``encoder.encode(normalize(x))``."""
+    dt = jnp.dtype(encoder.code_dtype)
+    if isinstance(encoder, RoundingEncoder):
+        return _single(x, "round", float(encoder.scale), dt, block_b, force_pallas)
+    if isinstance(encoder, IntervalEncoder):
+        return _single(x, "floor", float(encoder.width), dt, block_b, force_pallas)
+    if isinstance(encoder, CombinedEncoder):
+        r = encode(x, encoder.rounding, block_b, force_pallas).astype(dt)
+        i = encode(x, encoder.interval, block_b, force_pallas).astype(dt)
+        return jnp.concatenate([r, i], axis=-1)
+    raise TypeError(f"unknown encoder {encoder!r}")

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the bucketize kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bucketize_ref(x: jnp.ndarray, mode: str, param: float, out_dtype=jnp.int8):
+    x = x.astype(jnp.float32)
+    norm = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    x = x / jnp.maximum(norm, 1e-12)
+    if mode == "round":
+        scaled = x * param
+        b = jnp.sign(scaled) * jnp.floor(jnp.abs(scaled) + 0.5)
+    elif mode == "floor":
+        b = jnp.floor(x / param)
+    else:
+        raise ValueError(mode)
+    return b.astype(out_dtype)

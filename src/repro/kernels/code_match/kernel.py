@@ -1,0 +1,76 @@
+"""Pallas TPU kernel for phase-1 code-match scoring.
+
+Computes ``out[q, d] = sum_c w[q, c] * (qcodes[q, c] == doc_codes[d, c])`` --
+the paper's inverted-index score re-expressed as a masked quantized-Hamming
+similarity (DESIGN.md §2).
+
+TPU mapping: the (d, C) int8/int16 code matrix streams HBM -> VMEM in
+``(BLOCK_D, C)`` tiles; queries and weights for a ``(BLOCK_Q, C)`` tile stay
+resident.  The equality-compare + weighted reduce is VPU work (equality has
+no MXU form), vectorised over the 8x128 lanes; the C axis is walked in
+``BLOCK_C`` chunks so the (BLOCK_Q, BLOCK_D, BLOCK_C) compare cube stays
+within VMEM.  Arithmetic intensity is ~2 flop/byte at int8, so the kernel is
+memory-bound by construction -- the win over phase-1 on raw f32 vectors is
+exactly the 4x byte reduction of int8 codes (plus query-side trim zeroing
+whole columns, which XLA cannot exploit but the postings engine and the
+column-gather pre-pass can; see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 8
+DEFAULT_BLOCK_D = 512
+DEFAULT_BLOCK_C = 128
+
+
+def _code_match_kernel(q_ref, w_ref, d_ref, o_ref, *, block_c: int):
+    """One (BLOCK_Q, BLOCK_D) output tile."""
+    n_cols = q_ref.shape[-1]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for c0 in range(0, n_cols, block_c):  # static unroll: n_cols is compile-time
+        qc = q_ref[:, c0 : c0 + block_c]          # (BQ, BC) int
+        dc = d_ref[:, c0 : c0 + block_c]          # (BD, BC) int
+        w = w_ref[:, c0 : c0 + block_c]           # (BQ, BC) f32
+        eq = qc[:, None, :] == dc[None, :, :]     # (BQ, BD, BC) bool
+        acc = acc + jnp.sum(jnp.where(eq, w[:, None, :], 0.0), axis=-1)
+    o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_d", "block_c", "interpret"),
+)
+def code_match_pallas(
+    doc_codes: jnp.ndarray,   # (d, C) int
+    qcodes: jnp.ndarray,      # (Q, C) int
+    col_weights: jnp.ndarray,  # (Q, C) f32
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_d: int = DEFAULT_BLOCK_D,
+    block_c: int = DEFAULT_BLOCK_C,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Padded-shape Pallas call; use :mod:`.ops` for the public wrapper."""
+    d, C = doc_codes.shape
+    Q = qcodes.shape[0]
+    assert Q % block_q == 0 and d % block_d == 0, (Q, d, block_q, block_d)
+
+    grid = (Q // block_q, d // block_d)
+    kernel = functools.partial(_code_match_kernel, block_c=min(block_c, C))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, C), lambda i, j: (i, 0)),   # qcodes
+            pl.BlockSpec((block_q, C), lambda i, j: (i, 0)),   # weights
+            pl.BlockSpec((block_d, C), lambda i, j: (j, 0)),   # doc codes
+        ],
+        out_specs=pl.BlockSpec((block_q, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, d), jnp.float32),
+        interpret=interpret,
+    )(qcodes, col_weights, doc_codes)

@@ -1,0 +1,55 @@
+"""Public jit'd wrapper around the code_match Pallas kernel.
+
+Handles padding to block multiples and backend selection: on TPU the compiled
+kernel runs natively; elsewhere ``interpret=True`` executes the same kernel
+body on CPU (used by the test-suite sweeps), unless the problem is large, in
+which case the jnp reference path (same math, XLA-fused) is used for speed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK_C, DEFAULT_BLOCK_D, DEFAULT_BLOCK_Q, code_match_pallas
+from .ref import code_match_ref
+
+_INTERPRET_ELEMENT_LIMIT = 1 << 22  # interpret mode is python-speed; cap it
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def code_match(
+    doc_codes: jnp.ndarray,
+    qcodes: jnp.ndarray,
+    col_weights: jnp.ndarray,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_d: int = DEFAULT_BLOCK_D,
+    block_c: int = DEFAULT_BLOCK_C,
+    force_pallas: bool = False,
+) -> jnp.ndarray:
+    """out (Q, d): weighted code-equality scores; see kernel.py."""
+    d, C = doc_codes.shape
+    Q = qcodes.shape[0]
+
+    on_tpu = _on_tpu()
+    if not on_tpu and not force_pallas:
+        work = Q * d * C
+        if work > _INTERPRET_ELEMENT_LIMIT:
+            return code_match_ref(doc_codes, qcodes, col_weights)
+
+    block_q = min(block_q, max(Q, 1))
+    block_d = min(block_d, max(d, 1))
+    pad_q = (-Q) % block_q
+    pad_d = (-d) % block_d
+    qc = jnp.pad(qcodes, ((0, pad_q), (0, 0)))
+    w = jnp.pad(col_weights, ((0, pad_q), (0, 0)))
+    dc = jnp.pad(doc_codes, ((0, pad_d), (0, 0)))
+    out = code_match_pallas(
+        dc, qc, w,
+        block_q=block_q, block_d=block_d, block_c=block_c,
+        interpret=not on_tpu,
+    )
+    return out[:Q, :d]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the code_match kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def code_match_ref(
+    doc_codes: jnp.ndarray,    # (d, C) int
+    qcodes: jnp.ndarray,       # (Q, C) int
+    col_weights: jnp.ndarray,  # (Q, C) f32
+) -> jnp.ndarray:
+    eq = qcodes[:, None, :] == doc_codes[None, :, :]      # (Q, d, C)
+    return jnp.sum(jnp.where(eq, col_weights[:, None, :], 0.0), axis=-1)

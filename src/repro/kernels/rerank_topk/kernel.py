@@ -1,0 +1,50 @@
+"""Pallas TPU kernel for phase-2 candidate scoring (exact cosine).
+
+``scores[q, p] = sum_n cand[q, p, n] * query[q, n]`` over unit-normalised
+vectors -- a batched (page x n) @ (n,) matvec.  Tiles the page axis so each
+(BLOCK_P, n) candidate slab sits in VMEM and lowers the contraction to an MXU
+dot.  Top-k selection stays outside the kernel (``jax.lax.top_k``): k is tiny
+(<= 10) and selection is latency-, not bandwidth-, bound.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_P = 256
+
+
+def _rerank_kernel(c_ref, q_ref, o_ref):
+    # c_ref: (1, BLOCK_P, n); q_ref: (1, n); o_ref: (1, BLOCK_P)
+    cand = c_ref[0]                       # (BLOCK_P, n)
+    q = q_ref[0]                          # (n,)
+    o_ref[0, :] = jax.lax.dot_general(
+        cand, q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def rerank_scores_pallas(
+    cand_vecs: jnp.ndarray,  # (Q, P, n) f32 gathered candidates
+    queries: jnp.ndarray,    # (Q, n) f32
+    block_p: int = DEFAULT_BLOCK_P,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    Q, P, n = cand_vecs.shape
+    assert P % block_p == 0, (P, block_p)
+    grid = (Q, P // block_p)
+    return pl.pallas_call(
+        _rerank_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_p, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_p), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, P), jnp.float32),
+        interpret=interpret,
+    )(cand_vecs, queries)

@@ -1,0 +1,47 @@
+"""Public wrapper: fused phase-2 rerank (gather -> Pallas scores -> top-k)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK_P, rerank_scores_pallas
+from .ref import rerank_scores_ref
+
+_INTERPRET_ELEMENT_LIMIT = 1 << 22
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rerank_scores(
+    cand_vecs: jnp.ndarray,
+    queries: jnp.ndarray,
+    block_p: int = DEFAULT_BLOCK_P,
+    force_pallas: bool = False,
+) -> jnp.ndarray:
+    Q, P, n = cand_vecs.shape
+    on_tpu = _on_tpu()
+    if not on_tpu and not force_pallas and Q * P * n > _INTERPRET_ELEMENT_LIMIT:
+        return rerank_scores_ref(cand_vecs, queries)
+    block_p = min(block_p, P)
+    pad_p = (-P) % block_p
+    cv = jnp.pad(cand_vecs, ((0, 0), (0, pad_p), (0, 0)))
+    out = rerank_scores_pallas(cv, queries, block_p=block_p, interpret=not on_tpu)
+    return out[:, :P]
+
+
+def rerank_topk(
+    vectors: jnp.ndarray,    # (d, n) index vectors, unit rows
+    cand_ids: jnp.ndarray,   # (Q, page) int32
+    queries: jnp.ndarray,    # (Q, n) unit rows
+    k: int,
+    block_p: int = DEFAULT_BLOCK_P,
+    force_pallas: bool = False,
+):
+    """Kernelized equivalent of :func:`repro.core.rerank.rerank_topk`."""
+    cand = vectors[cand_ids]
+    scores = rerank_scores(cand, queries, block_p=block_p, force_pallas=force_pallas)
+    top_scores, top_pos = jax.lax.top_k(scores, k)
+    return jnp.take_along_axis(cand_ids, top_pos, axis=1), top_scores

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the rerank_topk kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rerank_scores_ref(cand_vecs: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
+    """(Q, P, n), (Q, n) -> (Q, P) exact cosine (inputs unit-normalised)."""
+    return jnp.einsum(
+        "qpn,qn->qp", cand_vecs, queries, preferred_element_type=jnp.float32
+    )

@@ -1,0 +1,179 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record roofline inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+
+The two XLA_FLAGS lines above run BEFORE any other import (jax locks device
+count at first init); tests/benches never import this module, so they keep
+seeing one device.  Per cell we write artifacts/dryrun/<mesh>/<arch>__<shape>.json
+with cost_analysis (FLOPs / bytes), memory_analysis, the collective-byte
+census (launch/hlo_analysis.py), and compile wall time.  Existing artifacts
+are skipped unless --force (cells are independent; reruns are incremental).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _shardings(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _analytic_arg_bytes(args, in_specs, mesh) -> int:
+    """Per-device bytes of the inputs under their shardings (params+state+batch)."""
+    total = 0
+    flat_args = jax.tree_util.tree_leaves(args)
+    flat_specs = jax.tree_util.tree_leaves(
+        in_specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    for a, s in zip(flat_args, flat_specs):
+        size = np.prod(a.shape, dtype=np.int64) if a.shape else 1
+        shard = 1
+        for axes in s:
+            if axes is None:
+                continue
+            for ax in (axes if isinstance(axes, tuple) else (axes,)):
+                shard *= mesh.shape[ax]
+        total += int(size) * a.dtype.itemsize // max(shard, 1)
+    return total
+
+
+def run_cell(cell, mesh, mesh_name: str, out_dir: str, force: bool = False,
+             save_hlo: bool = False):
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    path = os.path.join(out_dir, mesh_name, f"{cell.arch}__{cell.shape}.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    in_sh = tuple(_shardings(s, mesh) for s in cell.in_specs)
+    kwargs = {}
+    if cell.out_specs is not None:
+        kwargs["out_shardings"] = _shardings(cell.out_specs, mesh)
+
+    from repro.dist.annotate import use_mesh
+
+    t0 = time.perf_counter()
+    with mesh, use_mesh(mesh):
+        lowered = jax.jit(cell.fn, in_shardings=in_sh, **kwargs).lower(*cell.args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_in_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_in_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    hl = analyze_hlo(hlo)   # loop-corrected flops/bytes/collectives
+    if save_hlo:
+        with open(path.replace(".json", ".hlo"), "w") as f:
+            f.write(hlo)
+
+    record = {
+        "arch": cell.arch,
+        "shape": cell.shape,
+        "kind": cell.kind,
+        "mesh": mesh_name,
+        "mesh_shape": dict(mesh.shape),
+        "note": cell.note,
+        # loop-corrected (launch/hlo_analysis.py); per device per step
+        "flops_per_device": hl["flops"],
+        "dot_flops_per_device": hl["dot_flops"],
+        "bytes_per_device": hl["bytes"],
+        "collective_bytes_per_device": hl["collective_bytes"],
+        "collective_breakdown": hl["collectives"],
+        # raw XLA numbers (while bodies counted once -- kept for reference)
+        "xla_flops_per_device": float(cost.get("flops", 0.0)),
+        "xla_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "input_bytes_per_device": _analytic_arg_bytes(cell.args, cell.in_specs, mesh),
+        "memory_analysis": mem_info,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "hlo_lines": hlo.count("\n"),
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    from repro.configs import ALL_IDS, ARCH_IDS, arch_shapes, get_arch
+    from repro.launch.mesh import make_production_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id, 'all' (10 assigned), or 'all+paper'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    if args.arch == "all":
+        arch_ids = ARCH_IDS
+    elif args.arch == "all+paper":
+        arch_ids = ALL_IDS
+    else:
+        arch_ids = [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch_id in arch_ids:
+        arch = get_arch(arch_id)
+        shapes = arch_shapes(arch_id) if args.shape == "all" else [args.shape]
+        for shape in shapes:
+            for multi in meshes:
+                mesh_name = "multi_2x16x16" if multi else "single_16x16"
+                mesh = make_production_mesh(multi_pod=multi)
+                cell = arch.cell(shape, mesh)
+                if cell is None:
+                    print(f"SKIP  {arch_id:28s} {shape:16s} {mesh_name} (by rule)")
+                    continue
+                try:
+                    t0 = time.perf_counter()
+                    rec = run_cell(cell, mesh, mesh_name, args.out,
+                                   force=args.force, save_hlo=args.save_hlo)
+                    print(f"OK    {arch_id:28s} {shape:16s} {mesh_name} "
+                          f"flops/dev={rec['flops_per_device']:.3e} "
+                          f"coll/dev={rec['collective_bytes_per_device']:.3e} "
+                          f"({time.perf_counter()-t0:.0f}s)")
+                except Exception as e:
+                    failures.append((arch_id, shape, mesh_name, repr(e)))
+                    print(f"FAIL  {arch_id:28s} {shape:16s} {mesh_name}: {e!r}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("\nall requested dry-run cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,259 @@
+"""Loop-corrected static analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE, so a model
+with a layer scan (and chunked-attention scans inside it) is undercounted by
+orders of magnitude.  This module re-derives the roofline inputs from the
+module text with call-graph multipliers:
+
+* computations are parsed into per-op records (result/operand shapes via a
+  per-computation symbol table);
+* a multiplier is propagated from ENTRY through ``calls=`` / ``to_apply=`` /
+  ``condition=`` / ``body=`` edges, with while bodies scaled by the loop trip
+  count (recovered from the condition's ``constant(N)``);
+* **flops**: exact ``2 * prod(result) * contracted`` for every ``dot``,
+  plus 1 flop/element for arithmetic elementwise ops;
+* **bytes**: HBM-boundary traffic -- for ops in non-fusion computations,
+  result bytes + resolvable operand bytes (fusion internals excluded:
+  they stay in registers/VMEM);
+* **collective bytes** per kind (all-reduce / all-gather / reduce-scatter /
+  all-to-all / collective-permute), result-shape sized.
+
+Validated against analytic 6ND for the LM train cells (tests/test_dryrun.py).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict, deque
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+__all__ = ["analyze_hlo", "collective_bytes", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "tanh", "exponential", "log", "rsqrt", "sqrt", "negate", "abs", "sign",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "compare",
+    "select", "and", "or", "xor", "not", "clamp", "convert", "cosine", "sine",
+    "logistic", "log-plus-one", "exponential-minus-one",
+}
+
+_SHAPE_RE = re.compile(r"\b(%s)\[([0-9,]*)\]" % "|".join(DTYPE_BYTES))
+_OPLINE_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OPNAME_RE = re.compile(r"([a-z][\w\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%([\w\.\-]+),\s*body=%([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+class Op(NamedTuple):
+    name: str
+    kind: str
+    result_bytes: int
+    result_elems: int
+    operands: Tuple[str, ...]
+    attrs: str
+
+
+def _shape_info(type_text: str) -> Tuple[int, int]:
+    """-> (bytes, elems) summed over all shapes in a (possibly tuple) type."""
+    total_b = total_e = 0
+    for m in _SHAPE_RE.finditer(type_text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_b += n * DTYPE_BYTES[dt]
+        total_e += n
+    return total_b, total_e
+
+
+def _split_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        # headers sit at column 0: "%name (params...) -> type {" / "ENTRY %..."
+        # (params lists may contain "/*index=N*/" comments, so don't key on "=")
+        if (line[:1] in ("%", "E") and line.rstrip().endswith("{")
+                and (line.startswith("%") or line.startswith("ENTRY"))):
+            header = line.strip()
+            is_entry = header.startswith("ENTRY")
+            m = re.search(r"%([\w\.\-]+)", header)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if is_entry:
+                    entry = cur
+                continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def _parse_ops(lines: List[str]) -> Tuple[List[Op], Dict[str, Tuple[int, int]]]:
+    ops: List[Op] = []
+    symbols: Dict[str, Tuple[int, int]] = {}
+    for line in lines:
+        m = _OPLINE_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        om = _OPNAME_RE.search(rhs)
+        if not om:
+            continue
+        kind = om.group(1)
+        type_text = rhs[: om.start()]
+        rb, re_ = _shape_info(type_text)
+        symbols[name] = (rb, re_)
+        args_attrs = rhs[om.end():]
+        operands = tuple(_OPERAND_RE.findall(args_attrs.split("),")[0]))
+        ops.append(Op(name, kind, rb, re_, operands, args_attrs))
+    return ops, symbols
+
+
+def _multipliers(comps, entry) -> Dict[str, float]:
+    parsed = {n: _parse_ops(ls) for n, ls in comps.items()}
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    queue = deque([entry])
+    visited_edges = set()
+    while queue:
+        cname = queue.popleft()
+        m = mult[cname]
+        ops, _ = parsed[cname]
+        for op in ops:
+            wm = _WHILE_RE.search(op.attrs)
+            if op.kind == "while" and wm:
+                cond, body = wm.group(1), wm.group(2)
+                trip = 1
+                for line in comps.get(cond, []):
+                    for c in _CONST_RE.finditer(line):
+                        trip = max(trip, int(c.group(1)))
+                for target, f in ((cond, trip), (body, trip)):
+                    key = (cname, op.name, target)
+                    if key not in visited_edges:
+                        visited_edges.add(key)
+                        mult[target] += m * f
+                        queue.append(target)
+                continue
+            for cm in _CALLS_RE.finditer(op.attrs):
+                target = cm.group(1)
+                key = (cname, op.name, target)
+                if target in comps and key not in visited_edges:
+                    visited_edges.add(key)
+                    mult[target] += m
+                    queue.append(target)
+    return dict(mult)
+
+
+def analyze_hlo(hlo: str) -> Dict:
+    comps, entry = _split_computations(hlo)
+    if entry is None:
+        return {"flops": 0, "dot_flops": 0, "bytes": 0,
+                "collectives": {}, "collective_bytes": 0}
+    mult = _multipliers(comps, entry)
+    parsed = {n: _parse_ops(ls) for n, ls in comps.items()}
+
+    # which computations are fusion bodies (bytes counted at the call site)
+    fusion_called = set()
+    for n, (ops, _) in parsed.items():
+        for op in ops:
+            if op.kind == "fusion":
+                for cm in _CALLS_RE.finditer(op.attrs):
+                    fusion_called.add(cm.group(1))
+
+    dot_flops = 0.0
+    ew_flops = 0.0
+    hbm_bytes = 0.0
+    coll: Dict[str, float] = defaultdict(float)
+
+    for cname, (ops, symbols) in parsed.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fusion_called
+        for op in ops:
+            if op.kind == "dot":
+                contract = 1
+                lm_ = _LHS_CDIMS_RE.search(op.attrs)
+                lhs_shape = None
+                if op.operands:
+                    # resolve lhs dims: re-find its defining line's shape dims
+                    lhs_shape = _resolve_dims(comps[cname], op.operands[0])
+                if lm_ and lhs_shape is not None:
+                    for d in lm_.group(1).split(","):
+                        if d:
+                            contract *= lhs_shape[int(d)]
+                dot_flops += m * 2.0 * op.result_elems * contract
+            elif op.kind in _ELEMENTWISE:
+                ew_flops += m * op.result_elems
+            if in_fusion:
+                continue  # internal traffic stays on-chip
+            if op.kind in ("parameter", "constant", "get-tuple-element",
+                           "bitcast", "tuple", "after-all"):
+                continue
+            for ckind in _COLLECTIVES:
+                if op.kind.startswith(ckind):
+                    if op.kind.endswith("-done"):
+                        break
+                    coll[ckind] += m * op.result_bytes
+                    break
+            opb = sum(symbols.get(o, (0, 0))[0] for o in op.operands)
+            hbm_bytes += m * (op.result_bytes + opb)
+
+    return {
+        "flops": dot_flops + ew_flops,
+        "dot_flops": dot_flops,
+        "elementwise_flops": ew_flops,
+        "bytes": hbm_bytes,
+        "collectives": {k: v for k, v in coll.items()},
+        "collective_bytes": sum(coll.values()),
+    }
+
+
+_DIMS_CACHE: Dict[int, Dict[str, Tuple[int, ...]]] = {}
+
+
+def _resolve_dims(lines: List[str], name: str) -> Optional[Tuple[int, ...]]:
+    key = id(lines)
+    table = _DIMS_CACHE.get(key)
+    if table is None:
+        table = {}
+        for line in lines:
+            m = _OPLINE_RE.match(line)
+            if not m:
+                continue
+            om = _OPNAME_RE.search(m.group(2))
+            if not om:
+                continue
+            sm = _SHAPE_RE.search(m.group(2)[: om.start()])
+            if sm:
+                dims = tuple(int(d) for d in sm.group(2).split(",") if d)
+                table[m.group(1)] = dims
+        _DIMS_CACHE[key] = table
+        if len(_DIMS_CACHE) > 64:
+            _DIMS_CACHE.clear()
+            _DIMS_CACHE[key] = table
+    return table.get(name)
+
+
+def collective_bytes(hlo: str) -> Tuple[Dict[str, int], int]:
+    """Back-compat wrapper -> (per-kind totals, grand total)."""
+    out = analyze_hlo(hlo)
+    return out["collectives"], out["collective_bytes"]

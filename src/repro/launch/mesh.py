@@ -1,0 +1,26 @@
+"""Production meshes (brief-mandated): 16x16 single pod, 2x16x16 multi-pod.
+
+A FUNCTION, not a module constant -- importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before first jax init; tests and
+benches must keep seeing 1 device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (CPU) devices exist -- for tests."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[: data * model])

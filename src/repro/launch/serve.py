@@ -1,0 +1,73 @@
+"""Serving launcher: build a vector index and serve batched queries.
+
+    PYTHONPATH=src python -m repro.launch.serve --docs 10000 --features 128 \
+        --queries 256 --batch-size 32
+
+Stands up the paper's system end to end on local devices: synthetic corpus
+-> LSA -> encoded index -> BatchedSearchEngine, then reports quality vs the
+brute-force gold standard and effective latency/throughput.  (The pod-scale
+index layouts are exercised by repro.launch.dryrun's vectordb-wiki cells.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import (CombinedEncoder, IntervalEncoder, RoundingEncoder,
+                        TrimFilter, VectorIndex, precision_at_k)
+from repro.data import make_corpus
+from repro.lsa import build_lsa
+from repro.serve.engine import BatchedSearchEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=10000)
+    ap.add_argument("--features", type=int, default=128)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--page", type=int, default=320)
+    ap.add_argument("--trim", type=float, default=0.05)
+    ap.add_argument("--engine", default="codes",
+                    choices=["codes", "postings", "onehot"])
+    args = ap.parse_args()
+
+    print(f"building corpus ({args.docs} docs) + LSA-{args.features} ...")
+    corpus = make_corpus(n_docs=args.docs, vocab_size=max(args.docs, 8000),
+                         n_topics=64, seed=0)
+    pipe = build_lsa(corpus, n_features=args.features)
+    index = VectorIndex.build(
+        pipe.doc_vectors,
+        CombinedEncoder(RoundingEncoder(1), IntervalEncoder(0.1)))
+
+    rng = np.random.default_rng(1)
+    qids = rng.choice(args.docs, size=args.queries, replace=False)
+    queries = np.asarray(pipe.doc_vectors[qids])
+    gold_ids, _ = index.gold_topk(pipe.doc_vectors[qids], 10)
+
+    engine = BatchedSearchEngine(
+        index, batch_size=args.batch_size, k=10, page=args.page,
+        trim=TrimFilter(args.trim) if args.trim else None, engine=args.engine)
+    try:
+        t0 = time.time()
+        futs = [engine.submit(q) for q in queries]
+        results = [f.result(timeout=120) for f in futs]
+        dt = time.time() - t0
+    finally:
+        engine.close()
+
+    import jax.numpy as jnp
+    ids = jnp.asarray(np.stack([r[0] for r in results]))
+    p10 = float(precision_at_k(ids, gold_ids).mean())
+    print(f"served {args.queries} queries in {dt:.2f}s "
+          f"({dt/args.queries*1e3:.1f} ms/query effective, "
+          f"batch={args.batch_size}, engine={args.engine})")
+    print(f"P@10 vs brute force: {p10:.3f} "
+          f"(trim={args.trim}, page={args.page})")
+
+
+if __name__ == "__main__":
+    main()

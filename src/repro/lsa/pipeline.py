@@ -1,0 +1,53 @@
+"""End-to-end LSA pipeline: corpus -> tf-idf -> randomized SVD -> unit vectors.
+
+This is the paper's §3 setup ("LSA with 400 features over TF-IDF ... all
+vectors normalized to unit length") as one call.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.data.synthetic import TopicCorpus
+
+from .svd import LsaModel, fold_in, randomized_svd
+from .tfidf import TfIdf, fit_tfidf, transform
+
+__all__ = ["LsaPipeline", "build_lsa"]
+
+
+class LsaPipeline(NamedTuple):
+    tfidf: TfIdf
+    lsa: LsaModel
+
+    @property
+    def doc_vectors(self) -> jnp.ndarray:
+        return self.lsa.doc_vecs
+
+    def embed(self, doc_terms: jnp.ndarray, doc_tf: jnp.ndarray) -> jnp.ndarray:
+        """Fold new documents into the latent space (unit rows)."""
+        w = transform(self.tfidf, doc_terms, doc_tf)
+        return fold_in(self.lsa, doc_terms, w)
+
+
+def build_lsa(
+    corpus: TopicCorpus,
+    n_features: int = 400,
+    oversample: int = 16,
+    n_iter: int = 3,
+    seed: int = 0,
+) -> LsaPipeline:
+    tfidf = fit_tfidf(jnp.asarray(corpus.doc_terms), corpus.vocab_size)
+    w = transform(tfidf, jnp.asarray(corpus.doc_terms), jnp.asarray(corpus.doc_tf))
+    lsa = randomized_svd(
+        jnp.asarray(corpus.doc_terms),
+        w,
+        vocab_size=corpus.vocab_size,
+        k=n_features,
+        oversample=oversample,
+        n_iter=n_iter,
+        seed=seed,
+    )
+    return LsaPipeline(tfidf=tfidf, lsa=lsa)

@@ -1,0 +1,89 @@
+"""Randomized truncated SVD for padded-sparse corpora, pure JAX.
+
+Computes the rank-``k`` LSA factorisation of the implicit tf-idf matrix
+``A (docs x vocab)`` given in padded (terms, weights) form, without ever
+densifying ``A``:
+
+* ``A @ Y``  -> embedding-bag: gather ``Y[terms]``, weight, sum over the pad
+  axis -- ``O(nnz * r)``.
+* ``A.T @ X`` -> scatter: ``segment_sum`` of ``w * X[doc]`` over term ids --
+  the same primitive the recsys/GNN substrates use.
+
+Halko-Martinsson-Tropp randomized range finder with power iterations and QR
+re-orthogonalisation; distributes over the doc axis (both primitives are
+row-parallel + one ``psum``), which is how the full 4.18M-doc Wikipedia run
+maps onto a pod.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LsaModel", "randomized_svd", "matvec_bags", "rmatvec_bags", "fold_in"]
+
+
+class LsaModel(NamedTuple):
+    v: jnp.ndarray        # (vocab, k) right singular vectors
+    s: jnp.ndarray        # (k,) singular values
+    doc_vecs: jnp.ndarray  # (d, k) = U*S, unit-normalised rows
+
+
+def matvec_bags(terms: jnp.ndarray, weights: jnp.ndarray, Y: jnp.ndarray) -> jnp.ndarray:
+    """A @ Y for padded bags: (d, T) x (vocab, r) -> (d, r)."""
+    valid = (terms >= 0)[..., None]
+    g = Y[jnp.maximum(terms, 0)]                     # (d, T, r)
+    return jnp.sum(jnp.where(valid, weights[..., None] * g, 0.0), axis=1)
+
+
+def rmatvec_bags(
+    terms: jnp.ndarray, weights: jnp.ndarray, X: jnp.ndarray, vocab_size: int
+) -> jnp.ndarray:
+    """A.T @ X: (d, T) x (d, r) -> (vocab, r) via scatter-add."""
+    d, T = terms.shape
+    valid = terms >= 0
+    tid = jnp.where(valid, terms, vocab_size).reshape(-1)
+    contrib = (weights[..., None] * X[:, None, :]).reshape(d * T, -1)
+    out = jax.ops.segment_sum(contrib, tid, num_segments=vocab_size + 1)
+    return out[:vocab_size]
+
+
+@partial(jax.jit, static_argnames=("k", "oversample", "n_iter", "vocab_size"))
+def randomized_svd(
+    terms: jnp.ndarray,
+    weights: jnp.ndarray,
+    vocab_size: int,
+    k: int = 400,
+    oversample: int = 16,
+    n_iter: int = 3,
+    seed: int = 0,
+) -> LsaModel:
+    r = k + oversample
+    key = jax.random.PRNGKey(seed)
+    omega = jax.random.normal(key, (vocab_size, r), jnp.float32)
+
+    Y = matvec_bags(terms, weights, omega)           # (d, r)
+    Y, _ = jnp.linalg.qr(Y)
+    for _ in range(n_iter):
+        Z = rmatvec_bags(terms, weights, Y, vocab_size)   # (v, r)
+        Z, _ = jnp.linalg.qr(Z)
+        Y = matvec_bags(terms, weights, Z)
+        Y, _ = jnp.linalg.qr(Y)
+    Q = Y                                            # (d, r) orthonormal
+    B = rmatvec_bags(terms, weights, Q, vocab_size).T  # (r, v)
+    Ub, S, Vt = jnp.linalg.svd(B, full_matrices=False)
+    U = Q @ Ub[:, :k]                                # (d, k)
+    s = S[:k]
+    V = Vt[:k].T                                     # (v, k)
+    doc = U * s[None, :]
+    doc = doc / jnp.maximum(jnp.linalg.norm(doc, axis=-1, keepdims=True), 1e-12)
+    return LsaModel(v=V, s=s, doc_vecs=doc)
+
+
+def fold_in(model: LsaModel, terms: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Project new tf-idf bags into the LSA space: q = A_q @ V, unit rows."""
+    q = matvec_bags(terms, weights, model.v)
+    return q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)

@@ -1,0 +1,39 @@
+"""TF-IDF weighting over padded bag-of-words corpora (paper §2.3, §3)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TfIdf", "fit_tfidf", "transform"]
+
+
+class TfIdf(NamedTuple):
+    idf: jnp.ndarray  # (vocab,) f32
+    vocab_size: int
+
+
+def fit_tfidf(doc_terms: jnp.ndarray, vocab_size: int) -> TfIdf:
+    """doc_terms: (d, T) int32 padded with -1."""
+    d = doc_terms.shape[0]
+    valid = doc_terms >= 0
+    tid = jnp.where(valid, doc_terms, vocab_size)
+    df = jax.ops.segment_sum(
+        valid.astype(jnp.float32).reshape(-1),
+        tid.reshape(-1),
+        num_segments=vocab_size + 1,
+    )[:vocab_size]
+    idf = jnp.log1p(d / (1.0 + df))
+    return TfIdf(idf=idf, vocab_size=vocab_size)
+
+
+def transform(model: TfIdf, doc_terms: jnp.ndarray, doc_tf: jnp.ndarray) -> jnp.ndarray:
+    """-> (d, T) l2-normalised tf-idf weights aligned with doc_terms."""
+    valid = doc_terms >= 0
+    tid = jnp.maximum(doc_terms, 0)
+    w = (1.0 + jnp.log(jnp.maximum(doc_tf, 1.0))) * model.idf[tid]
+    w = jnp.where(valid, w, 0.0)
+    norm = jnp.maximum(jnp.linalg.norm(w, axis=-1, keepdims=True), 1e-12)
+    return w / norm

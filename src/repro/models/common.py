@@ -1,0 +1,101 @@
+"""Shared model primitives: init helpers, norms, activations, losses."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init", "embed_init", "rms_norm", "layer_norm", "act_fn",
+    "softmax_xent", "sigmoid_bce", "mlp_init", "mlp_apply",
+]
+
+PDTYPE = jnp.float32   # parameter dtype (f32 master copies)
+CDTYPE = jnp.bfloat16  # compute dtype
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=PDTYPE):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(fan_in)
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def embed_init(key, shape, dtype=PDTYPE):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+    return out.astype(x.dtype)
+
+
+def act_fn(name: str) -> Callable:
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "tanh": jnp.tanh}[name]
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean cross-entropy; logits upcast to f32 for the reduction.
+
+    The gold logit is extracted with a one-hot contraction, NOT
+    ``take_along_axis``: a gather over a model-sharded vocab axis forces
+    GSPMD to replicate the full (B, S, V) logits on every device (found via
+    dry-run memory_analysis: +100 GiB/device at 150k vocab), while the
+    one-hot product reduces over the sharded axis with a single psum."""
+    from repro.dist.annotate import constrain
+
+    spec = ["batch"] + [None] * (logits.ndim - 2) + ["vocab"]
+    logits = constrain(logits.astype(jnp.float32), *spec)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = constrain(
+        jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype), *spec
+    )
+    gold = (logits * onehot).sum(-1)
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def sigmoid_bce(logits, labels):
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def mlp_init(key, dims, bias=True, dtype=PDTYPE):
+    """dims = [in, h1, ..., out] -> list of {'w','b'} layers."""
+    layers = []
+    keys = jax.random.split(key, len(dims) - 1)
+    for k, din, dout in zip(keys, dims[:-1], dims[1:]):
+        layer = {"w": dense_init(k, (din, dout), dtype=dtype)}
+        if bias:
+            layer["b"] = jnp.zeros((dout,), dtype)
+        layers.append(layer)
+    return layers
+
+
+def mlp_apply(layers, x, act="relu", final_act=False):
+    f = act_fn(act)
+    for i, layer in enumerate(layers):
+        x = x @ layer["w"].astype(x.dtype)
+        if "b" in layer:
+            x = x + layer["b"].astype(x.dtype)
+        if i < len(layers) - 1 or final_act:
+            x = f(x)
+    return x

@@ -1,0 +1,65 @@
+"""Embedding substrate for recsys: EmbeddingBag built from JAX primitives.
+
+JAX has no native ``nn.EmbeddingBag`` -- this module IS that layer (brief:
+"implement EmbeddingBag with ``jnp.take`` + ``jax.ops.segment_sum``; this is
+part of the system").  Tables are stored as one flat ``(sum_f V_f, D)``
+matrix with per-field offsets so the row axis shards cleanly over the
+``model`` mesh axis (row-sharded embedding = the standard DLRM layout).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import embed_init
+
+__all__ = ["flat_table_init", "field_lookup", "embedding_bag", "field_offsets"]
+
+
+def field_offsets(vocab_sizes: Sequence[int]) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum(vocab_sizes)[:-1]]).astype(np.int32)
+
+
+def flat_table_init(key, vocab_sizes: Sequence[int], dim: int):
+    total = int(np.sum(vocab_sizes))
+    return embed_init(key, (total, dim))
+
+
+def field_lookup(table: jnp.ndarray, ids: jnp.ndarray, offsets: jnp.ndarray):
+    """Single-hot per-field lookup: ids (B, F) -> (B, F, D)."""
+    flat = ids + offsets[None, :].astype(ids.dtype)
+    return jnp.take(table, flat, axis=0)
+
+
+def embedding_bag(
+    table: jnp.ndarray,      # (V, D)
+    ids: jnp.ndarray,        # (B, L) int32 (multi-hot bag; -1 or masked = pad)
+    weights: jnp.ndarray,    # (B, L) f32 per-sample weights / mask
+    mode: str = "sum",       # sum | mean
+) -> jnp.ndarray:
+    """torch.nn.EmbeddingBag equivalent: ragged gather + weighted reduce."""
+    g = jnp.take(table, jnp.maximum(ids, 0), axis=0)          # (B, L, D)
+    w = jnp.where(ids >= 0, weights, 0.0)
+    out = (g * w[..., None]).sum(axis=1)
+    if mode == "mean":
+        out = out / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+    return out
+
+
+def embedding_bag_segment(
+    table: jnp.ndarray,       # (V, D)
+    flat_ids: jnp.ndarray,    # (nnz,) int32
+    segment_ids: jnp.ndarray,  # (nnz,) int32 bag index per id
+    n_bags: int,
+    weights: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """CSR-style EmbeddingBag: gather rows then segment_sum into bags."""
+    g = jnp.take(table, jnp.maximum(flat_ids, 0), axis=0)
+    if weights is not None:
+        g = g * weights[:, None]
+    g = jnp.where((flat_ids >= 0)[:, None], g, 0.0)
+    return jax.ops.segment_sum(g, segment_ids, num_segments=n_bags)

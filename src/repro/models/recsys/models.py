@@ -1,0 +1,296 @@
+"""The four assigned recsys architectures: xDeepFM, AutoInt, DIN, BST.
+
+Shared anatomy (kernel_taxonomy §B.6): sparse embedding tables (the hot
+path -- see embedding.py) -> feature-interaction op -> small MLP -> logit.
+Per-model interaction:
+
+* xDeepFM  [arXiv:1803.05170] -- CIN: layered outer-product + 1x1-conv
+  compress, sum-pool per layer, plus a deep MLP branch and a linear branch.
+* AutoInt  [arXiv:1810.11921] -- multi-head self-attention over the 39 field
+  embeddings with residuals.
+* DIN      [arXiv:1706.06978] -- target attention over the user's behaviour
+  history through the (hist, target, hist-target, hist*target) MLP.
+* BST      [arXiv:1905.06874] -- one transformer block over the behaviour
+  sequence + target item, then a deep MLP.
+
+Every model also exposes ``user_embedding`` (its natural user representation)
+so the paper's encoded-vector search can serve as its candidate-retrieval
+phase (``retrieval_cand`` shape; see repro/serve/retrieval.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import dense_init, embed_init, mlp_apply, mlp_init, sigmoid_bce
+from .embedding import field_lookup, field_offsets, flat_table_init
+
+__all__ = [
+    "XDeepFMConfig", "AutoIntConfig", "DINConfig", "BSTConfig",
+    "xdeepfm_init", "xdeepfm_forward", "autoint_init", "autoint_forward",
+    "din_init", "din_forward", "bst_init", "bst_forward", "bce_loss",
+    "xdeepfm_user_embedding", "autoint_user_embedding",
+    "din_user_embedding", "bst_user_embedding",
+]
+
+
+# ============================================================== xDeepFM (CIN)
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str = "xdeepfm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    cin_layers: Tuple[int, ...] = (200, 200, 200)
+    mlp: Tuple[int, ...] = (400, 400)
+    field_vocab: int = 100_000
+    n_dense: int = 13
+
+    @property
+    def vocab_sizes(self):
+        return [self.field_vocab] * self.n_sparse
+
+
+def xdeepfm_init(key, cfg: XDeepFMConfig):
+    ks = jax.random.split(key, 6)
+    m, D = cfg.n_sparse, cfg.embed_dim
+    cin_ws = []
+    h_prev = m
+    kc = jax.random.split(ks[1], len(cfg.cin_layers))
+    for k, h in zip(kc, cfg.cin_layers):
+        cin_ws.append(dense_init(k, (h_prev * m, h)))
+        h_prev = h
+    return {
+        "table": flat_table_init(ks[0], cfg.vocab_sizes, D),
+        "linear": embed_init(ks[2], (int(np.sum(cfg.vocab_sizes)),)),
+        "cin": cin_ws,
+        "mlp": mlp_init(ks[3], [m * D + cfg.n_dense, *cfg.mlp, 1]),
+        "cin_out": dense_init(ks[4], (int(np.sum(cfg.cin_layers)), 1)),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def xdeepfm_forward(params, batch: Dict, cfg: XDeepFMConfig):
+    offs = jnp.asarray(field_offsets(cfg.vocab_sizes))
+    x0 = field_lookup(params["table"], batch["sparse_ids"], offs)    # (B, m, D)
+    B, m, D = x0.shape
+
+    # CIN: X^k[b,h,d] = sum_{i,j} W^k[i*m+j, h] X^{k-1}[b,i,d] X^0[b,j,d]
+    xs, pooled = x0, []
+    for W in params["cin"]:
+        z = jnp.einsum("bhd,bmd->bhmd", xs, x0)                      # (B,Hk-1,m,D)
+        z = z.reshape(B, -1, D)
+        xs = jax.nn.relu(jnp.einsum("bpd,ph->bhd", z, W))
+        pooled.append(xs.sum(-1))                                    # (B, Hk)
+    cin_feat = jnp.concatenate(pooled, axis=-1)
+    cin_logit = cin_feat @ params["cin_out"]
+
+    deep_in = jnp.concatenate([x0.reshape(B, m * D), batch["dense"]], axis=-1)
+    deep_logit = mlp_apply(params["mlp"], deep_in, act="relu")
+
+    flat_ids = batch["sparse_ids"] + offs[None, :].astype(batch["sparse_ids"].dtype)
+    lin_logit = jnp.take(params["linear"], flat_ids, axis=0).sum(-1, keepdims=True)
+
+    return (cin_logit + deep_logit + lin_logit)[:, 0] + params["bias"]
+
+
+def xdeepfm_user_embedding(params, batch, cfg: XDeepFMConfig):
+    offs = jnp.asarray(field_offsets(cfg.vocab_sizes))
+    x0 = field_lookup(params["table"], batch["sparse_ids"], offs)
+    return x0.mean(axis=1)                                           # (B, D)
+
+
+# ================================================================== AutoInt
+@dataclasses.dataclass(frozen=True)
+class AutoIntConfig:
+    name: str = "autoint"
+    n_sparse: int = 39
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    field_vocab: int = 100_000
+    n_dense: int = 13
+
+    @property
+    def vocab_sizes(self):
+        return [self.field_vocab] * self.n_sparse
+
+
+def autoint_init(key, cfg: AutoIntConfig):
+    ks = jax.random.split(key, 3 + cfg.n_attn_layers)
+    d_in = cfg.embed_dim
+    layers = []
+    for i in range(cfg.n_attn_layers):
+        kk = jax.random.split(ks[2 + i], 4)
+        layers.append({
+            "wq": dense_init(kk[0], (d_in, cfg.n_heads, cfg.d_attn)),
+            "wk": dense_init(kk[1], (d_in, cfg.n_heads, cfg.d_attn)),
+            "wv": dense_init(kk[2], (d_in, cfg.n_heads, cfg.d_attn)),
+            "wres": dense_init(kk[3], (d_in, cfg.n_heads * cfg.d_attn)),
+        })
+        d_in = cfg.n_heads * cfg.d_attn
+    return {
+        "table": flat_table_init(ks[0], cfg.vocab_sizes, cfg.embed_dim),
+        "attn": layers,
+        "out": dense_init(ks[1], (cfg.n_sparse * d_in + cfg.n_dense, 1)),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def autoint_forward(params, batch: Dict, cfg: AutoIntConfig):
+    offs = jnp.asarray(field_offsets(cfg.vocab_sizes))
+    h = field_lookup(params["table"], batch["sparse_ids"], offs)     # (B, m, D)
+    for layer in params["attn"]:
+        q = jnp.einsum("bmd,dhk->bmhk", h, layer["wq"])
+        k = jnp.einsum("bmd,dhk->bmhk", h, layer["wk"])
+        v = jnp.einsum("bmd,dhk->bmhk", h, layer["wv"])
+        s = jnp.einsum("bmhk,bnhk->bhmn", q, k) / jnp.sqrt(float(cfg.d_attn))
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhmn,bnhk->bmhk", a, v)
+        o = o.reshape(*h.shape[:2], -1)
+        h = jax.nn.relu(o + h @ layer["wres"])
+    B = h.shape[0]
+    feat = jnp.concatenate([h.reshape(B, -1), batch["dense"]], axis=-1)
+    return (feat @ params["out"])[:, 0] + params["bias"]
+
+
+def autoint_user_embedding(params, batch, cfg: AutoIntConfig):
+    offs = jnp.asarray(field_offsets(cfg.vocab_sizes))
+    return field_lookup(params["table"], batch["sparse_ids"], offs).mean(1)
+
+
+# ===================================================================== DIN
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: Tuple[int, ...] = (80, 40)
+    mlp: Tuple[int, ...] = (200, 80)
+    item_vocab: int = 1_000_000
+    n_dense: int = 13
+
+
+def din_init(key, cfg: DINConfig):
+    ks = jax.random.split(key, 4)
+    D = cfg.embed_dim
+    return {
+        "items": embed_init(ks[0], (cfg.item_vocab, D)),
+        "attn_mlp": mlp_init(ks[1], [4 * D, *cfg.attn_mlp, 1]),
+        "mlp": mlp_init(ks[2], [2 * D + cfg.n_dense, *cfg.mlp, 1]),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def din_attention(params, hist, target, mask):
+    """DIN local activation unit -> weighted-sum interest (B, D)."""
+    B, L, D = hist.shape
+    t = jnp.broadcast_to(target[:, None, :], (B, L, D))
+    feat = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)   # (B, L, 4D)
+    w = mlp_apply(params["attn_mlp"], feat, act="relu")[..., 0]      # (B, L)
+    w = jnp.where(mask > 0, w, 0.0)  # paper: no softmax; masked weights
+    return (hist * w[..., None]).sum(1)
+
+
+def din_forward(params, batch: Dict, cfg: DINConfig):
+    hist = jnp.take(params["items"], batch["hist_ids"], axis=0)      # (B, L, D)
+    target = jnp.take(params["items"], batch["target_id"], axis=0)   # (B, D)
+    interest = din_attention(params, hist, target, batch["hist_mask"])
+    feat = jnp.concatenate([interest, target, batch["dense"]], axis=-1)
+    return mlp_apply(params["mlp"], feat, act="relu")[:, 0] + params["bias"]
+
+
+def din_user_embedding(params, batch, cfg: DINConfig):
+    hist = jnp.take(params["items"], batch["hist_ids"], axis=0)
+    target = jnp.take(params["items"], batch["target_id"], axis=0)
+    return din_attention(params, hist, target, batch["hist_mask"])
+
+
+# ===================================================================== BST
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp: Tuple[int, ...] = (1024, 512, 256)
+    item_vocab: int = 1_000_000
+    n_dense: int = 13
+
+    @property
+    def d_head(self):
+        return self.embed_dim // self.n_heads
+
+
+def bst_init(key, cfg: BSTConfig):
+    ks = jax.random.split(key, 4 + cfg.n_blocks)
+    D = cfg.embed_dim
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kk = jax.random.split(ks[3 + i], 6)
+        blocks.append({
+            "wq": dense_init(kk[0], (D, cfg.n_heads, cfg.d_head)),
+            "wk": dense_init(kk[1], (D, cfg.n_heads, cfg.d_head)),
+            "wv": dense_init(kk[2], (D, cfg.n_heads, cfg.d_head)),
+            "wo": dense_init(kk[3], (cfg.n_heads * cfg.d_head, D)),
+            "ff1": dense_init(kk[4], (D, 4 * D)),
+            "ff2": dense_init(kk[5], (4 * D, D)),
+            "ln1": jnp.zeros((D,)), "ln2": jnp.zeros((D,)),
+        })
+    return {
+        "items": embed_init(ks[0], (cfg.item_vocab, D)),
+        "pos": embed_init(ks[1], (cfg.seq_len + 1, D)),
+        "blocks": blocks,
+        "mlp": mlp_init(ks[2], [(cfg.seq_len + 1) * D + cfg.n_dense, *cfg.mlp, 1]),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def _bst_encode(params, batch, cfg: BSTConfig):
+    from ..common import rms_norm
+
+    hist = jnp.take(params["items"], batch["hist_ids"], axis=0)      # (B, L, D)
+    target = jnp.take(params["items"], batch["target_id"], axis=0)   # (B, D)
+    seq = jnp.concatenate([hist, target[:, None, :]], axis=1)        # (B, L+1, D)
+    seq = seq + params["pos"][None]
+    mask = jnp.concatenate(
+        [batch["hist_mask"], jnp.ones_like(batch["hist_mask"][:, :1])], axis=1
+    )
+    for blk in params["blocks"]:
+        x = rms_norm(seq, blk["ln1"])
+        q = jnp.einsum("bld,dhk->blhk", x, blk["wq"])
+        k = jnp.einsum("bld,dhk->blhk", x, blk["wk"])
+        v = jnp.einsum("bld,dhk->blhk", x, blk["wv"])
+        s = jnp.einsum("blhk,bmhk->bhlm", q, k) / jnp.sqrt(float(cfg.d_head))
+        s = jnp.where(mask[:, None, None, :] > 0, s, -1e30)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhlm,bmhk->blhk", a, v).reshape(*seq.shape[:2], -1)
+        seq = seq + o @ blk["wo"]
+        x = rms_norm(seq, blk["ln2"])
+        seq = seq + jax.nn.relu(x @ blk["ff1"]) @ blk["ff2"]
+    return seq, mask
+
+
+def bst_forward(params, batch: Dict, cfg: BSTConfig):
+    seq, _ = _bst_encode(params, batch, cfg)
+    B = seq.shape[0]
+    feat = jnp.concatenate([seq.reshape(B, -1), batch["dense"]], axis=-1)
+    return mlp_apply(params["mlp"], feat, act="relu")[:, 0] + params["bias"]
+
+
+def bst_user_embedding(params, batch, cfg: BSTConfig):
+    seq, mask = _bst_encode(params, batch, cfg)
+    return (seq * mask[..., None]).sum(1) / jnp.maximum(
+        mask.sum(-1, keepdims=True), 1e-9
+    )
+
+
+# ---------------------------------------------------------------------- loss
+def bce_loss(forward_fn, params, batch, cfg):
+    return sigmoid_bce(forward_fn(params, batch, cfg), batch["label"])

@@ -1,0 +1,245 @@
+"""Attention for the LM family: GQA + RoPE + pattern masks, memory-efficient.
+
+Supports the four layer kinds needed by the assigned archs:
+
+* ``full``    -- causal full attention (qwen2, gemma2 global, llama4 global)
+* ``swa``     -- sliding-window attention (mixtral, starcoder2, gemma2 local)
+* ``chunked`` -- chunked-local attention (llama4 iRoPE local layers: tokens
+  attend only within their ``window``-sized chunk)
+
+Prefill/training uses a **streaming-softmax two-level scan** (outer map over
+query chunks, inner scan over KV chunks with running (max, sum, acc)) so the
+(S x S) score matrix is never materialised -- required to lower the 32k
+prefill and 4k train shapes at pod scale.  Decode attends one query position
+against the cache directly (O(S) per step).  Logit softcapping (gemma2) is
+``cap * tanh(s / cap)`` applied pre-mask.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rope", "attention", "decode_attention", "LayerKind"]
+
+NEG_INF = -1e30
+
+
+class LayerKind(NamedTuple):
+    attn: str          # full | swa | chunked
+    use_rope: bool
+    moe: bool
+
+
+# --------------------------------------------------------------------- RoPE
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, dh), positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                                 # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def _softcap(s: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap and cap > 0:
+        return cap * jnp.tanh(s / cap)
+    return s
+
+
+def _mask_bias(qpos, kpos, kind: str, window: int) -> jnp.ndarray:
+    """(Cq, Ckv) additive bias: 0 where attending is allowed, -inf otherwise."""
+    q = qpos[:, None]
+    k = kpos[None, :]
+    ok = k <= q                       # causal
+    if kind == "swa" and window > 0:
+        ok = ok & (k > q - window)
+    elif kind == "chunked" and window > 0:
+        ok = ok & ((k // window) == (q // window))
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ----------------------------------------------------- streaming chunked attn
+@functools.partial(
+    jax.jit, static_argnames=("kind", "window", "softcap", "q_chunk", "kv_chunk")
+)
+def attention(
+    q: jnp.ndarray,   # (B, S, H, dh)
+    k: jnp.ndarray,   # (B, S, KV, dh)
+    v: jnp.ndarray,   # (B, S, KV, dh)
+    kind: str = "full",
+    window: int = 0,
+    softcap: float = 0.0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    assert S % q_chunk == 0 and S % kv_chunk == 0, (S, q_chunk, kv_chunk)
+    nq, nkv = S // q_chunk, S // kv_chunk
+
+    kc = k.reshape(B, nkv, kv_chunk, KV, dh)
+    vc = v.reshape(B, nkv, kv_chunk, KV, dh)
+    qr = q.reshape(B, nq, q_chunk, H, dh)
+
+    def one_q_chunk(args):
+        qi, qblk = args                                 # (B, q_chunk, H, dh)
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            kj, kblk, vblk = inp                        # (B, kv_chunk, KV, dh)
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+            kfull = jnp.repeat(kblk, G, axis=2)         # (B, kv_chunk, H, dh)
+            vfull = jnp.repeat(vblk, G, axis=2)
+            s = jnp.einsum(
+                "bqhd,bchd->bhqc", qblk, kfull, preferred_element_type=jnp.float32
+            ) * scale
+            s = _softcap(s, softcap)
+            s = s + _mask_bias(qpos, kpos, kind, window)[None, None]
+            m_new = jnp.maximum(m, s.max(-1))           # (B, H, q_chunk)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum(
+                "bhqc,bchd->bqhd", p.astype(vfull.dtype), vfull,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr.transpose(0, 2, 1)[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        init = (
+            jnp.zeros((B, q_chunk, H, dh), jnp.float32),
+            jnp.full((B, H, q_chunk), NEG_INF, jnp.float32),
+            jnp.zeros((B, H, q_chunk), jnp.float32),
+        )
+        ks = jnp.arange(nkv)
+        # scan-over-checkpoint: the backward recomputes each chunk's
+        # probabilities instead of stacking (nq, nkv, B, H, Cq, Ckv) f32
+        # residuals -- the flash-attention memory profile (dry-run memory
+        # analysis showed 28 GiB/device residual stacks without this).
+        (acc, m, l), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), init,
+            (ks, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0))
+        )
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+        return out.astype(q.dtype)                      # (B, q_chunk, H, dh)
+
+    outs = jax.lax.map(one_q_chunk, (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, dh)
+
+
+# ---------------------------------------------- context-parallel attention
+@functools.partial(
+    jax.jit, static_argnames=("kind", "window", "softcap", "q_chunk", "kv_chunk")
+)
+def attention_seq_parallel(
+    q: jnp.ndarray,   # (B, S, H, dh)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    kind: str = "full",
+    window: int = 0,
+    softcap: float = 0.0,
+    q_chunk: int = 256,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Streaming-softmax attention with the q-chunk axis VECTORIZED (not
+    scanned) and constrained to the ``model`` mesh axis -- context
+    parallelism.  This is the TP story for archs whose head count does not
+    divide the model axis (llama4: 40 heads on a 16-way axis): instead of
+    replicating attention 16x, each model shard owns S/16 query positions;
+    K/V are all-gathered per layer (bf16, cheap relative to score compute).
+    """
+    from repro.dist.annotate import constrain
+
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    nq, nkv = S // q_chunk, S // kv_chunk
+
+    qr = q.reshape(B, nq, q_chunk, H, dh)
+    qr = constrain(qr, "batch", "model", None, None, None)
+    qpos = jnp.arange(S).reshape(nq, q_chunk)
+    kc = jnp.moveaxis(k.reshape(B, nkv, kv_chunk, KV, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nkv, kv_chunk, KV, dh), 1, 0)
+
+    def kv_step(carry, inp):
+        acc, m, l = carry
+        kj, kblk, vblk = inp
+        kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+        kfull = jnp.repeat(kblk, G, axis=2)
+        vfull = jnp.repeat(vblk, G, axis=2)
+        s = jnp.einsum("bnqhd,bchd->bnhqc", qr, kfull,
+                       preferred_element_type=jnp.float32) * scale
+        s = _softcap(s, softcap)
+        bias = jax.vmap(lambda qp: _mask_bias(qp, kpos, kind, window))(qpos)
+        s = s + bias[None, :, None]                     # (B, nq, H, Cq, Ckv)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bnhqc,bchd->bnqhd", p.astype(vfull.dtype), vfull,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * jnp.moveaxis(corr, 2, 3)[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    init = (
+        jnp.zeros((B, nq, q_chunk, H, dh), jnp.float32),
+        jnp.full((B, nq, H, q_chunk), NEG_INF, jnp.float32),
+        jnp.zeros((B, nq, H, q_chunk), jnp.float32),
+    )
+    (acc, m, l), _ = jax.lax.scan(
+        jax.checkpoint(kv_step), init, (jnp.arange(nkv), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 1, 3, 2)[..., None]
+    out = constrain(out.astype(q.dtype), "batch", "model", None, None, None)
+    return out.reshape(B, S, H, dh)
+
+
+# ------------------------------------------------------------- decode (S_q=1)
+def decode_attention(
+    q: jnp.ndarray,        # (B, 1, H, dh)
+    k_cache: jnp.ndarray,  # (B, S_c, KV, dh)
+    v_cache: jnp.ndarray,  # (B, S_c, KV, dh)
+    kv_pos: jnp.ndarray,   # (S_c,) int32 absolute positions, -1 = empty slot
+    cur_pos: jnp.ndarray,  # () int32 position of the query token
+    kind: str = "full",
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    B, _, H, dh = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    qh = q[:, 0].reshape(B, KV, G, dh)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qh, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    s = _softcap(s, softcap)
+    ok = (kv_pos >= 0) & (kv_pos <= cur_pos)
+    if kind == "swa" and window > 0:
+        ok = ok & (kv_pos > cur_pos - window)
+    elif kind == "chunked" and window > 0:
+        ok = ok & ((kv_pos // window) == (cur_pos // window))
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, dh).astype(q.dtype)

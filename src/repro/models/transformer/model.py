@@ -1,0 +1,404 @@
+"""Decoder-only LM covering the five assigned transformer architectures.
+
+One parameterised implementation; heterogeneity (attention pattern, MoE
+cadence) is expressed as a *sub-layer period*: layers are grouped into
+``n_layers / period`` identical super-blocks that are ``lax.scan``-ned (small
+HLO, fast pod-scale compiles), each containing ``period`` distinct sub-layers
+(e.g. llama4: 3 chunked-local + 1 global-NoPE, MoE on every 2nd).
+
+Param/compute dtypes: f32 master params, bf16 matmul compute, f32 softmax /
+loss reductions (see models/common.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.annotate import constrain
+
+from ..common import CDTYPE, dense_init, embed_init, rms_norm, softmax_xent
+from .attention import LayerKind, attention, decode_attention, rope
+from .moe import moe_ffn, moe_init
+
+__all__ = ["LMConfig", "init_params", "forward", "lm_loss", "prefill", "serve_step",
+           "init_cache"]
+
+
+# ---------------------------------------------------------------------- config
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 1
+    moe_every: int = 1          # MoE on layers where (i % moe_every) == moe_every-1
+    moe_shared: int = 0
+    capacity_factor: float = 1.25
+    # attention pattern
+    attn_pattern: str = "full"  # full | swa | alt_local_global | chunked_global4
+    window: int = 0
+    softcap_attn: float = 0.0
+    softcap_final: float = 0.0
+    qkv_bias: bool = False
+    tied_embeddings: bool = False
+    embed_scale: bool = False   # gemma-style sqrt(d_model) embedding multiplier
+    rope_theta: float = 10000.0
+    act: str = "silu"
+    # chunking for memory-efficient attention
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    # memory policy
+    param_dtype: str = "float32"   # "bfloat16" for 400B-class archs
+    cache_update: str = "slice"    # "masked" when the cache seq dim is sharded
+    moe_token_chunk: int = 32768   # MoE dispatch-buffer bound (tokens)
+    moe_dispatch: str = "global"   # "local" = shard-local dispatch (shard_map)
+    # context parallelism: shard the q-chunk axis over "model" -- the TP
+    # story for archs whose head count does not divide the model axis
+    seq_parallel_attn: bool = False
+
+    def sub_kinds(self) -> List[LayerKind]:
+        if self.attn_pattern == "full":
+            attns = [("full", True)]
+        elif self.attn_pattern == "swa":
+            attns = [("swa", True)]
+        elif self.attn_pattern == "alt_local_global":
+            attns = [("swa", True), ("full", True)]
+        elif self.attn_pattern == "chunked_global4":
+            attns = [("chunked", True)] * 3 + [("full", False)]  # iRoPE: global=NoPE
+        else:
+            raise ValueError(self.attn_pattern)
+        moe_period = self.moe_every if self.moe_experts else 1
+        period = math.lcm(len(attns), moe_period)
+        kinds = []
+        for i in range(period):
+            a, use_rope = attns[i % len(attns)]
+            is_moe = bool(self.moe_experts) and (i % moe_period == moe_period - 1)
+            kinds.append(LayerKind(attn=a, use_rope=use_rope, moe=is_moe))
+        return kinds
+
+    @property
+    def period(self) -> int:
+        return len(self.sub_kinds())
+
+    @property
+    def n_super(self) -> int:
+        assert self.n_layers % self.period == 0, (self.n_layers, self.period)
+        return self.n_layers // self.period
+
+    def cache_len(self, kind: LayerKind, max_seq: int) -> int:
+        if kind.attn in ("swa", "chunked") and 0 < self.window < max_seq:
+            return self.window
+        return max_seq
+
+    def param_count(self) -> int:
+        """Total parameter count (for 6ND roofline math)."""
+        p = self.vocab * self.d_model * (1 if self.tied_embeddings else 2)
+        for kind in self.sub_kinds():
+            attn = self.d_model * (self.n_heads + 2 * self.n_kv_heads) * self.d_head \
+                + self.n_heads * self.d_head * self.d_model
+            if kind.moe:
+                ffn = self.moe_experts * 3 * self.d_model * self.d_ff \
+                    + self.d_model * self.moe_experts \
+                    + self.moe_shared * 3 * self.d_model * self.d_ff
+            else:
+                ffn = 3 * self.d_model * self.d_ff
+            p += (attn + ffn + 2 * self.d_model) * self.n_super
+        return p
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k + shared experts only)."""
+        if not self.moe_experts:
+            return self.param_count()
+        p = self.vocab * self.d_model * (1 if self.tied_embeddings else 2)
+        for kind in self.sub_kinds():
+            attn = self.d_model * (self.n_heads + 2 * self.n_kv_heads) * self.d_head \
+                + self.n_heads * self.d_head * self.d_model
+            if kind.moe:
+                ffn = (self.moe_top_k + self.moe_shared) * 3 * self.d_model * self.d_ff
+            else:
+                ffn = 3 * self.d_model * self.d_ff
+            p += (attn + ffn) * self.n_super
+        return p
+
+
+# ------------------------------------------------------------------------ init
+def _init_sublayer(key, cfg: LMConfig, kind: LayerKind):
+    ks = jax.random.split(key, 8)
+    H, KV, dh, D, F = cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_model, cfg.d_ff
+    p: Dict[str, Any] = {
+        "ln1": jnp.zeros((D,), jnp.float32),
+        "ln2": jnp.zeros((D,), jnp.float32),
+        "wq": dense_init(ks[0], (D, H, dh)),
+        "wk": dense_init(ks[1], (D, KV, dh)),
+        "wv": dense_init(ks[2], (D, KV, dh)),
+        "wo": dense_init(ks[3], (H, dh, D), scale=1.0 / math.sqrt(H * dh)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, dh), jnp.float32)
+        p["bk"] = jnp.zeros((KV, dh), jnp.float32)
+        p["bv"] = jnp.zeros((KV, dh), jnp.float32)
+    if kind.moe:
+        p["moe"] = moe_init(ks[4], D, F, cfg.moe_experts, cfg.moe_shared)
+    else:
+        p["ffn"] = {
+            "wg": dense_init(ks[5], (D, F)),
+            "wu": dense_init(ks[6], (D, F)),
+            "wd": dense_init(ks[7], (F, D)),
+        }
+    return p
+
+
+def init_params(key, cfg: LMConfig):
+    kinds = cfg.sub_kinds()
+    keys = jax.random.split(key, cfg.period + 2)
+    blocks = {}
+    for p_i, kind in enumerate(kinds):
+        sub_keys = jax.random.split(keys[p_i], cfg.n_super)
+        blocks[f"sub{p_i}"] = jax.vmap(
+            lambda k: _init_sublayer(k, cfg, kind)
+        )(sub_keys)
+    params = {
+        "embed": embed_init(keys[-1], (cfg.vocab, cfg.d_model)),
+        "blocks": blocks,
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tied_embeddings:
+        params["unembed"] = dense_init(keys[-2], (cfg.d_model, cfg.vocab))
+    if cfg.param_dtype != "float32":
+        dt = jnp.dtype(cfg.param_dtype)
+        params = jax.tree.map(lambda x: x.astype(dt), params)
+    return params
+
+
+# -------------------------------------------------------------------- sublayer
+def _qkv(p, h, cfg: LMConfig):
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(h.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(h.dtype)
+        k = k + p["bk"].astype(h.dtype)
+        v = v + p["bv"].astype(h.dtype)
+    return q, k, v
+
+
+def _ffn_or_moe(p, h, cfg: LMConfig, kind: LayerKind):
+    B, S, D = h.shape
+    if kind.moe:
+        if cfg.moe_dispatch == "local":
+            from .moe_local import moe_ffn_local
+
+            y, aux = moe_ffn_local(
+                p["moe"], h.reshape(B * S, D), cfg.moe_top_k,
+                cfg.capacity_factor, cfg.act,
+            )
+        else:
+            y, aux = moe_ffn(
+                p["moe"], h.reshape(B * S, D), cfg.moe_top_k,
+                cfg.capacity_factor, cfg.act, token_chunk=cfg.moe_token_chunk,
+            )
+        return y.reshape(B, S, D), aux
+    f = p["ffn"]
+    from ..common import act_fn
+
+    act = act_fn(cfg.act)
+    y = act(h @ f["wg"].astype(h.dtype)) * (h @ f["wu"].astype(h.dtype))
+    return (y @ f["wd"].astype(h.dtype)), jnp.float32(0.0)
+
+
+def _sublayer_full(p, h, cfg: LMConfig, kind: LayerKind, positions):
+    """Training/prefill sub-layer over the full sequence.
+
+    Activation constraints pin batch on the data axes and heads on the model
+    axis (dropped automatically where indivisible): without them, GSPMD
+    resolves the FSDP-weight-vs-batch conflict on the ``data`` axis by
+    ALL-GATHERING ACTIVATIONS instead of weights (observed: every score
+    buffer batch-replicated, +120 GiB/device)."""
+    h = constrain(h, "batch", None, None)
+    x = rms_norm(h, p["ln1"])
+    q, k, v = _qkv(p, x, cfg)
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    v = constrain(v, "batch", None, "model", None)
+    if kind.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if cfg.seq_parallel_attn:
+        from .attention import attention_seq_parallel
+
+        o = attention_seq_parallel(
+            q, k, v,
+            kind=kind.attn, window=cfg.window, softcap=cfg.softcap_attn,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        )
+    else:
+        o = attention(
+            q, k, v,
+            kind=kind.attn, window=cfg.window, softcap=cfg.softcap_attn,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        )
+    o = constrain(o, "batch", None, "model", None)
+    h = h + jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(h.dtype))
+    h = constrain(h, "batch", None, None)
+    x = rms_norm(h, p["ln2"])
+    y, aux = _ffn_or_moe(p, x, cfg, kind)
+    return h + constrain(y, "batch", None, None), aux, (k, v)
+
+
+# ------------------------------------------------------------------- forward
+def forward(params, tokens, cfg: LMConfig, collect_cache_len: int = 0,
+            last_only: bool = False):
+    """-> (logits, aux_loss, caches|None).  tokens: (B, S) int32.
+
+    ``last_only`` skips the unembed for all but the final position (serving
+    prefill never needs the (B, S, V) logits tensor)."""
+    B, S = tokens.shape
+    kinds = cfg.sub_kinds()
+    h = params["embed"].astype(CDTYPE)[tokens]
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), CDTYPE)
+    positions = jnp.arange(S)[None, :]
+
+    def super_block(carry, block_params):
+        h, aux = carry
+        caches = {}
+        for p_i, kind in enumerate(kinds):
+            h, a, (k, v) = _sublayer_full(
+                block_params[f"sub{p_i}"], h, cfg, kind, positions
+            )
+            aux = aux + a
+            if collect_cache_len:
+                L = cfg.cache_len(kind, collect_cache_len)
+                caches[f"sub{p_i}"] = {
+                    "k": k[:, S - L:] if L < S else _pad_cache(k, L),
+                    "v": v[:, S - L:] if L < S else _pad_cache(v, L),
+                    "pos": (jnp.arange(L) + (S - L)) if L < S
+                           else _pad_pos(S, L),
+                }
+        return (h, aux), caches
+
+    block_fn = jax.checkpoint(super_block)
+    (h, aux), caches = jax.lax.scan(block_fn, (h, jnp.float32(0.0)), params["blocks"])
+    if last_only:
+        h = h[:, -1:]
+    h = rms_norm(h, params["ln_f"])
+    unembed = (params["embed"].T if cfg.tied_embeddings else params["unembed"])
+    logits = h @ unembed.astype(h.dtype)
+    logits = constrain(logits, "batch", None, "vocab")
+    if cfg.softcap_final:
+        logits = cfg.softcap_final * jnp.tanh(logits / cfg.softcap_final)
+    return logits, aux, (caches if collect_cache_len else None)
+
+
+def _pad_cache(k, L):
+    B, S = k.shape[0], k.shape[1]
+    if L == S:
+        return k
+    return jnp.pad(k, ((0, 0), (0, L - S), (0, 0), (0, 0)))
+
+
+def _pad_pos(S, L):
+    pos = jnp.arange(L, dtype=jnp.int32)
+    return jnp.where(pos < S, pos, -1)
+
+
+def lm_loss(params, batch, cfg: LMConfig, aux_coef: float = 0.01):
+    logits, aux, _ = forward(params, batch["tokens"], cfg)
+    mask = jnp.ones_like(batch["labels"], jnp.float32)
+    # last position predicts a rolled token; mask it out
+    mask = mask.at[:, -1].set(0.0)
+    return softmax_xent(logits, batch["labels"], mask) + aux_coef * aux
+
+
+# ------------------------------------------------------------------- serving
+def init_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=CDTYPE):
+    kinds = cfg.sub_kinds()
+    cache = {}
+    for p_i, kind in enumerate(kinds):
+        L = cfg.cache_len(kind, max_seq)
+        cache[f"sub{p_i}"] = {
+            "k": jnp.zeros((cfg.n_super, batch, L, cfg.n_kv_heads, cfg.d_head), dtype),
+            "v": jnp.zeros((cfg.n_super, batch, L, cfg.n_kv_heads, cfg.d_head), dtype),
+            "pos": jnp.full((cfg.n_super, L), -1, jnp.int32),
+        }
+    return cache
+
+
+def prefill(params, tokens, cfg: LMConfig, max_seq: int):
+    """Prefill: forward + cache build -> (last-position logits, caches)."""
+    logits, _, caches = forward(
+        params, tokens, cfg, collect_cache_len=max_seq, last_only=True
+    )
+    return logits, caches
+
+
+def serve_step(params, cache, tokens, cur_pos, cfg: LMConfig):
+    """One decode step.  tokens: (B, 1); cur_pos: () int32 absolute position.
+
+    -> (logits (B, 1, V), updated cache).  Caches are ring buffers: slot =
+    pos % cache_len, so SWA/chunked layers stay O(window) at any context.
+    """
+    kinds = cfg.sub_kinds()
+    B = tokens.shape[0]
+    h = params["embed"].astype(CDTYPE)[tokens]
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), CDTYPE)
+    positions = jnp.full((B, 1), cur_pos)
+
+    def super_block(h, xs):
+        block_params, block_cache = xs
+        new_cache = {}
+        for p_i, kind in enumerate(kinds):
+            p = block_params[f"sub{p_i}"]
+            c = block_cache[f"sub{p_i}"]
+            x = rms_norm(h, p["ln1"])
+            q, k, v = _qkv(p, x, cfg)
+            if kind.use_rope:
+                q = rope(q, positions, cfg.rope_theta)
+                k = rope(k, positions, cfg.rope_theta)
+            L = c["k"].shape[1]
+            slot = (cur_pos % L).astype(jnp.int32)
+            if cfg.cache_update == "masked":
+                # select-based ring write: O(L) bytes but no dynamic index on
+                # a sharded dim -- used when the cache seq axis is sharded
+                # (long_500k: 524288-slot cache over the data axis).
+                sel = (jnp.arange(L) == slot)
+                k_cache = jnp.where(sel[None, :, None, None], k, c["k"])
+                v_cache = jnp.where(sel[None, :, None, None], v, c["v"])
+                kv_pos = jnp.where(sel, cur_pos.astype(jnp.int32), c["pos"])
+            else:
+                k_cache = jax.lax.dynamic_update_slice_in_dim(c["k"], k, slot, axis=1)
+                v_cache = jax.lax.dynamic_update_slice_in_dim(c["v"], v, slot, axis=1)
+                kv_pos = jax.lax.dynamic_update_slice_in_dim(
+                    c["pos"], cur_pos[None].astype(jnp.int32), slot, axis=0
+                )
+            o = decode_attention(
+                q, k_cache, v_cache, kv_pos, cur_pos,
+                kind=kind.attn, window=cfg.window, softcap=cfg.softcap_attn,
+            )
+            h = h + jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(h.dtype))
+            x2 = rms_norm(h, p["ln2"])
+            y, _ = _ffn_or_moe(p, x2, cfg, kind)
+            h = h + y
+            new_cache[f"sub{p_i}"] = {"k": k_cache, "v": v_cache, "pos": kv_pos}
+        return h, new_cache
+
+    h, new_cache = jax.lax.scan(super_block, h, (params["blocks"], cache))
+    h = rms_norm(h, params["ln_f"])
+    unembed = (params["embed"].T if cfg.tied_embeddings else params["unembed"])
+    logits = h @ unembed.astype(h.dtype)
+    if cfg.softcap_final:
+        logits = cfg.softcap_final * jnp.tanh(logits / cfg.softcap_final)
+    return logits, new_cache

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts FFN with sort-based dispatch (static shapes, no (T,E,C)
+one-hot dispatch einsum -- see DESIGN.md: the GShard dispatch tensor is
+quadratic waste at pod scale, the sort+scatter path is O(T*k) and lowers to
+gather/scatter/sort ops XLA shards cleanly).
+
+Routing: top-k softmax (renormalised over the chosen experts -- Mixtral
+style; llama4's top-1 is the k=1 special case).  Capacity per expert is
+``ceil(T*k/E * capacity_factor)``; overflow tokens are dropped (their
+combine weight is zero), underflow slots compute on zeros.  A Switch-style
+load-balancing auxiliary loss is returned for the trainer.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moe_ffn", "moe_init"]
+
+from ..common import act_fn, dense_init
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, n_shared: int = 0):
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d_model, n_experts)),
+        "wg": dense_init(ks[1], (n_experts, d_model, d_ff)),
+        "wu": dense_init(ks[2], (n_experts, d_model, d_ff)),
+        "wd": dense_init(ks[3], (n_experts, d_ff, d_model)),
+    }
+    if n_shared:
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wg": dense_init(kk[0], (d_model, n_shared * d_ff)),
+            "wu": dense_init(kk[1], (d_model, n_shared * d_ff)),
+            "wd": dense_init(kk[2], (n_shared * d_ff, d_model)),
+        }
+    return p
+
+
+def moe_ffn(
+    p,
+    x: jnp.ndarray,            # (T, D) token-major
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+    token_chunk: int = 32768,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (y (T, D), aux_loss scalar).
+
+    Tokens are processed in ``token_chunk`` scan slices: the dispatch
+    buffers scale with the chunk, not the full (batch x seq) -- a 32k-token
+    prefill would otherwise build a (E, T*k*cf/E, D) buffer per layer
+    (observed 64+ GiB/device for mixtral prefill_32k)."""
+    T = x.shape[0]
+    if T > token_chunk and T % token_chunk == 0:
+        nb = T // token_chunk
+        xb = x.reshape(nb, token_chunk, -1)
+
+        def body(aux, xc):
+            y, a = _moe_ffn_chunk(p, xc, top_k, capacity_factor, act)
+            return aux + a, y
+
+        aux, yb = jax.lax.scan(body, jnp.float32(0.0), xb)
+        return yb.reshape(T, -1), aux / nb
+    return _moe_ffn_chunk(p, x, top_k, capacity_factor, act)
+
+
+def _moe_ffn_chunk(p, x, top_k, capacity_factor, act, annotate=True):
+    T, D = x.shape
+    E = p["router"].shape[1]
+    f = act_fn(act)
+
+    logits = (x.astype(jnp.float32)) @ p["router"].astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, top_k)                 # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * sum_e fraction_routed_e * mean_prob_e
+    me = probs.mean(0)                                           # (E,)
+    assign = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32).mean(0)
+    aux = E * jnp.sum(assign * me)
+
+    # ---- sort-based dispatch --------------------------------------------
+    C = max(1, math.ceil(T * top_k / E * capacity_factor))
+    e_flat = idx.reshape(-1)                                     # (T*k,)
+    tok_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+    order = jnp.argsort(e_flat)                                  # stable-enough
+    e_sorted = e_flat[order]
+    tok_sorted = tok_flat[order]
+    start = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")
+    rank = jnp.arange(T * top_k) - start[e_sorted]
+    keep = rank < C
+    slot = jnp.where(keep, e_sorted * C + rank, E * C)           # E*C = drop bin
+
+    from repro.dist.annotate import constrain
+
+    # NOTE: these constraints pin the intended token sharding of the
+    # permuted buffers, but measured (EXPERIMENTS.md §Perf A4) they do NOT
+    # stop GSPMD replicating the data-dependent gather/scatter -- the real
+    # fix is shard-local dispatch + explicit all-to-all under shard_map,
+    # logged as the next iteration.
+    cst = constrain if annotate else (lambda t, *a: t)
+    xg = cst(x[tok_sorted], "batch", None)
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].set(
+        xg, mode="drop"
+    )[: E * C].reshape(E, C, D)
+    # expert-shard the dispatch buffer: tokens-sharded -> expert-sharded is
+    # the MoE all-to-all; without the constraint the buffer replicates.
+    buf = cst(buf, "expert", None, None)
+
+    # ---- expert FFNs (batched over E) -----------------------------------
+    h = f(
+        jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    ) * jnp.einsum("ecd,edf->ecf", buf, p["wu"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    out_buf = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype),
+                         p["wd"].astype(x.dtype),
+                         preferred_element_type=jnp.float32)     # (E, C, D)
+    out_buf = cst(out_buf, "expert", None, None)
+
+    # ---- combine ---------------------------------------------------------
+    y_sorted = cst(
+        jnp.where(
+            keep[:, None],
+            out_buf.reshape(E * C, D)[jnp.minimum(slot, E * C - 1)],
+            0.0,
+        ),
+        "batch", None,
+    )
+    gates_sorted = gate_vals.reshape(-1)[order][:, None]
+    y_flat = jnp.zeros((T * top_k, D), jnp.float32).at[order].set(
+        y_sorted * gates_sorted
+    )
+    y = cst(y_flat.reshape(T, top_k, D).sum(1).astype(x.dtype),
+            "batch", None)
+
+    if "shared" in p:
+        sp = p["shared"]
+        sh = f(x @ sp["wg"].astype(x.dtype)) * (x @ sp["wu"].astype(x.dtype))
+        y = y + (sh @ sp["wd"].astype(x.dtype)).astype(x.dtype)
+    return y, aux

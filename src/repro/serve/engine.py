@@ -1,0 +1,90 @@
+"""Batched request serving for the vector-search index.
+
+A real deployment fronts the TPU program with a request batcher: incoming
+query vectors are buffered until ``max_batch`` or ``max_wait_s`` (whichever
+first), padded to the compiled batch shape, executed as ONE jitted search,
+and scattered back to their futures.  This mirrors the paper's observation
+(Table 3) that parallel querying trades per-request latency for throughput --
+here the trade is explicit: batch 1 = lowest latency, batch N = N-fold
+throughput at ~constant step time (the TPU is batch-insensitive until the
+code-match stream saturates HBM).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TrimFilter, VectorIndex
+
+__all__ = ["BatchedSearchEngine"]
+
+
+class BatchedSearchEngine:
+    def __init__(
+        self,
+        index: VectorIndex,
+        batch_size: int = 32,
+        max_wait_s: float = 0.005,
+        k: int = 10,
+        page: int = 320,
+        trim: Optional[TrimFilter] = TrimFilter(0.05),
+        engine: str = "codes",
+    ):
+        self.index = index
+        self.batch_size = batch_size
+        self.max_wait_s = max_wait_s
+        self.k, self.page, self.trim, self.engine = k, page, trim, engine
+        self._lock = threading.Condition()
+        self._queue: List[Tuple[np.ndarray, Future]] = []
+        self._stop = False
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    # ------------------------------------------------------------------ API
+    def submit(self, query_vec: np.ndarray) -> Future:
+        fut: Future = Future()
+        with self._lock:
+            self._queue.append((np.asarray(query_vec, np.float32), fut))
+            self._lock.notify()
+        return fut
+
+    def search(self, query_vec: np.ndarray, timeout: float = 10.0):
+        return self.submit(query_vec).result(timeout=timeout)
+
+    def close(self):
+        with self._lock:
+            self._stop = True
+            self._lock.notify()
+        self._worker.join()
+
+    # --------------------------------------------------------------- worker
+    def _run(self):
+        while True:
+            with self._lock:
+                deadline = time.monotonic() + self.max_wait_s
+                while (len(self._queue) < self.batch_size and not self._stop
+                       and (not self._queue or time.monotonic() < deadline)):
+                    self._lock.wait(timeout=self.max_wait_s)
+                if self._stop and not self._queue:
+                    return
+                batch = self._queue[: self.batch_size]
+                del self._queue[: len(batch)]
+            if not batch:
+                continue
+            qs = np.stack([q for q, _ in batch])
+            pad = self.batch_size - qs.shape[0]
+            if pad:
+                qs = np.concatenate([qs, np.zeros((pad, qs.shape[1]), qs.dtype)])
+            ids, scores = self.index.search(
+                jnp.asarray(qs), k=self.k, page=self.page, trim=self.trim,
+                engine=self.engine,
+            )
+            ids, scores = np.asarray(ids), np.asarray(scores)
+            for i, (_, fut) in enumerate(batch):
+                fut.set_result((ids[i], scores[i]))

@@ -1,0 +1,12 @@
+from .checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint, save_checkpoint
+from .compression import compressed_psum, ef_topk_step, int8_dequantize, int8_quantize
+from .grad import make_train_step
+from .loop import TrainLoopConfig, run_train_loop
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update, cosine_schedule
+
+__all__ = [
+    "AsyncCheckpointer", "latest_step", "restore_checkpoint", "save_checkpoint",
+    "compressed_psum", "ef_topk_step", "int8_dequantize", "int8_quantize",
+    "make_train_step", "TrainLoopConfig", "run_train_loop",
+    "AdamWConfig", "AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+]

@@ -1,0 +1,46 @@
+"""Elastic re-scaling: move (params, opt_state) between meshes.
+
+Elasticity at pod scale = the ability to continue a run on a different device
+count/topology (192 chips after losing a host; 2 pods after a scale-up).  In
+GSPMD-land that is a pure re-layout problem: the logical pytree is unchanged,
+only the shardings move.  ``reshard_tree`` re-places every leaf under the
+target mesh+rule; device-count changes that divide the sharded axes need no
+host round-trip (``jax.device_put`` moves shards directly); anything else
+falls back to a host gather + re-scatter, which is exactly the
+checkpoint-restore path (train/checkpoint.py) -- the two share semantics by
+design: **elastic resize == checkpoint save + restore onto the new mesh**,
+minus the disk.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["reshard_tree", "resize_data_axis"]
+
+
+def reshard_tree(tree: Any, mesh: Mesh, rule: Callable[[tuple, Any], P]) -> Any:
+    """Re-place every leaf on ``mesh`` with the PartitionSpec from ``rule``.
+
+    rule(path, leaf) -> PartitionSpec.  Works across meshes of different
+    sizes/shapes (the GSPMD resharding path; cross-mesh transfers fall back
+    to host if needed).
+    """
+    def place(path, leaf):
+        spec = rule(path, leaf)
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(place, tree)
+
+
+def resize_data_axis(tree: Any, old_mesh: Mesh, new_mesh: Mesh,
+                     rule: Callable[[tuple, Any], P]) -> Any:
+    """Continue a run on a resized mesh (e.g. 256 -> 192 chips).
+
+    Shardings whose axes divide the new mesh move device-to-device; others
+    bounce through host memory -- identical end state either way.
+    """
+    return reshard_tree(tree, new_mesh, rule)

@@ -1,0 +1,81 @@
+"""Train-step factory: microbatch gradient accumulation + AdamW update.
+
+``make_train_step(loss_fn, cfg, accum)`` returns a jittable
+``train_step(params, opt_state, batch) -> (params, opt_state, metrics)``.
+With ``accum > 1`` the global batch is split on its leading axis and scanned;
+XLA overlaps each microbatch's gradient ``psum`` with the next microbatch's
+compute (async collectives), which is the standard DP comm/compute overlap.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adafactor_update,
+    adamw_update,
+    global_norm,
+)
+
+__all__ = ["make_train_step"]
+
+
+def _split_batch(batch, accum: int):
+    """Split the global batch into ``accum`` microbatches, scan-ready.
+
+    Reshape (B, ...) -> (B/accum, accum, ...) THEN swap to (accum, B/accum,
+    ...): the microbatch rows stay contiguous *per device*, so the data-axis
+    sharding of dim 0 survives as a sharding of dim 1 (a transpose of a
+    sharding is metadata-only).  The naive ``reshape(accum, B/accum, ...)``
+    mis-aligns device boundaries and GSPMD silently REPLICATES every
+    microbatch (observed: +200 GiB/device in the dry-run memory analysis).
+    """
+    def f(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape(b // accum, accum, *x.shape[1:]).swapaxes(0, 1)
+    return jax.tree.map(f, batch)
+
+
+def make_train_step(
+    loss_fn: Callable,            # loss_fn(params, microbatch) -> scalar
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    accum: int = 1,
+    lr_schedule: Optional[Callable] = None,
+    optimizer: str = "adamw",     # adamw | adafactor
+):
+    grad_fn = jax.value_and_grad(loss_fn)
+    update = {"adamw": adamw_update, "adafactor": adafactor_update}[optimizer]
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if accum == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            micro = _split_batch(batch, accum)
+
+            def body(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = grad_fn(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zero_g), micro)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+
+        lr_scale = lr_schedule(opt_state.step) if lr_schedule else 1.0
+        new_params, new_state = update(grads, opt_state, params, opt_cfg, lr_scale)
+        metrics = {"loss": loss, "grad_norm": global_norm(grads),
+                   "lr_scale": jnp.asarray(lr_scale, jnp.float32)}
+        return new_params, new_state, metrics
+
+    return train_step

@@ -1,0 +1,167 @@
+"""AdamW with global-norm clipping and cosine schedule, pure pytree ops.
+
+Optimizer states mirror param shardings (and can additionally be sharded
+ZeRO-1 style over the data axis via dist/sharding.py rules), so the dry-run
+memory analysis accounts for them faithfully.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "AdafactorState", "adafactor_init", "adafactor_update",
+           "cosine_schedule", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    cfg: AdamWConfig,
+    lr_scale: jnp.ndarray | float = 1.0,
+) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, state.nu, grads)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return (p.astype(jnp.float32)
+                - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p)
+                ).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+# --------------------------------------------------------------- Adafactor
+# Factored second moments (Shazeer & Stern, arXiv:1804.04235), no momentum --
+# the T5/PaLM memory recipe.  Required here to fit the 400B llama4-maverick
+# optimizer state into v5e HBM (AdamW f32 moments alone would be ~12 GB/chip
+# at 256-way sharding; factored states are ~params/d_ff).
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any    # row second moment: shape[:-1]   (ndim>=2 leaves)
+    vc: Any    # col second moment: shape[:-2] + (shape[-1],)
+    v: Any     # full second moment for 0/1-D leaves
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    zr = lambda p: (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+                    else jnp.zeros((), jnp.float32))
+    zc = lambda p: (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p) else jnp.zeros((), jnp.float32))
+    zv = lambda p: (jnp.zeros((), jnp.float32) if _factored(p)
+                    else jnp.zeros_like(p, dtype=jnp.float32))
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(zr, params),
+        vc=jax.tree.map(zc, params),
+        v=jax.tree.map(zv, params),
+    )
+
+
+def adafactor_update(
+    grads, state: AdafactorState, params, cfg: AdamWConfig,
+    lr_scale: jnp.ndarray | float = 1.0,
+) -> Tuple[Any, AdafactorState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** -0.8                    # Adafactor's schedule
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, vr, vc, v):
+        g = g.astype(jnp.float32) * clip
+        g2 = g * g + 1e-30
+        if _factored(p):
+            vr_n = beta2 * vr + (1 - beta2) * g2.mean(-1)
+            vc_n = beta2 * vc + (1 - beta2) * g2.mean(-2)
+            denom = (
+                vr_n[..., None] * vc_n[..., None, :]
+                / jnp.maximum(vr_n.mean(-1)[..., None, None], 1e-30)
+            )
+            u = g * jax.lax.rsqrt(denom + 1e-30)
+            v_n = v
+        else:
+            v_n = beta2 * v + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(v_n + 1e-30)
+            vr_n, vc_n = vr, vc
+        # update clipping (RMS(u) <= 1)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u)
+        new_p = (p.astype(jnp.float32) - lr * (u + cfg.weight_decay * p)).astype(p.dtype)
+        return new_p, vr_n, vc_n, v_n
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_vr = treedef.flatten_up_to(state.vr)
+    flat_vc = treedef.flatten_up_to(state.vc)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(*args) for args in zip(flat_p, flat_g, flat_vr, flat_vc, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_state = AdafactorState(
+        step=step,
+        vr=jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]),
+        vc=jax.tree_util.tree_unflatten(treedef, [o[2] for o in out]),
+        v=jax.tree_util.tree_unflatten(treedef, [o[3] for o in out]),
+    )
+    return new_params, new_state
+
+
+def cosine_schedule(warmup: int, total: int, floor: float = 0.1) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+    return fn

@@ -1,0 +1,172 @@
+"""Per-assigned-architecture smoke tests: REDUCED configs, real arrays, one
+forward/train step on CPU, asserting output shapes and no NaNs (the FULL
+configs are exercised only via the dry-run).  Also checks, for every
+(arch x shape) cell, that the in_specs tree matches the abstract args tree
+-- the cheap structural half of the dry-run contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, arch_shapes, get_arch
+from repro.data import lm_batch, random_graph, recsys_batch
+from repro.models.transformer import model as lm
+
+rng = np.random.default_rng(0)
+
+LM_IDS = ["llama4-maverick-400b-a17b", "mixtral-8x22b", "gemma2-27b",
+          "starcoder2-3b", "qwen2-0.5b"]
+RS_IDS = ["xdeepfm", "autoint", "din", "bst"]
+
+
+@pytest.mark.parametrize("arch_id", LM_IDS)
+def test_lm_smoke_forward_and_train(arch_id):
+    arch = get_arch(arch_id)
+    cfg = arch.smoke()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {k: jnp.asarray(v) for k, v in
+             lm_batch(rng, batch=4, seq=32, vocab=cfg.vocab).items()}
+    logits, aux, _ = lm.forward(params, batch["tokens"], cfg)
+    assert logits.shape == (4, 32, cfg.vocab)
+    assert not jnp.isnan(logits.astype(jnp.float32)).any()
+    loss = lm.lm_loss(params, batch, cfg)
+    assert jnp.isfinite(loss)
+    grads = jax.grad(lm.lm_loss)(params, batch, cfg)
+    gn = jax.tree_util.tree_reduce(
+        lambda a, g: a + float(jnp.abs(g.astype(jnp.float32)).sum()), grads, 0.0)
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch_id", LM_IDS)
+def test_lm_smoke_decode_matches_forward(arch_id):
+    arch = get_arch(arch_id)
+    cfg = arch.smoke()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0) if cfg.moe_experts else cfg
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, size=(2, 32)).astype(np.int32))
+    logits, _, _ = lm.forward(params, tokens, cfg)
+    _, cache = lm.prefill(params, tokens, cfg, max_seq=32)
+    step_logits, _ = lm.serve_step(params, cache, tokens[:, -1:], jnp.int32(31), cfg)
+    ref = logits[:, 31].astype(jnp.float32)
+    got = step_logits[:, 0].astype(jnp.float32)
+    rel = float(jnp.abs(got - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < 0.05, rel   # bf16 accumulation noise
+
+
+def test_lm_masked_cache_update_equivalent():
+    import dataclasses
+    cfg = get_arch("qwen2-0.5b").smoke()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, size=(2, 16)).astype(np.int32))
+    _, cache = lm.prefill(params, tokens, cfg, max_seq=16)
+    l1, c1 = lm.serve_step(params, cache, tokens[:, -1:], jnp.int32(15), cfg)
+    cfg2 = dataclasses.replace(cfg, cache_update="masked")
+    l2, c2 = lm.serve_step(params, cache, tokens[:, -1:], jnp.int32(15), cfg2)
+    np.testing.assert_allclose(np.asarray(l1, np.float32), np.asarray(l2, np.float32),
+                               rtol=2e-2, atol=1e-2)
+    for key in c1:
+        np.testing.assert_array_equal(np.asarray(c1[key]["pos"]), np.asarray(c2[key]["pos"]))
+
+
+def test_gin_smoke_all_modes():
+    from repro.models.gnn import gin
+    arch = get_arch("gin-tu")
+    for shape in ["full_graph_sm", "molecule"]:
+        cfg = arch.cfg_for(shape)
+        import dataclasses
+        cfg = dataclasses.replace(cfg, d_in=12, n_classes=3)
+        params = gin.init_params(jax.random.PRNGKey(0), cfg)
+        if shape == "molecule":
+            batch = {
+                "x": jnp.asarray(rng.normal(size=(4, 10, 12)).astype(np.float32)),
+                "edge_src": jnp.asarray(rng.integers(-1, 10, size=(4, 20)).astype(np.int32)),
+                "edge_dst": jnp.asarray(rng.integers(-1, 10, size=(4, 20)).astype(np.int32)),
+                "node_mask": jnp.ones((4, 10)),
+                "labels": jnp.asarray(rng.integers(0, 3, size=4)),
+            }
+            loss = gin.graph_loss(params, batch, cfg)
+        else:
+            g = random_graph(rng, 50, 200, 12, 3)
+            batch = {k: jnp.asarray(v) for k, v in g.items()}
+            loss = gin.node_loss(params, batch, cfg)
+        assert jnp.isfinite(loss), shape
+
+
+def test_gin_neighbor_sampler_block_trains():
+    from repro.models.gnn import gin
+    from repro.models.gnn.sampler import build_csr, sample_block
+    cfg = get_arch("gin-tu").cfg_for("minibatch_lg")
+    import dataclasses
+    cfg = dataclasses.replace(cfg, d_in=8, n_classes=4)
+    g = random_graph(rng, 200, 2000, 8, 4)
+    csr = build_csr(200, g["edge_src"], g["edge_dst"], g["x"], g["labels"])
+    blk = sample_block(csr, np.arange(16), (5, 3), rng)
+    assert blk["x"].shape[0] == 16 + 16 * 5 + 16 * 15
+    batch = {k: jnp.asarray(v) for k, v in blk.items()}
+    loss = gin.node_loss(params=gin.init_params(jax.random.PRNGKey(1), cfg),
+                         batch=batch, cfg=cfg)
+    assert jnp.isfinite(loss)
+
+
+@pytest.mark.parametrize("arch_id", RS_IDS)
+def test_recsys_smoke(arch_id):
+    arch = get_arch(arch_id)
+    cfg = arch.smoke_cfg
+    params = arch.init_fn(jax.random.PRNGKey(0), cfg)
+    if arch.seq:
+        b = recsys_batch(rng, 16, 1, [cfg.item_vocab], seq_len=cfg.seq_len)
+    else:
+        b = recsys_batch(rng, 16, cfg.n_sparse, cfg.vocab_sizes)
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    logits = arch.forward_fn(params, batch, cfg)
+    assert logits.shape == (16,)
+    assert not jnp.isnan(logits).any()
+    from repro.models.recsys.models import bce_loss
+    g = jax.grad(lambda p: bce_loss(arch.forward_fn, p, batch, cfg))(params)
+    assert jax.tree_util.tree_reduce(
+        lambda a, x: a and bool(jnp.isfinite(x).all()), g, True)
+    u = arch.user_fn(params, batch, cfg)
+    assert u.shape == (16, cfg.embed_dim)
+
+
+@pytest.mark.parametrize("arch_id", RS_IDS)
+def test_recsys_retrieval_integration(arch_id):
+    """The paper's two-phase search as the recsys candidate generator."""
+    from repro.serve.retrieval import (brute_force_retrieval, encode_candidates,
+                                       retrieval_step)
+    arch = get_arch(arch_id)
+    cfg = arch.smoke_cfg
+    params = arch.init_fn(jax.random.PRNGKey(0), cfg)
+    if arch.seq:
+        b = recsys_batch(rng, 4, 1, [cfg.item_vocab], seq_len=cfg.seq_len)
+    else:
+        b = recsys_batch(rng, 4, cfg.n_sparse, cfg.vocab_sizes)
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    u = arch.user_fn(params, batch, cfg)
+    cand = jnp.asarray(rng.normal(size=(2000, cfg.embed_dim)).astype(np.float32))
+    vecs, codes = encode_candidates(cand)
+    ids, scores = retrieval_step(u, vecs, codes, page=2000, k=10)
+    gold_ids, gold_s = brute_force_retrieval(u, vecs, k=10)
+    assert (np.asarray(ids) == np.asarray(gold_ids)).all()  # page=N: exact
+
+
+def test_all_cells_spec_structure():
+    """Every (arch x shape) cell's in_specs tree must match its args tree."""
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(1, 1)
+    for arch_id in ARCH_IDS:
+        arch = get_arch(arch_id)
+        for shape in arch_shapes(arch_id):
+            cell = arch.cell(shape, mesh)
+            if cell is None:
+                continue
+            assert len(cell.args) == len(cell.in_specs), (arch_id, shape)
+            for a, s in zip(cell.args, cell.in_specs):
+                jax.tree.map(lambda *_: None, a, s)  # raises on mismatch
+
+
+def test_qwen2_long500k_skipped_by_rule():
+    assert "long_500k" not in arch_shapes("qwen2-0.5b")
+    assert len(arch_shapes("qwen2-0.5b")) == 3

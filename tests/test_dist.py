@@ -1,0 +1,171 @@
+"""Distribution layer: sharding rules, annotations, elastic resharding,
+HLO analysis, serving engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.dist.annotate import constrain, use_mesh
+from repro.dist.sharding import (
+    batch_axes,
+    generic_param_spec,
+    lm_param_spec,
+    opt_state_spec,
+    tree_specs,
+)
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+
+
+class FakeMesh:
+    """Shape-only stand-in so spec rules are testable without 512 devices."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _leaf(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+class TestLMSpecs:
+    def test_divisible_heads_get_model_axis(self):
+        spec = lm_param_spec((jax.tree_util.DictKey("wq"),), _leaf((23, 4608, 32, 128)), MESH1)
+        assert spec == P(None, "data", "model", None)
+
+    def test_indivisible_heads_fall_back_to_fsdp_only(self):
+        spec = lm_param_spec((jax.tree_util.DictKey("wq"),), _leaf((24, 896, 14, 64)), MESH1)
+        assert spec == P(None, "data", None, None)
+
+    def test_moe_expert_parallel_when_divisible(self):
+        spec = lm_param_spec((jax.tree_util.DictKey("wg"),), _leaf((12, 128, 5120, 8192)), MESH1)
+        assert spec == P(None, "model", None, "data")
+
+    def test_moe_tp_fallback_mixtral(self):
+        spec = lm_param_spec((jax.tree_util.DictKey("wg"),), _leaf((56, 8, 6144, 16384)), MESH1)
+        assert spec == P(None, None, "data", "model")
+
+    def test_embed_never_vocab_sharded(self):
+        spec = lm_param_spec((jax.tree_util.DictKey("embed"),), _leaf((256000, 4608)), MESH1)
+        assert spec[0] is None  # d_model sharding only (gather-safe)
+
+    def test_every_arch_leaf_divides_both_meshes(self):
+        """No spec may request an indivisible shard on either mesh."""
+        for arch_id in ["llama4-maverick-400b-a17b", "mixtral-8x22b", "gemma2-27b",
+                        "starcoder2-3b", "qwen2-0.5b"]:
+            arch = get_arch(arch_id)
+            pa = arch.params_abstract()
+            for mesh in (MESH1, MESH2):
+                specs = tree_specs(pa, mesh, lm_param_spec)
+
+                def check(leaf, spec):
+                    parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+                    for dim, axes in enumerate(parts):
+                        if axes is None:
+                            continue
+                        axes = axes if isinstance(axes, tuple) else (axes,)
+                        n = int(np.prod([mesh.shape[a] for a in axes]))
+                        assert leaf.shape[dim] % n == 0, (arch_id, leaf.shape, spec)
+
+                jax.tree.map(check, pa, specs)
+
+    def test_opt_state_spec_drops_dims(self):
+        assert opt_state_spec(P(None, "model", None, "data"), 4, "vr") == P(None, "model", None)
+        assert opt_state_spec(P(None, "model", None, "data"), 4, "vc") == P(None, "model", "data")
+
+
+class TestGenericSpecs:
+    def test_embedding_table_row_sharded(self):
+        spec = generic_param_spec((jax.tree_util.DictKey("table"),), _leaf((1048576 * 39, 10)), MESH1)
+        assert spec == P("model", None)
+
+    def test_small_leaves_replicate(self):
+        spec = generic_param_spec((jax.tree_util.DictKey("w"),), _leaf((64, 128)), MESH1)
+        assert spec == P()
+
+
+class TestAnnotate:
+    def test_noop_without_mesh(self):
+        x = jnp.ones((8, 4))
+        assert constrain(x, "batch", None) is x
+
+    def test_constrains_under_mesh(self):
+        mesh = make_local_mesh(1, 1)
+        with use_mesh(mesh):
+            out = jax.jit(lambda x: constrain(x, "batch", None))(jnp.ones((8, 4)))
+        assert out.shape == (8, 4)
+
+    def test_indivisible_dims_dropped(self):
+        mesh = make_local_mesh(1, 1)
+        with use_mesh(mesh):
+            x = jnp.ones((7, 3))
+            out = constrain(x, "batch", "model")  # neither divides -> no-op spec
+            assert out.shape == (7, 3)
+
+
+class TestHloAnalysis:
+    def test_dot_flops_exact(self):
+        comp = jax.jit(lambda a, b: a @ b).lower(
+            jax.ShapeDtypeStruct((32, 64), jnp.float32),
+            jax.ShapeDtypeStruct((64, 16), jnp.float32)).compile()
+        out = analyze_hlo(comp.as_text())
+        assert out["dot_flops"] == 2 * 32 * 64 * 16
+
+    def test_scan_multiplier(self):
+        def f(w, xs):
+            def body(c, x):
+                return c, x @ w
+            _, ys = jax.lax.scan(body, 0.0, xs)
+            return ys.sum()
+        comp = jax.jit(f).lower(jax.ShapeDtypeStruct((16, 16), jnp.float32),
+                                jax.ShapeDtypeStruct((7, 8, 16), jnp.float32)).compile()
+        out = analyze_hlo(comp.as_text())
+        assert out["dot_flops"] == 7 * 2 * 8 * 16 * 16
+
+    def test_nested_scan_multiplier(self):
+        def f(w, xs):
+            def outer(c, x):
+                def inner(ci, xi):
+                    return ci, xi @ w
+                _, ys = jax.lax.scan(inner, 0.0, x)
+                return c, ys.sum()
+            _, out = jax.lax.scan(outer, 0.0, xs)
+            return out.sum()
+        comp = jax.jit(f).lower(jax.ShapeDtypeStruct((16, 16), jnp.float32),
+                                jax.ShapeDtypeStruct((3, 5, 8, 16), jnp.float32)).compile()
+        out = analyze_hlo(comp.as_text())
+        assert out["dot_flops"] == 3 * 5 * 2 * 8 * 16 * 16
+
+
+class TestElastic:
+    def test_reshard_between_meshes(self):
+        from repro.train.elastic import reshard_tree
+        m1 = make_local_mesh(1, 1)
+        tree = {"w": jnp.arange(16.0).reshape(4, 4), "s": jnp.float32(3)}
+        out = reshard_tree(tree, m1, lambda path, leaf: P())
+        assert (np.asarray(out["w"]) == np.asarray(tree["w"])).all()
+
+
+class TestServeEngine:
+    def test_batched_engine_end_to_end(self):
+        from repro.core import VectorIndex
+        from repro.serve.engine import BatchedSearchEngine
+        rng = np.random.default_rng(0)
+        V = rng.normal(size=(300, 16)).astype(np.float32)
+        idx = VectorIndex.build(V)
+        eng = BatchedSearchEngine(idx, batch_size=4, k=5, page=300, trim=None)
+        try:
+            futs = [eng.submit(V[i]) for i in range(8)]
+            for i, f in enumerate(futs):
+                ids, scores = f.result(timeout=30)
+                assert ids[0] == i  # self-retrieval at page=N
+        finally:
+            eng.close()

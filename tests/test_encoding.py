@@ -1,0 +1,115 @@
+"""Encoding + token tests, including the paper's exact §2.2.1 examples."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import (
+    CombinedEncoder,
+    IntervalEncoder,
+    RoundingEncoder,
+    smallest_int_dtype,
+)
+from repro.core.tokens import tokens_for_vector
+from repro.core.filtering import BestFilter, TrimFilter
+
+W = np.array([0.12, -0.13, 0.065])
+
+
+class TestPaperExamples:
+    def test_rounding_p2(self):
+        assert tokens_for_vector(W, RoundingEncoder(2)) == [
+            "0P2i0d12", "1P2ineg0d13", "2P2i0d07",
+        ]
+
+    def test_interval_i10(self):
+        assert tokens_for_vector(W, IntervalEncoder(0.1)) == [
+            "0I10i0d1", "1I10ineg0d2", "2I10i0d0",
+        ]
+
+    def test_combined_p3_i5(self):
+        enc = CombinedEncoder(RoundingEncoder(3), IntervalEncoder(0.2))
+        assert tokens_for_vector(W, enc) == [
+            "0P3i0d120", "1P3ineg0d130", "2P3i0d065",
+            "0I5i0d0", "1I5ineg0d2", "2I5i0d0",
+        ]
+
+    def test_trim_drops_third_feature(self):
+        # paper: |0.065| < 0.1 so the third feature's tokens are removed
+        toks = tokens_for_vector(W, RoundingEncoder(2), trim=TrimFilter(0.1))
+        assert toks == ["0P2i0d12", "1P2ineg0d13"]
+
+    def test_best_1_keeps_largest_abs(self):
+        # paper: with best=1 only -0.13 is considered
+        toks = tokens_for_vector(W, RoundingEncoder(2), best=BestFilter(1))
+        assert toks == ["1P2ineg0d13"]
+
+
+class TestCodeProperties:
+    def test_rounding_examples(self):
+        codes = np.asarray(RoundingEncoder(2).encode(jnp.asarray(W)))
+        assert codes.tolist() == [12, -13, 7]
+
+    def test_interval_examples(self):
+        codes = np.asarray(IntervalEncoder(0.1).encode(jnp.asarray(W)))
+        assert codes.tolist() == [1, -2, 0]
+
+    def test_dtype_selection(self):
+        assert RoundingEncoder(2).code_dtype == np.int8
+        assert RoundingEncoder(3).code_dtype == np.int16
+        assert IntervalEncoder(0.1).code_dtype == np.int8
+        assert smallest_int_dtype(127) == np.int8
+        assert smallest_int_dtype(128) == np.int16
+        assert smallest_int_dtype(40000) == np.int32
+
+    def test_combined_concat_layout(self):
+        enc = CombinedEncoder(RoundingEncoder(2), IntervalEncoder(0.1))
+        codes = np.asarray(enc.encode(jnp.asarray(W)))
+        assert codes.shape == (6,)
+        assert codes[:3].tolist() == [12, -13, 7]
+        assert codes[3:].tolist() == [1, -2, 0]
+        assert enc.column_feature(3).tolist() == [0, 1, 2, 0, 1, 2]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-1, 1, allow_nan=False, width=32), st.integers(1, 3))
+def test_rounding_bucket_stability(x, p):
+    """Two values in the same rounding cell encode to the same bucket."""
+    enc = RoundingEncoder(p)
+    c = int(enc.encode(jnp.float32(x)))
+    # the cell center must round back to the same bucket
+    assert int(enc.encode(jnp.float32(c / enc.scale))) == c
+    # bucket error is at most half a cell
+    assert abs(c / enc.scale - x) <= 0.5 / enc.scale + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.floats(-1, 1, allow_nan=False, width=32),
+    st.sampled_from([0.05, 0.1, 0.2, 0.25]),
+)
+def test_interval_bucket_contains_value(x, width):
+    enc = IntervalEncoder(width)
+    b = int(enc.encode(jnp.float32(x)))
+    assert b * width <= x + 1e-6 and x < (b + 1) * width + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_encoding_monotone_in_value(seed):
+    """Buckets are monotone: x <= y implies bucket(x) <= bucket(y)."""
+    rng = np.random.default_rng(seed)
+    xs = np.sort(rng.uniform(-1, 1, size=16).astype(np.float32))
+    for enc in [RoundingEncoder(2), IntervalEncoder(0.1)]:
+        codes = np.asarray(enc.encode(jnp.asarray(xs))).astype(np.int64)
+        assert (np.diff(codes) >= 0).all()
+
+
+def test_tokens_have_no_special_characters():
+    """Paper footnote 1: no '+', '-', '.', whitespace inside tokens."""
+    rng = np.random.default_rng(3)
+    x = rng.uniform(-1, 1, size=20).astype(np.float32)
+    for enc in [RoundingEncoder(2), IntervalEncoder(0.1), CombinedEncoder()]:
+        for t in tokens_for_vector(x, enc):
+            assert all(ch.isalnum() for ch in t), t

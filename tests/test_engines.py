@@ -1,0 +1,91 @@
+"""Engine equivalence: postings == codes == onehot == pallas (the key invariant).
+
+The paper's inverted index and the TPU code-match engine are two lowerings of
+the same score function (DESIGN.md §2); these tests pin that identity.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.core import VectorIndex, TrimFilter, BestFilter
+from repro.core.encoding import CombinedEncoder, IntervalEncoder, RoundingEncoder
+
+
+def _index_and_queries(seed=0, d=300, n=24, nq=6, encoder=RoundingEncoder(2)):
+    rng = np.random.default_rng(seed)
+    V = rng.normal(size=(d, n)).astype(np.float32)
+    idx = VectorIndex.build(V, encoder)
+    Q = V[:nq] + 0.05 * rng.normal(size=(nq, n)).astype(np.float32)
+    return idx, jnp.asarray(Q)
+
+
+ENCODERS = [
+    RoundingEncoder(2),
+    RoundingEncoder(3),
+    IntervalEncoder(0.1),
+    IntervalEncoder(0.05),
+    CombinedEncoder(RoundingEncoder(2), IntervalEncoder(0.1)),
+]
+
+
+@pytest.mark.parametrize("encoder", ENCODERS, ids=lambda e: e.scheme_id)
+@pytest.mark.parametrize("weighting", ["idf", "count"])
+def test_phase1_scores_identical_across_engines(encoder, weighting):
+    idx, Q = _index_and_queries(encoder=encoder)
+    q, qc, w = idx.encode_queries(Q, trim=TrimFilter(0.05), best=None, weighting=weighting)
+    ref = idx.phase1_scores(qc, w, "postings", max_postings=None)
+    for engine in ["codes", "onehot"]:
+        got = idx.phase1_scores(qc, w, engine, max_postings=None)
+        assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4,
+                        err_msg=engine)
+
+
+def test_pallas_engine_matches_postings():
+    idx, Q = _index_and_queries(d=256, n=16, nq=4)
+    q, qc, w = idx.encode_queries(Q, trim=None, best=BestFilter(8), weighting="idf")
+    ref = idx.phase1_scores(qc, w, "postings", max_postings=None)
+    got = idx.phase1_scores(qc, w, "codes_pallas", max_postings=None)
+    assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_truncated_postings_lower_bound():
+    """Capped posting windows can only lose score mass, never add it."""
+    idx, Q = _index_and_queries(d=400)
+    q, qc, w = idx.encode_queries(Q, trim=None, best=None, weighting="idf")
+    full = np.asarray(idx.phase1_scores(qc, w, "postings", max_postings=None))
+    capped = np.asarray(idx.phase1_scores(qc, w, "postings", max_postings=32))
+    assert (capped <= full + 1e-5).all()
+
+
+def test_index_side_best_filter_restricts_matches():
+    rng = np.random.default_rng(1)
+    V = rng.normal(size=(100, 16)).astype(np.float32)
+    full = VectorIndex.build(V)
+    trimmed = VectorIndex.build(V, index_best=4)
+    Q = jnp.asarray(V[:3])
+    _, qc, w = full.encode_queries(Q, None, None, "count")
+    s_full = np.asarray(full.phase1_scores(qc, w, "codes", None))
+    _, qc2, w2 = trimmed.encode_queries(Q, None, None, "count")
+    s_trim = np.asarray(trimmed.phase1_scores(qc2, w2, "codes", None))
+    assert (s_trim <= s_full + 1e-5).all()
+    assert s_trim.max() <= 4 + 1e-5  # at most 4 tokens can match per doc
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_engine_equivalence_property(seed):
+    rng = np.random.default_rng(seed)
+    d = int(rng.integers(20, 120))
+    n = int(rng.integers(4, 32))
+    V = rng.normal(size=(d, n)).astype(np.float32)
+    idx = VectorIndex.build(V, IntervalEncoder(0.1))
+    Q = jnp.asarray(rng.normal(size=(2, n)).astype(np.float32))
+    _, qc, w = idx.encode_queries(Q, TrimFilter(0.02), None, "idf")
+    a = np.asarray(idx.phase1_scores(qc, w, "postings", None))
+    b = np.asarray(idx.phase1_scores(qc, w, "codes", None))
+    c = np.asarray(idx.phase1_scores(qc, w, "onehot", None))
+    assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    assert_allclose(a, c, rtol=1e-4, atol=1e-4)

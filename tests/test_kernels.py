@@ -1,0 +1,119 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.core.encoding import CombinedEncoder, IntervalEncoder, RoundingEncoder
+from repro.core.rerank import normalize
+from repro.kernels.bucketize import ops as bk_ops
+from repro.kernels.bucketize.ref import bucketize_ref
+from repro.kernels.code_match import ops as cm_ops
+from repro.kernels.code_match.ref import code_match_ref
+from repro.kernels.rerank_topk import ops as rk_ops
+from repro.kernels.rerank_topk.ref import rerank_scores_ref
+
+
+class TestCodeMatchKernel:
+    @pytest.mark.parametrize("dtype", [np.int8, np.int16, np.int32])
+    @pytest.mark.parametrize("shape", [(64, 1, 8), (200, 3, 100), (512, 8, 128),
+                                       (700, 5, 96), (1024, 2, 17)])
+    def test_shapes_dtypes(self, dtype, shape):
+        d, q, c = shape
+        rng = np.random.default_rng(d + q + c)
+        hi = min(100, np.iinfo(dtype).max)
+        D = rng.integers(-hi, hi, size=(d, c)).astype(dtype)
+        Q = rng.integers(-hi, hi, size=(q, c)).astype(dtype)
+        W = rng.random((q, c)).astype(np.float32)
+        got = cm_ops.code_match(jnp.asarray(D), jnp.asarray(Q), jnp.asarray(W),
+                                force_pallas=True)
+        want = code_match_ref(jnp.asarray(D), jnp.asarray(Q), jnp.asarray(W))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_block_shape_invariance(self):
+        rng = np.random.default_rng(0)
+        D = rng.integers(-50, 50, size=(300, 64)).astype(np.int8)
+        Q = rng.integers(-50, 50, size=(4, 64)).astype(np.int8)
+        W = rng.random((4, 64)).astype(np.float32)
+        outs = []
+        for bq, bd, bc in [(2, 128, 32), (4, 64, 64), (1, 256, 128)]:
+            outs.append(np.asarray(cm_ops.code_match(
+                jnp.asarray(D), jnp.asarray(Q), jnp.asarray(W),
+                block_q=bq, block_d=bd, block_c=bc, force_pallas=True)))
+        for o in outs[1:]:
+            assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_property_random(self, seed):
+        rng = np.random.default_rng(seed)
+        d = int(rng.integers(1, 80))
+        q = int(rng.integers(1, 5))
+        c = int(rng.integers(1, 40))
+        D = rng.integers(-10, 10, size=(d, c)).astype(np.int8)
+        Q = rng.integers(-10, 10, size=(q, c)).astype(np.int8)
+        W = rng.random((q, c)).astype(np.float32)
+        got = cm_ops.code_match(jnp.asarray(D), jnp.asarray(Q), jnp.asarray(W),
+                                force_pallas=True)
+        want = code_match_ref(jnp.asarray(D), jnp.asarray(Q), jnp.asarray(W))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_self_match_upper_bound(self):
+        """A doc matched against itself scores the full weight sum."""
+        rng = np.random.default_rng(5)
+        D = rng.integers(-20, 20, size=(32, 24)).astype(np.int8)
+        W = rng.random((32, 24)).astype(np.float32)
+        got = np.asarray(cm_ops.code_match(
+            jnp.asarray(D), jnp.asarray(D), jnp.asarray(W), force_pallas=True))
+        assert_allclose(np.diag(got), W.sum(-1), rtol=1e-5)
+        assert (got <= W.sum(-1)[:, None] + 1e-5).all()
+
+
+class TestRerankKernel:
+    @pytest.mark.parametrize("shape", [(1, 16, 8), (3, 300, 64), (8, 512, 400),
+                                       (2, 77, 33)])
+    def test_shapes(self, shape):
+        q, p, n = shape
+        rng = np.random.default_rng(sum(shape))
+        CV = rng.normal(size=(q, p, n)).astype(np.float32)
+        QV = rng.normal(size=(q, n)).astype(np.float32)
+        got = rk_ops.rerank_scores(jnp.asarray(CV), jnp.asarray(QV), force_pallas=True)
+        want = rerank_scores_ref(jnp.asarray(CV), jnp.asarray(QV))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+    def test_topk_wrapper_matches_core(self):
+        from repro.core.rerank import rerank_topk as core_rerank
+        rng = np.random.default_rng(1)
+        V = normalize(jnp.asarray(rng.normal(size=(200, 32)).astype(np.float32)))
+        ids = jnp.asarray(rng.integers(0, 200, size=(4, 64)).astype(np.int32))
+        Q = normalize(jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32)))
+        i1, s1 = rk_ops.rerank_topk(V, ids, Q, k=5, force_pallas=True)
+        i2, s2 = core_rerank(V, ids, Q, k=5)
+        assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-5)
+
+
+class TestBucketizeKernel:
+    @pytest.mark.parametrize("mode,param,dtype", [
+        ("round", 100.0, jnp.int8),
+        ("round", 1000.0, jnp.int16),
+        ("floor", 0.1, jnp.int8),
+        ("floor", 0.05, jnp.int8),
+    ])
+    @pytest.mark.parametrize("shape", [(16, 8), (255, 40), (256, 128)])
+    def test_modes(self, mode, param, dtype, shape):
+        rng = np.random.default_rng(int(param) + sum(shape))
+        X = rng.normal(size=shape).astype(np.float32)
+        got = np.asarray(bk_ops._single(jnp.asarray(X), mode, param, dtype, 64, True))
+        want = np.asarray(bucketize_ref(jnp.asarray(X), mode, param, dtype))
+        # float-boundary cells may differ by 1 bucket on <0.01% of entries
+        assert (got == want).mean() > 0.9999
+
+    def test_encoder_integration(self):
+        rng = np.random.default_rng(9)
+        X = rng.normal(size=(100, 16)).astype(np.float32)
+        for enc in [RoundingEncoder(2), IntervalEncoder(0.1), CombinedEncoder()]:
+            got = np.asarray(bk_ops.encode(jnp.asarray(X), enc, force_pallas=True))
+            want = np.asarray(enc.encode(normalize(jnp.asarray(X))))
+            assert (got == want).mean() > 0.9999

@@ -1,0 +1,75 @@
+"""LSA substrate: tf-idf, randomized SVD vs dense numpy oracle, pipeline."""
+
+import numpy as np
+import jax.numpy as jnp
+from numpy.testing import assert_allclose
+
+from repro.data import make_corpus
+from repro.lsa import build_lsa, fit_tfidf, randomized_svd, transform
+from repro.lsa.svd import fold_in, matvec_bags, rmatvec_bags
+
+
+def _dense(terms, weights, vocab):
+    A = np.zeros((terms.shape[0], vocab), np.float32)
+    for i in range(terms.shape[0]):
+        for t, w in zip(terms[i], weights[i]):
+            if t >= 0:
+                A[i, t] += w
+    return A
+
+
+def test_matvec_oracle():
+    rng = np.random.default_rng(0)
+    terms = rng.integers(-1, 50, size=(20, 12)).astype(np.int32)
+    weights = rng.random((20, 12)).astype(np.float32) * (terms >= 0)
+    Y = rng.normal(size=(50, 7)).astype(np.float32)
+    A = _dense(terms, weights, 50)
+    got = matvec_bags(jnp.asarray(terms), jnp.asarray(weights), jnp.asarray(Y))
+    assert_allclose(np.asarray(got), A @ Y, rtol=1e-4, atol=1e-5)
+    X = rng.normal(size=(20, 7)).astype(np.float32)
+    got2 = rmatvec_bags(jnp.asarray(terms), jnp.asarray(weights), jnp.asarray(X), 50)
+    assert_allclose(np.asarray(got2), A.T @ X, rtol=1e-4, atol=1e-5)
+
+
+def test_randomized_svd_matches_numpy():
+    rng = np.random.default_rng(1)
+    d, v, k = 120, 80, 10
+    terms = rng.integers(0, v, size=(d, 16)).astype(np.int32)
+    weights = rng.random((d, 16)).astype(np.float32)
+    A = _dense(terms, weights, v)
+    model = randomized_svd(jnp.asarray(terms), jnp.asarray(weights), v, k=k,
+                           oversample=20, n_iter=6)
+    _, s_np, _ = np.linalg.svd(A, full_matrices=False)
+    assert_allclose(np.asarray(model.s), s_np[:k], rtol=1e-3)
+    # doc_vecs rows unit-normalised
+    assert_allclose(np.linalg.norm(np.asarray(model.doc_vecs), axis=1), 1.0, rtol=1e-5)
+
+
+def test_fold_in_recovers_training_docs():
+    corpus = make_corpus(n_docs=300, vocab_size=2000, n_topics=8, seed=2)
+    pipe = build_lsa(corpus, n_features=32)
+    refold = pipe.embed(jnp.asarray(corpus.doc_terms), jnp.asarray(corpus.doc_tf))
+    sims = (np.asarray(refold) * np.asarray(pipe.doc_vectors)).sum(-1)
+    assert sims.mean() > 0.98  # folding a training doc lands on its own vector
+
+
+def test_tfidf_rare_terms_weigh_more():
+    terms = jnp.asarray([[0, 1], [0, 2], [0, 3], [0, -1]])
+    tf = jnp.ones((4, 2))
+    model = fit_tfidf(terms, 4)
+    idf = np.asarray(model.idf)
+    assert idf[1] > idf[0]  # term 0 appears in 4 docs, term 1 in one
+
+
+def test_lsa_neighbours_share_topics():
+    corpus = make_corpus(n_docs=400, vocab_size=3000, n_topics=10, seed=3)
+    pipe = build_lsa(corpus, n_features=24)
+    V = np.asarray(pipe.doc_vectors)
+    sims = V @ V.T
+    np.fill_diagonal(sims, -1)
+    nn = sims.argmax(1)
+    mix = corpus.doc_topics
+    mix = mix / np.linalg.norm(mix, axis=1, keepdims=True)
+    nn_topic_sim = (mix * mix[nn]).sum(-1).mean()
+    rand_topic_sim = (mix * np.roll(mix, 37, axis=0)).sum(-1).mean()
+    assert nn_topic_sim > rand_topic_sim + 0.2

@@ -1,0 +1,111 @@
+"""Directional reproduction of the paper's empirical claims (C1-C5,
+DESIGN.md §1) on the synthetic topic corpus with a real LSA pipeline.
+
+Scaled down from 4.18M Wikipedia articles to a 3k-doc corpus; the claims are
+about curve SHAPES and orderings, which are scale-robust.  Exact paper-scale
+numbers are produced by benchmarks/table2_quality.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    BestFilter,
+    MLTIndex,
+    TrimFilter,
+    VectorIndex,
+    avg_diff,
+    ndcg_k,
+    precision_at_k,
+)
+from repro.data import make_corpus
+from repro.lsa import build_lsa
+
+
+@pytest.fixture(scope="module")
+def setup():
+    corpus = make_corpus(n_docs=3000, vocab_size=12000, n_topics=40, seed=7)
+    pipe = build_lsa(corpus, n_features=128)
+    idx = VectorIndex.build(pipe.doc_vectors)
+    nq = 32
+    Q = pipe.doc_vectors[:nq]
+    gold_ids, gold_sims = idx.gold_topk(Q, 10)
+    return corpus, pipe, idx, Q, gold_ids, gold_sims
+
+
+def test_c1_avg_diff_decreases_with_page(setup):
+    """C1: avg.diff decreases (log-like) as page grows, up to page=640."""
+    _, _, idx, Q, gold_ids, gold_sims = setup
+    diffs = []
+    for page in [20, 80, 320, 640]:
+        _, sims = idx.search(Q, k=10, page=page, trim=TrimFilter(0.05), engine="codes")
+        diffs.append(float(avg_diff(sims, gold_sims).mean()))
+    assert all(a >= b - 1e-6 for a, b in zip(diffs, diffs[1:])), diffs
+    assert diffs[0] > diffs[-1]
+
+
+def test_c2_trim_005_close_to_unfiltered(setup):
+    """C2: trim=0.05 quality ~ unfiltered quality at the same page."""
+    _, _, idx, Q, gold_ids, gold_sims = setup
+    ids_f, s_f = idx.search(Q, k=10, page=320, engine="codes")
+    ids_t, s_t = idx.search(Q, k=10, page=320, trim=TrimFilter(0.05), engine="codes")
+    p_f = float(precision_at_k(ids_f, gold_ids).mean())
+    p_t = float(precision_at_k(ids_t, gold_ids).mean())
+    assert p_t >= p_f - 0.08, (p_t, p_f)
+    # ...while touching far fewer features
+    _, _, w = idx.encode_queries(Q, TrimFilter(0.05), None, "idf")
+    kept = float((w > 0).sum(-1).mean())
+    assert kept < 0.75 * idx.n_features
+
+
+def test_c2b_aggressive_trim_is_lossy(setup):
+    """C2: trimming to very few features visibly degrades avg.diff."""
+    _, _, idx, Q, gold_ids, gold_sims = setup
+    _, s_mild = idx.search(Q, k=10, page=320, best=BestFilter(90), engine="codes")
+    _, s_aggr = idx.search(Q, k=10, page=320, best=BestFilter(6), engine="codes")
+    assert float(avg_diff(s_aggr, gold_sims).mean()) > \
+        float(avg_diff(s_mild, gold_sims).mean())
+
+
+def test_c3_beats_mlt_baseline(setup):
+    """C3: encoded-vector search beats MLT on P@10, nDCG and avg.diff."""
+    corpus, pipe, idx, Q, gold_ids, gold_sims = setup
+    nq = Q.shape[0]
+    ids_ours, sims_ours = idx.search(Q, k=10, page=320, trim=TrimFilter(0.05),
+                                     engine="codes")
+    mlt = MLTIndex.build(jnp.asarray(corpus.doc_terms), jnp.asarray(corpus.doc_tf),
+                         corpus.vocab_size)
+    ids_mlt, _ = mlt.more_like_this(jnp.asarray(corpus.doc_terms[:nq]),
+                                    jnp.asarray(corpus.doc_tf[:nq]),
+                                    max_query_terms=25, k=10)
+    V = np.asarray(idx.vectors)
+    qn = np.asarray(idx.vectors[:nq])
+    sims_mlt = jnp.asarray(np.take_along_axis(qn @ V.T, np.asarray(ids_mlt), axis=1))
+
+    assert float(precision_at_k(ids_ours, gold_ids).mean()) > \
+        float(precision_at_k(ids_mlt, gold_ids).mean())
+    assert float(ndcg_k(sims_ours, gold_sims).mean()) > \
+        float(ndcg_k(sims_mlt, gold_sims).mean())
+    assert float(avg_diff(sims_ours, gold_sims).mean()) < \
+        float(avg_diff(sims_mlt, gold_sims).mean())
+
+
+def test_c4_full_page_is_exact(setup):
+    """C4: page >= |D| makes the two-phase search identical to brute force."""
+    _, _, idx, Q, gold_ids, gold_sims = setup
+    ids, sims = idx.search(Q, k=10, page=idx.n_docs, engine="codes")
+    assert (np.asarray(ids) == np.asarray(gold_ids)).all()
+
+
+def test_c5_query_side_only_filtering(setup):
+    """C5: filters apply per-request without touching the index, and
+    different requests can use different filters."""
+    _, _, idx, Q, gold_ids, _ = setup
+    codes_before = np.asarray(idx.codes).copy()
+    p = []
+    for f in [None, TrimFilter(0.05), TrimFilter(0.2)]:
+        ids, _ = idx.search(Q, k=10, page=160, trim=f, engine="codes")
+        p.append(float(precision_at_k(ids, gold_ids).mean()))
+    assert (np.asarray(idx.codes) == codes_before).all()
+    assert p[0] >= p[2] - 1e-6  # stronger filtering never helps quality

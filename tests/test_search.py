@@ -1,0 +1,140 @@
+"""Two-phase search behaviour: exactness, filtering, metrics (paper §2.2/3.1)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.core import (
+    BestFilter,
+    TrimFilter,
+    VectorIndex,
+    avg_diff,
+    ndcg_k,
+    precision_at_k,
+)
+from repro.core.encoding import IntervalEncoder, RoundingEncoder
+from repro.core.rerank import normalize
+
+
+def _setup(seed=0, d=400, n=32, nq=8):
+    rng = np.random.default_rng(seed)
+    V = rng.normal(size=(d, n)).astype(np.float32)
+    idx = VectorIndex.build(V)
+    Q = jnp.asarray(V[:nq] + 0.02 * rng.normal(size=(nq, n)).astype(np.float32))
+    return idx, Q
+
+
+class TestExactness:
+    """Paper §2.2: with page >= |D| the two-phase search IS brute force (C4)."""
+
+    @pytest.mark.parametrize("engine", ["postings", "codes", "onehot"])
+    def test_full_page_equals_brute_force(self, engine):
+        idx, Q = _setup()
+        gold_ids, gold_s = idx.gold_topk(Q, 10)
+        ids, s = idx.search(Q, k=10, page=idx.n_docs, engine=engine)
+        assert (np.asarray(ids) == np.asarray(gold_ids)).all()
+        assert_allclose(np.asarray(s), np.asarray(gold_s), rtol=1e-5, atol=1e-6)
+
+    def test_rerank_scores_are_true_cosines(self):
+        idx, Q = _setup()
+        ids, s = idx.search(Q, k=5, page=64, trim=TrimFilter(0.05))
+        qn = np.asarray(normalize(Q))
+        V = np.asarray(idx.vectors)
+        expect = np.take_along_axis(qn @ V.T, np.asarray(ids), axis=1)
+        assert_allclose(np.asarray(s), expect, rtol=1e-4, atol=1e-5)
+
+    def test_rerank_order_descending(self):
+        idx, Q = _setup()
+        _, s = idx.search(Q, k=10, page=128)
+        s = np.asarray(s)
+        assert (np.diff(s, axis=1) <= 1e-6).all()
+
+
+class TestQualityMonotonicity:
+    """Paper C1: quality improves with page size (larger candidate set E)."""
+
+    def test_precision_increases_with_page(self):
+        idx, Q = _setup(d=600)
+        gold_ids, gold_s = idx.gold_topk(Q, 10)
+        precs = []
+        for page in [10, 40, 160, 600]:
+            ids, _ = idx.search(Q, k=10, page=page, trim=TrimFilter(0.05), engine="codes")
+            precs.append(float(precision_at_k(ids, gold_ids).mean()))
+        assert precs[-1] >= precs[0]
+        assert precs[-1] == 1.0  # page == n_docs: exact
+
+    def test_avg_diff_decreases_with_page(self):
+        idx, Q = _setup(d=600)
+        gold_ids, gold_s = idx.gold_topk(Q, 10)
+        diffs = []
+        for page in [10, 160, 600]:
+            _, s = idx.search(Q, k=10, page=page, trim=TrimFilter(0.05), engine="codes")
+            diffs.append(float(avg_diff(s, gold_s).mean()))
+        assert diffs[0] >= diffs[-1] - 1e-6
+        assert abs(diffs[-1]) < 1e-5
+
+    def test_avg_diff_nonnegative(self):
+        idx, Q = _setup()
+        gold_ids, gold_s = idx.gold_topk(Q, 10)
+        _, s = idx.search(Q, k=10, page=32, trim=TrimFilter(0.1))
+        assert float(avg_diff(s, gold_s).min()) >= -1e-5
+
+
+class TestFiltering:
+    def test_best_filter_counts(self):
+        idx, Q = _setup()
+        _, _, w = idx.encode_queries(Q, None, BestFilter(7), "count")
+        assert (np.asarray((w > 0).sum(-1)) == 7).all()
+
+    def test_trim_is_query_side_only(self):
+        """Paper §5: filtering queries alone works; index stays untouched."""
+        idx, Q = _setup()
+        codes_before = np.asarray(idx.codes).copy()
+        idx.search(Q, k=10, page=64, trim=TrimFilter(0.2))
+        assert (np.asarray(idx.codes) == codes_before).all()
+
+    def test_aggressive_trim_degrades_quality(self):
+        idx, Q = _setup(d=600)
+        gold_ids, _ = idx.gold_topk(Q, 10)
+        p_mild = float(precision_at_k(
+            idx.search(Q, 10, 64, trim=TrimFilter(0.01), engine="codes")[0], gold_ids
+        ).mean())
+        p_aggr = float(precision_at_k(
+            idx.search(Q, 10, 64, trim=TrimFilter(0.4), engine="codes")[0], gold_ids
+        ).mean())
+        assert p_mild >= p_aggr
+
+
+class TestMetrics:
+    def test_precision_at_k(self):
+        r = jnp.asarray([[1, 2, 3, 4]])
+        g = jnp.asarray([[1, 9, 3, 8]])
+        assert float(precision_at_k(r, g)[0]) == 0.5
+
+    def test_ndcg_perfect_is_one(self):
+        s = jnp.asarray([[0.9, 0.8, 0.7]])
+        assert_allclose(float(ndcg_k(s, s)[0]), 1.0, rtol=1e-6)
+
+    def test_ndcg_order(self):
+        gold = jnp.asarray([[0.9, 0.8, 0.7]])
+        worse = jnp.asarray([[0.5, 0.4, 0.3]])
+        assert float(ndcg_k(worse, gold)[0]) < 1.0
+
+    def test_avg_diff_zero_for_gold(self):
+        s = jnp.asarray([[0.9, 0.8]])
+        assert float(avg_diff(s, s)[0]) == 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([10, 40, 99]))
+def test_two_phase_never_beats_gold(seed, page):
+    """Property: retrieved cosines are <= the gold cosines rank-by-rank."""
+    rng = np.random.default_rng(seed)
+    V = rng.normal(size=(99, 16)).astype(np.float32)
+    idx = VectorIndex.build(V, IntervalEncoder(0.1))
+    Q = jnp.asarray(rng.normal(size=(3, 16)).astype(np.float32))
+    _, gold_s = idx.gold_topk(Q, 5)
+    _, s = idx.search(Q, k=5, page=page, engine="codes")
+    assert (np.asarray(s) <= np.asarray(gold_s) + 1e-5).all()
