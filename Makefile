@@ -1,0 +1,22 @@
+# Developer targets.  PYTHONPATH=src is the repo's import convention.
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test smoke-shard bench bench-full
+
+# tier-1 verify (ROADMAP.md)
+test:
+	$(PY) -m pytest -x -q
+
+# tier-1 under 4 virtual host devices: exercises every mesh/shard_map path
+# (dist annotations, moe shard-local dispatch, doc-sharded search) against
+# real multi-device lowering instead of the 1-device no-op fallbacks
+smoke-shard:
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" $(PY) -m pytest -x -q
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-full:
+	$(PY) -m benchmarks.run --full

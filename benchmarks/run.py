@@ -9,8 +9,41 @@ contract, then the roofline summary from the dry-run artifacts.
 
 from __future__ import annotations
 
+import os
+import subprocess
 import sys
 import time
+
+
+def _run_shard_scale(full: bool) -> None:
+    """benchmarks/shard_scale.py in a subprocess: the virtual-device fan-out
+    flag must precede jax initialisation, and jax is already live here.
+    Emits artifacts/BENCH_shard_scale.json (QPS + recall per shard count)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    cmd = [sys.executable, "-m", "benchmarks.shard_scale", "--shards", "1,2,4"]
+    if not full:
+        # quick-config rows are not comparable to the full trajectory; keep
+        # them out of the accumulating BENCH_shard_scale.json
+        cmd += ["--docs", "4000", "--features", "32", "--queries", "32",
+                "--json", os.path.join(root, "artifacts",
+                                       "BENCH_shard_scale_quick.json")]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep * bool(env.get("PYTHONPATH")) \
+        + env.get("PYTHONPATH", "")
+    t0 = time.perf_counter()
+    try:
+        out = subprocess.run(cmd, cwd=root, env=env, capture_output=True,
+                             text=True, timeout=1800)
+    except subprocess.TimeoutExpired:
+        print(f"shard_scale,{(time.perf_counter()-t0)*1e6:.0f},FAILED_timeout")
+        return
+    for line in out.stdout.splitlines():
+        if line.startswith("shard_scale,"):
+            print(line)
+    if out.returncode != 0:
+        print(f"shard_scale,{(time.perf_counter()-t0)*1e6:.0f},"
+              f"FAILED_rc={out.returncode}")
+        sys.stderr.write(out.stderr[-2000:])
 
 
 def main() -> None:
@@ -49,6 +82,8 @@ def main() -> None:
     t0 = time.perf_counter()
     rows_cp = complexity_probe.run(quick=quick)
     print(f"complexity_probe,{(time.perf_counter()-t0)*1e6:.0f},rows={len(rows_cp)}")
+
+    _run_shard_scale(full)
 
     t0 = time.perf_counter()
     roofline.main()

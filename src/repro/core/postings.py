@@ -21,7 +21,6 @@ same way a real engine's early-termination does.
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import NamedTuple, Optional
 

@@ -13,11 +13,25 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-__all__ = ["normalize", "rerank_topk", "brute_force_topk"]
+__all__ = ["normalize", "exact_scores", "rerank_topk", "brute_force_topk"]
 
 
 def normalize(x: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
     return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
+
+
+def exact_scores(vectors: jnp.ndarray, ids: jnp.ndarray,
+                 queries: jnp.ndarray) -> jnp.ndarray:
+    """Exact cosines of the selected ids, (Q, k) from a (Q, k, n) einsum.
+
+    Final reported scores always come from THIS shape, regardless of how the
+    candidates were scored during selection -- the einsum's reduction
+    blocking depends on the candidate-page shape, so recomputing at the
+    fixed (Q, k, n) shape is what keeps single-device and doc-sharded
+    search bit-identical (dist/shard_index.py merges through it too).
+    """
+    return jnp.einsum("qkn,qn->qk", vectors[ids], queries,
+                      preferred_element_type=jnp.float32)
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -32,9 +46,9 @@ def rerank_topk(
     scores = jnp.einsum(
         "qpn,qn->qp", cand, queries, preferred_element_type=jnp.float32
     )
-    top_scores, top_pos = jax.lax.top_k(scores, k)
+    _, top_pos = jax.lax.top_k(scores, k)
     top_ids = jnp.take_along_axis(cand_ids, top_pos, axis=1)
-    return top_ids, top_scores
+    return top_ids, exact_scores(vectors, top_ids, queries)
 
 
 @partial(jax.jit, static_argnames=("k", "block"))

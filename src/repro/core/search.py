@@ -17,7 +17,6 @@ paper's §5 recommendation -- with optional index-side ``best`` at build time.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -35,13 +34,50 @@ from .postings import (
 )
 from .rerank import brute_force_topk, normalize, rerank_topk
 
-__all__ = ["VectorIndex", "SearchParams"]
+__all__ = ["VectorIndex", "SearchParams", "phase1_engine_scores"]
 
 _SENTINEL = {  # never-matching code per dtype (outside any bucket range)
     jnp.int8.dtype: 127,
     jnp.int16.dtype: 32767,
     jnp.int32.dtype: 2**31 - 1,
 }
+
+
+def phase1_engine_scores(
+    codes: jnp.ndarray,            # (d, C) document codes
+    postings: Postings,
+    qcodes: jnp.ndarray,           # (Q, C)
+    col_weights: jnp.ndarray,      # (Q, C), 0 where the token is filtered
+    engine: str,
+    max_postings: Optional[int],
+    max_abs_bucket: int,
+) -> jnp.ndarray:
+    """Phase-1 scores (Q, d) under the chosen engine.
+
+    The single engine-dispatch point: both the single-device
+    :meth:`VectorIndex.phase1_scores` and the per-shard query phase in
+    :mod:`repro.dist.shard_index` go through here, so a new engine is
+    automatically available (and parity-testable) in both.
+    """
+    if engine == "postings":
+        L = postings.n_docs if max_postings is None else max_postings
+        return score_postings_batch(
+            postings,
+            qcodes,
+            col_weights > 0,
+            max_postings=L,
+            weighting="count",   # weights already folded into col_weights
+            col_weights=col_weights,
+        )
+    if engine == "codes":
+        return score_codes(codes, qcodes, col_weights)
+    if engine == "codes_pallas":
+        from repro.kernels.code_match import ops as cm_ops
+
+        return cm_ops.code_match(codes, qcodes, col_weights)
+    if engine == "onehot":
+        return score_onehot(codes, qcodes, col_weights, max_abs_bucket)
+    raise ValueError(f"unknown engine {engine!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,27 +168,10 @@ class VectorIndex:
         engine: str,
         max_postings: Optional[int],
     ) -> jnp.ndarray:
-        if engine == "postings":
-            L = self.n_docs if max_postings is None else max_postings
-            return score_postings_batch(
-                self.postings,
-                qcodes,
-                col_weights > 0,
-                max_postings=L,
-                weighting="count",   # weights already folded into col_weights
-                col_weights=col_weights,
-            )
-        if engine == "codes":
-            return score_codes(self.codes, qcodes, col_weights)
-        if engine == "codes_pallas":
-            from repro.kernels.code_match import ops as cm_ops
-
-            return cm_ops.code_match(self.codes, qcodes, col_weights)
-        if engine == "onehot":
-            return score_onehot(
-                self.codes, qcodes, col_weights, self.encoder.max_abs_bucket
-            )
-        raise ValueError(f"unknown engine {engine!r}")
+        return phase1_engine_scores(
+            self.codes, self.postings, qcodes, col_weights, engine,
+            max_postings, self.encoder.max_abs_bucket,
+        )
 
     # ------------------------------------------------------------------ search
     def search(
@@ -174,6 +193,15 @@ class VectorIndex:
         scores1 = self.phase1_scores(qcodes, w, engine, max_postings)
         _, cand = jax.lax.top_k(scores1, page)                  # (Q, page)
         return rerank_topk(self.vectors, cand, q, k)
+
+    # ------------------------------------------------------------------- shard
+    def shard(self, mesh) -> "ShardedVectorIndex":  # noqa: F821 (lazy import)
+        """Partition this index into per-device doc-shards over ``mesh``'s
+        ``data`` axis -> :class:`repro.dist.shard_index.ShardedVectorIndex`
+        (same ``search`` contract; bit-identical for ``page >= n_docs``)."""
+        from repro.dist.shard_index import ShardedVectorIndex
+
+        return ShardedVectorIndex.from_index(self, mesh)
 
     def gold_topk(self, queries: jnp.ndarray, k: int = 10):
         """Paper's gold standard: brute-force cosine scan over all vectors."""

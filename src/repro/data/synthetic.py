@@ -15,7 +15,6 @@ tests (LM token streams, recsys click batches, random graphs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import numpy as np
 

@@ -1,0 +1,62 @@
+"""Distribution subsystem: mesh annotations, sharding rules, doc-sharded search.
+
+The paper's production story is an Elasticsearch cluster: one logical index
+split into *doc-shards*, each shard scored independently, per-shard top
+candidates merged by the coordinating node.  This package is that story
+re-expressed over a JAX device mesh -- every piece maps onto an ES concept:
+
+===========================  ====================================================
+this package                 Elasticsearch analogue
+===========================  ====================================================
+:mod:`~repro.dist.annotate`  node roles / routing awareness -- ``use_mesh``
+                             installs the cluster topology; ``constrain`` pins an
+                             activation to a shard layout the way ES routing
+                             pins a document to a shard (and silently no-ops on
+                             a single node, so all code runs on 1 CPU device).
+:mod:`~repro.dist.sharding`  the index-settings layer (``number_of_shards``,
+                             per-field routing): declarative *rules* mapping a
+                             parameter tree onto mesh axes, replicating anything
+                             that does not divide evenly -- the same way ES
+                             refuses to split a shard below one Lucene segment.
+:mod:`~repro.dist.shard_index`  the doc-shards themselves.
+                             :class:`ShardedVectorIndex` partitions vectors,
+                             codes and posting lists into contiguous document
+                             ranges (one per ``data``-axis device), runs
+                             phase-1 scoring + local ``top_k(page)`` per shard
+                             under ``shard_map`` (the per-shard query phase),
+                             all-gathers candidates and merges globally by
+                             exact cosine (the coordinating node's reduce).
+===========================  ====================================================
+
+Global document ids are ``local_id + shard_offset``, mirroring how ES derives
+a hit's identity from ``(shard, doc)``.  For ``page >= n_docs`` the sharded
+search is bit-identical to single-device :meth:`VectorIndex.search` -- the
+merge sees every document's exact cosine, so sharding is purely a throughput
+axis, never a quality trade.
+"""
+
+from repro.dist.annotate import constrain, current_mesh, use_mesh
+from repro.dist.sharding import (
+    DATA_AXIS,
+    MODEL_AXIS,
+    batch_axes,
+    generic_param_spec,
+    lm_param_spec,
+    lm_param_spec_inference,
+    opt_state_spec,
+    tree_specs,
+)
+
+__all__ = [
+    "constrain",
+    "current_mesh",
+    "use_mesh",
+    "DATA_AXIS",
+    "MODEL_AXIS",
+    "batch_axes",
+    "generic_param_spec",
+    "lm_param_spec",
+    "lm_param_spec_inference",
+    "opt_state_spec",
+    "tree_specs",
+]

@@ -1,0 +1,82 @@
+"""Mesh-scoped activation annotations.
+
+``use_mesh(mesh)`` installs a mesh for the enclosing scope; ``constrain``
+then maps *logical* axis names ("batch", "model", "vocab", ...) onto the
+installed mesh's axes via ``with_sharding_constraint``.  Outside any mesh
+scope every call is the identity, so model code is annotation-transparent:
+the same forward function runs on 1 CPU device and on a 2x16x16 pod.
+
+Logical names resolve as
+
+* ``"batch"``  -> every data-parallel axis present (``("pod", "data")``)
+* ``"vocab"``  -> the tensor-parallel axis (an alias of ``"model"``: the
+  unembed projection shards its output over the same axis as the heads)
+* anything else -> the mesh axis of that name, if present
+
+and any dimension whose size does not divide the resolved axis product is
+dropped to ``None`` (replicated) rather than erroring -- the rule that lets
+one annotation serve every architecture/mesh pairing.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["use_mesh", "current_mesh", "constrain"]
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The innermost mesh installed by :func:`use_mesh`, or None."""
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Install ``mesh`` as the ambient mesh for :func:`constrain`."""
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh = prev
+
+
+def _resolve(name, mesh) -> Optional[tuple]:
+    if name is None:
+        return None
+    if name == "batch":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    elif name == "vocab":
+        axes = ("model",) if "model" in mesh.axis_names else ()
+    else:
+        axes = (name,) if name in mesh.axis_names else ()
+    return axes or None
+
+
+def constrain(x, *axis_names):
+    """``with_sharding_constraint(x, P(*axis_names))`` against the ambient
+    mesh; identity when no mesh is installed.  Indivisible dims drop to
+    replicated, so the constraint can never be unsatisfiable."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    parts = []
+    for dim, name in enumerate(axis_names):
+        axes = _resolve(name, mesh)
+        if axes is not None:
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            if n <= 1 or x.shape[dim] % n != 0:
+                axes = None
+        parts.append(None if axes is None
+                     else (axes[0] if len(axes) == 1 else axes))
+    if all(p is None for p in parts):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*parts)))

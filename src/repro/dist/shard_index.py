@@ -1,0 +1,256 @@
+"""Doc-sharded two-phase vector search (the Elasticsearch scaling story).
+
+:class:`ShardedVectorIndex` is :class:`repro.core.VectorIndex` split into
+contiguous *doc-shards* along the mesh's ``data`` axis, one shard per
+device.  A query runs the ES distributed query/fetch protocol:
+
+1. **query phase** (per shard, under ``shard_map``): phase-1 scoring over
+   the local codes/postings, local ``top_k(page)``, exact-cosine scoring of
+   the local candidate page;
+2. **merge phase**: candidates all-gather to every device (ids are
+   globalised by the shard's doc-id offset) and a global ``top_k(k)`` over
+   the exact cosines picks the final hits -- the coordinating node's reduce.
+
+Because the merge ranks *exact* phase-2 cosines, ``page >= n_docs`` makes
+the sharded search bit-identical to the single-device index: the same dot
+products reach the same top-k.  Smaller pages change recall only through
+per-shard candidate allocation (each shard contributes its own top
+``page`` -- the same semantics as ES ``size`` fan-out).
+
+IDF query weighting stays *global*: document frequencies are summed across
+shards with a ``psum`` (integer-exact), so trimming/weighting decisions are
+independent of the shard count.
+
+Ragged corpora pad each shard to a common length; padded rows carry a
+never-matching sentinel code, score ``-inf`` in both phases, and can never
+enter the merged top-k.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.encoding import Encoder
+from repro.core.filtering import BestFilter, TrimFilter, expand_mask, feature_mask
+from repro.core.postings import Postings, build_postings, idf_weights, lookup
+from repro.core.rerank import exact_scores, normalize
+from repro.core.search import _SENTINEL, VectorIndex, phase1_engine_scores
+
+from .sharding import DATA_AXIS
+
+__all__ = ["ShardedVectorIndex"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ShardedVectorIndex:
+    """A :class:`VectorIndex` partitioned into per-device doc-shards.
+
+    Array leaves carry an explicit leading shard dim (``n_shards`` first)
+    and live sharded over the ``data`` mesh axis; each device holds one
+    contiguous document range plus its local->global id ``offset``.
+    """
+
+    vectors: jnp.ndarray      # (S, dp, n) f32, unit rows; zero rows pad
+    codes: jnp.ndarray        # (S, dp, C) int; sentinel rows pad
+    post_docs: jnp.ndarray    # (S, C, dp) int32 per-shard posting order
+    post_codes: jnp.ndarray   # (S, C, dp) sorted codes per shard
+    offsets: jnp.ndarray      # (S,) int32 global id of each shard's doc 0
+    counts: jnp.ndarray       # (S,) int32 real (unpadded) docs per shard
+    encoder: Encoder
+    mesh: Mesh
+    n_docs: int               # global corpus size
+    index_best: Optional[int]
+
+    # -- pytree plumbing (mesh/encoder/sizes are static metadata) ----------
+    def tree_flatten(self):
+        children = (self.vectors, self.codes, self.post_docs,
+                    self.post_codes, self.offsets, self.counts)
+        return children, (self.encoder, self.mesh, self.n_docs, self.index_best)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    # ------------------------------------------------------------ properties
+    @property
+    def n_shards(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def docs_per_shard(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def n_features(self) -> int:
+        return self.vectors.shape[2]
+
+    # ----------------------------------------------------------------- build
+    @classmethod
+    def from_index(cls, index: VectorIndex, mesh: Mesh) -> "ShardedVectorIndex":
+        """Partition an existing single-device index across ``mesh``'s
+        ``data`` axis (contiguous ranges, ES-style doc-sharding)."""
+        if DATA_AXIS not in mesh.axis_names:
+            raise ValueError(f"mesh has no {DATA_AXIS!r} axis: {mesh.axis_names}")
+        ns = int(mesh.shape[DATA_AXIS])
+        n = index.n_docs
+        if ns > n:
+            raise ValueError(f"more shards ({ns}) than documents ({n})")
+        dp = math.ceil(n / ns)
+        pad = ns * dp - n
+
+        vectors = np.asarray(index.vectors)
+        codes = np.asarray(index.codes)
+        sentinel = _SENTINEL[codes.dtype]
+        vectors = np.concatenate(
+            [vectors, np.zeros((pad, vectors.shape[1]), vectors.dtype)])
+        codes = np.concatenate(
+            [codes, np.full((pad, codes.shape[1]), sentinel, codes.dtype)])
+        vectors = vectors.reshape(ns, dp, -1)
+        codes = codes.reshape(ns, dp, -1)
+
+        # per-shard inverted indexes: the sentinel sorts to the tail of every
+        # posting list, so padded docs are invisible to range lookups
+        post_docs, post_codes = [], []
+        for s in range(ns):
+            p = build_postings(jnp.asarray(codes[s]))
+            post_docs.append(np.asarray(p.post_docs))
+            post_codes.append(np.asarray(p.post_codes))
+
+        offsets = (np.arange(ns) * dp).astype(np.int32)
+        counts = np.clip(n - offsets, 0, dp).astype(np.int32)
+
+        def put(x, spec):
+            return jax.device_put(jnp.asarray(x), NamedSharding(mesh, spec))
+
+        row = P(DATA_AXIS, None, None)
+        return cls(
+            vectors=put(vectors, row),
+            codes=put(codes, row),
+            post_docs=put(np.stack(post_docs), row),
+            post_codes=put(np.stack(post_codes), row),
+            offsets=put(offsets, P(DATA_AXIS)),
+            counts=put(counts, P(DATA_AXIS)),
+            encoder=index.encoder,
+            mesh=mesh,
+            n_docs=n,
+            index_best=index.index_best,
+        )
+
+    @classmethod
+    def build(cls, vectors, mesh: Mesh, encoder=None, index_best=None):
+        """Build + shard in one step (single-device build, then partition)."""
+        kwargs = {} if encoder is None else {"encoder": encoder}
+        return cls.from_index(
+            VectorIndex.build(vectors, index_best=index_best, **kwargs), mesh)
+
+    # ------------------------------------------------------------------ search
+    def search(
+        self,
+        queries: jnp.ndarray,
+        k: int = 10,
+        page: int = 320,
+        trim: Optional[TrimFilter] = None,
+        best: Optional[BestFilter] = None,
+        engine: str = "postings",
+        weighting: str = "idf",
+        max_postings: Optional[int] = None,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Distributed two-phase search -> (ids (Q,k), cosine scores (Q,k)).
+
+        Same contract as :meth:`VectorIndex.search`; bit-identical to it
+        when ``page >= n_docs``.
+        """
+        queries = jnp.atleast_2d(queries)
+        page = min(page, self.n_docs)
+        k = min(k, page)
+        page_loc = min(page, self.docs_per_shard)
+
+        q = normalize(jnp.asarray(queries, jnp.float32))
+        qcodes = self.encoder.encode(q)
+        mask = expand_mask(feature_mask(q, trim=trim, best=best),
+                           qcodes.shape[-1])
+
+        L = self.docs_per_shard if max_postings is None \
+            else min(max_postings, self.docs_per_shard)
+        gids, scores = _query_phase(
+            self, q, qcodes, mask, page_loc=page_loc, engine=engine,
+            weighting=weighting, max_postings=L,
+        )
+        return _merge_phase(self.vectors, gids, scores, q, k=k)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _merge_phase(vectors, gids, scores, q, *, k):
+    """Coordinating-node reduce: global top-k over the gathered exact
+    cosines, then final scores recomputed at the (Q, k, n) shape shared
+    with rerank_topk -- see exact_scores for why this gives bit-parity."""
+    _, pos = jax.lax.top_k(scores, k)
+    top_ids = jnp.take_along_axis(gids, pos, axis=1)
+    flat_vectors = vectors.reshape(-1, vectors.shape[-1])
+    return top_ids, exact_scores(flat_vectors, top_ids, q)
+
+
+@partial(jax.jit,
+         static_argnames=("page_loc", "engine", "weighting", "max_postings"))
+def _query_phase(sidx, q, qcodes, mask, *, page_loc, engine, weighting,
+                 max_postings):
+    """Per-shard query phase under shard_map -> gathered candidates.
+
+    Returns global candidate ids (Q, S*page_loc) and their exact cosine
+    scores; padded/invalid candidates are ``-inf``.
+    """
+    from .shmap import shard_map
+
+    mesh = sidx.mesh
+    dp = sidx.docs_per_shard
+    enc = sidx.encoder
+    n_docs = sidx.n_docs
+
+    def local(vec, codes, pdocs, pcodes, off, cnt, q, qcodes, mask):
+        vec, codes = vec[0], codes[0]
+        postings = Postings(pdocs[0], pcodes[0], dp)
+        off, cnt = off[0], cnt[0]
+
+        if weighting == "idf":
+            lo, hi = jax.vmap(lambda c: lookup(postings, c))(qcodes)
+            df = jax.lax.psum(hi - lo, DATA_AXIS)   # global df, integer-exact
+            w = idf_weights(df, n_docs)
+        elif weighting == "count":
+            w = jnp.ones(qcodes.shape, jnp.float32)
+        else:
+            raise ValueError(f"unknown weighting {weighting!r}")
+        w = jnp.where(mask, w, 0.0)
+
+        s1 = phase1_engine_scores(codes, postings, qcodes, w, engine,
+                                  max_postings, enc.max_abs_bucket)
+
+        valid = jnp.arange(dp) < cnt                       # pads at the tail
+        s1 = jnp.where(valid[None, :], s1, -jnp.inf)
+        _, cand = jax.lax.top_k(s1, page_loc)              # (Q, page_loc)
+
+        cvec = vec[cand]                                   # (Q, page_loc, n)
+        s2 = jnp.einsum("qpn,qn->qp", cvec, q,
+                        preferred_element_type=jnp.float32)
+        s2 = jnp.where(cand < cnt, s2, -jnp.inf)
+        gid = (cand + off).astype(jnp.int32)
+        return gid, s2
+
+    row = P(DATA_AXIS, None, None)
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(row, row, row, row, P(DATA_AXIS), P(DATA_AXIS),
+                  P(None, None), P(None, None), P(None, None)),
+        out_specs=(P(None, DATA_AXIS), P(None, DATA_AXIS)),
+        check=False,
+    )
+    return fn(sidx.vectors, sidx.codes, sidx.post_docs, sidx.post_codes,
+              sidx.offsets, sidx.counts, q, qcodes, mask)

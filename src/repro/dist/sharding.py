@@ -1,0 +1,136 @@
+"""Declarative parameter-sharding rules (GSPMD PartitionSpecs).
+
+A *rule* is ``rule(path, leaf, mesh) -> PartitionSpec``; :func:`tree_specs`
+maps one over a parameter tree.  Rules are divisibility-aware: every axis
+placement checks that the dim divides the mesh axis and falls back to
+replication (``None``) otherwise, so one rule serves every architecture on
+every mesh -- the same posture as :func:`repro.dist.annotate.constrain`.
+
+Layout conventions (the "index settings" of the training cluster):
+
+* **FSDP** -- weight matrices shard their d_model-sized dim over ``data``.
+* **TP**   -- attention shards the *head* dim over ``model`` (never d_head:
+  a head is the atomic attention unit); dense/shared FFNs shard d_ff over
+  ``model``; the unembed shards vocab over ``model``.
+* **EP**   -- MoE expert weights shard the expert dim over ``model`` when it
+  divides (expert parallelism), else fall back to TP over d_ff.
+* **Embeddings** are never vocab-sharded (token gather stays shard-local).
+* Vectors/scalars (norms, biases, routers) replicate.
+
+Leading stacked-layer dims (from the ``lax.scan`` super-block vmap) are
+always ``None``: layers are executed sequentially, not spatially.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "DATA_AXIS",
+    "MODEL_AXIS",
+    "batch_axes",
+    "tree_specs",
+    "lm_param_spec",
+    "lm_param_spec_inference",
+    "generic_param_spec",
+    "opt_state_spec",
+]
+
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+
+# leaves replicate below this size under generic rules (a 16 MB f32 table);
+# small weights cost more in collective latency than they save in HBM
+_GENERIC_MIN_SIZE = 1 << 22
+
+
+def batch_axes(mesh) -> tuple:
+    """Every data-parallel mesh axis, outermost first (pod before data)."""
+    return tuple(a for a in ("pod", DATA_AXIS) if a in mesh.axis_names)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", getattr(entry, "name", None))
+        if key is not None:
+            return str(key)
+    return ""
+
+
+def _axis_if(mesh, axis: str, dim_size: int):
+    """``axis`` when it exists and divides ``dim_size``, else None."""
+    if axis not in mesh.axis_names:
+        return None
+    n = int(mesh.shape[axis])
+    return axis if dim_size % n == 0 and dim_size >= n else None
+
+
+def lm_param_spec(path, leaf, mesh) -> P:
+    """Sharding rule for the transformer LM parameter tree."""
+    name = _leaf_name(path)
+    s = leaf.shape
+    data = lambda d: _axis_if(mesh, DATA_AXIS, s[d])
+    model = lambda d: _axis_if(mesh, MODEL_AXIS, s[d])
+
+    if name == "embed" and len(s) == 2:                  # (V, D)
+        return P(None, data(1))                          # gather-safe: V whole
+    if name == "unembed" and len(s) == 2:                # (D, V)
+        return P(data(0), model(1))
+    if name in ("wq", "wk", "wv") and len(s) == 4:       # (L, D, H|KV, dh)
+        return P(None, data(1), model(2), None)
+    if name == "wo" and len(s) == 4:                     # (L, H, dh, D)
+        return P(None, model(1), None, data(3))
+    if name in ("wg", "wu") and len(s) == 4:             # MoE (L, E, D, F)
+        if model(1) is not None:                         # expert parallelism
+            return P(None, MODEL_AXIS, None, data(3))
+        return P(None, None, data(2), model(3))          # TP fallback
+    if name == "wd" and len(s) == 4:                     # MoE (L, E, F, D)
+        if model(1) is not None:
+            return P(None, MODEL_AXIS, data(2), None)
+        return P(None, None, model(2), data(3))
+    if name in ("wg", "wu") and len(s) == 3:             # dense/shared (L, D, F)
+        return P(None, data(1), model(2))
+    if name == "wd" and len(s) == 3:                     # dense/shared (L, F, D)
+        return P(None, model(1), data(2))
+    return P()                                           # norms, biases, router
+
+
+def lm_param_spec_inference(path, leaf, mesh) -> P:
+    """TP-only variant for serving: weights stay resident (no per-layer FSDP
+    all-gathers on the latency path); only ``model``-axis placements kept."""
+    spec = lm_param_spec(path, leaf, mesh)
+    return P(*(p if p == MODEL_AXIS else None for p in spec))
+
+
+def generic_param_spec(path, leaf, mesh) -> P:
+    """Family-agnostic rule (GNN / recsys): row-shard only leaves big enough
+    to matter (embedding tables) over ``model``; replicate the rest."""
+    s = leaf.shape
+    if (len(s) >= 1 and int(np.prod(s)) >= _GENERIC_MIN_SIZE
+            and _axis_if(mesh, MODEL_AXIS, s[0]) is not None):
+        return P(MODEL_AXIS, *(None,) * (len(s) - 1))
+    return P()
+
+
+def opt_state_spec(param_spec: P, ndim: int, which: str) -> P:
+    """Adafactor factored-stat specs: ``vr`` reduces away the last dim,
+    ``vc`` the second-to-last; the surviving dims keep the param placement."""
+    parts = list(param_spec) + [None] * (ndim - len(param_spec))
+    if which == "vr":
+        del parts[ndim - 1]
+    elif which == "vc":
+        del parts[ndim - 2]
+    else:
+        raise ValueError(f"unknown factored stat {which!r}")
+    return P(*parts)
+
+
+def tree_specs(tree, mesh, rule: Callable) -> "jax.tree_util.PyTreeDef":
+    """Map ``rule`` over a parameter tree -> tree of PartitionSpecs."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: rule(path, leaf, mesh), tree
+    )

@@ -40,8 +40,16 @@ def rerank_topk(
     block_p: int = DEFAULT_BLOCK_P,
     force_pallas: bool = False,
 ):
-    """Kernelized equivalent of :func:`repro.core.rerank.rerank_topk`."""
+    """Kernelized equivalent of :func:`repro.core.rerank.rerank_topk`.
+
+    Selection runs on the Pallas scores; the returned scores are recomputed
+    through :func:`repro.core.rerank.exact_scores` at the (Q, k, n) shape --
+    the same final-score contract as the core and doc-sharded paths, so the
+    three implementations stay exactly comparable."""
+    from repro.core.rerank import exact_scores
+
     cand = vectors[cand_ids]
     scores = rerank_scores(cand, queries, block_p=block_p, force_pallas=force_pallas)
-    top_scores, top_pos = jax.lax.top_k(scores, k)
-    return jnp.take_along_axis(cand_ids, top_pos, axis=1), top_scores
+    _, top_pos = jax.lax.top_k(scores, k)
+    top_ids = jnp.take_along_axis(cand_ids, top_pos, axis=1)
+    return top_ids, exact_scores(vectors, top_ids, queries)

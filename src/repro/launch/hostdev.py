@@ -1,0 +1,37 @@
+"""Fan one CPU host out into N virtual jax devices -- jax-free on purpose.
+
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` only takes effect
+when set before the first jax import, so entry points call this at the very
+top of the module, ahead of any repro/jax import.  Both CLI front-ends
+(repro.launch.serve, benchmarks.shard_scale) share this one copy.
+"""
+
+from __future__ import annotations
+
+import os
+
+__all__ = ["force_host_devices", "peek_int_arg"]
+
+_FLAG = "xla_force_host_platform_device_count"
+
+
+def force_host_devices(n: int) -> None:
+    """Request ``n`` virtual host devices; no-op for n <= 1 or when the
+    flag is already present (an explicit user setting wins)."""
+    if n > 1 and _FLAG not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") + f" --{_FLAG}={n}").strip()
+
+
+def peek_int_arg(argv, name: str) -> int:
+    """Pre-argparse peek at an int option (``--opt N`` or ``--opt=N``);
+    malformed or absent -> 0, leaving the error to argparse."""
+    for i, a in enumerate(argv):
+        try:
+            if a == name:
+                return int(argv[i + 1])
+            if a.startswith(name + "="):
+                return int(a.split("=", 1)[1])
+        except (IndexError, ValueError):
+            return 0
+    return 0

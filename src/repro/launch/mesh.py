@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_shard_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,3 +24,21 @@ def make_local_mesh(data: int = 1, model: int = 1):
     assert data * model <= n, (data, model, n)
     return jax.make_mesh((data, model), ("data", "model"),
                          devices=jax.devices()[: data * model])
+
+
+def make_shard_mesh(n_shards: int):
+    """1-D ``data`` mesh for doc-sharded search (one doc-shard per device).
+
+    Search has no tensor-parallel dimension -- every shard runs the whole
+    two-phase pipeline over its own document range -- so the mesh is pure
+    ``data``.  Use ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    to fan a CPU host out into N virtual shard hosts.
+    """
+    devs = jax.devices()
+    if n_shards > len(devs):
+        raise ValueError(
+            f"{n_shards} shards need {n_shards} devices but only "
+            f"{len(devs)} exist; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_shards} "
+            "before the first jax import")
+    return jax.make_mesh((n_shards,), ("data",), devices=devs[:n_shards])

@@ -1,18 +1,28 @@
 """Serving launcher: build a vector index and serve batched queries.
 
     PYTHONPATH=src python -m repro.launch.serve --docs 10000 --features 128 \
-        --queries 256 --batch-size 32
+        --queries 256 --batch-size 32 [--shards 4]
 
 Stands up the paper's system end to end on local devices: synthetic corpus
 -> LSA -> encoded index -> BatchedSearchEngine, then reports quality vs the
-brute-force gold standard and effective latency/throughput.  (The pod-scale
-index layouts are exercised by repro.launch.dryrun's vectordb-wiki cells.)
+brute-force gold standard and effective latency/throughput.  ``--shards N``
+doc-shards the index over an N-device ``data`` mesh (ES-style), forcing N
+virtual host devices when the platform has fewer.  (The pod-scale index
+layouts are exercised by repro.launch.dryrun's vectordb-wiki cells.)
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
+
+# --shards needs N host devices, and XLA_FLAGS must be set before the first
+# jax import (which the repro.core import below triggers); malformed values
+# fall through to argparse, which owns the error message
+from repro.launch.hostdev import force_host_devices, peek_int_arg
+
+force_host_devices(peek_int_arg(sys.argv, "--shards"))
 
 import numpy as np
 
@@ -33,6 +43,8 @@ def main():
     ap.add_argument("--trim", type=float, default=0.05)
     ap.add_argument("--engine", default="codes",
                     choices=["codes", "postings", "onehot"])
+    ap.add_argument("--shards", type=int, default=0,
+                    help="doc-shard the index over N devices (0 = unsharded)")
     args = ap.parse_args()
 
     print(f"building corpus ({args.docs} docs) + LSA-{args.features} ...")
@@ -47,6 +59,13 @@ def main():
     qids = rng.choice(args.docs, size=args.queries, replace=False)
     queries = np.asarray(pipe.doc_vectors[qids])
     gold_ids, _ = index.gold_topk(pipe.doc_vectors[qids], 10)
+
+    if args.shards > 0:
+        from repro.launch.mesh import make_shard_mesh
+
+        mesh = make_shard_mesh(args.shards)
+        print(f"doc-sharding index over {args.shards} device(s) ...")
+        index = index.shard(mesh)
 
     engine = BatchedSearchEngine(
         index, batch_size=args.batch_size, k=10, page=args.page,

@@ -21,7 +21,7 @@ phase (``retrieval_cand`` shape; see repro/serve/retrieval.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

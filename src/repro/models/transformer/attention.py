@@ -18,7 +18,7 @@ against the cache directly (O(S) per step).  Logit softcapping (gemma2) is
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

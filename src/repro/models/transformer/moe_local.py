@@ -5,10 +5,13 @@ indices; GSPMD cannot prove locality, so it replicates the (T, D) token
 buffers across the data axis (the dominant memory term of the llama4 train
 cell, immune to sharding constraints -- iteration A4).
 
-Here the dispatch runs under ``jax.shard_map``, manual over the data axes
-with the model axis left AUTO: every data shard sorts and buckets ONLY its
-local tokens into a local capacity buffer (E, C_local, D), computes its
-(expert-parallel, auto-sharded) experts, and combines locally.  Token
+Here the dispatch runs under ``shard_map`` (via :mod:`repro.dist.shmap`),
+manual over the data axes with the model axis AUTO on jax >= 0.6 (on 0.4.x
+the adapter degrades to fully-manual -- partial-manual regions hard-crash
+that SPMD partitioner -- so expert weights replicate across ``model``
+there): every data shard sorts and buckets ONLY its local tokens into a
+local capacity buffer (E, C_local, D), computes its experts, and combines
+locally.  Token
 buffers never cross data shards; the only cross-shard traffic is the
 explicit FSDP all-gather of the expert weights' d_ff slices -- exactly what
 GSPMD's FSDP inserts for the dense layers anyway.
@@ -101,10 +104,12 @@ def moe_ffn_local(p, x, top_k, capacity_factor=1.25, act="silu",
         },
         P(data_axes, None),
     )
-    fn = jax.shard_map(
+    from repro.dist.shmap import shard_map
+
+    fn = shard_map(
         local, mesh=mesh, in_specs=in_specs,
         out_specs=(P(data_axes, None), P(data_axes)),
-        check_vma=False, axis_names=frozenset(data_axes),
+        manual_axes=frozenset(data_axes), check=False,
     )
     y, aux_shards = fn({k: p[k] for k in in_specs[0]}, x)
     return y, aux_shards.mean()

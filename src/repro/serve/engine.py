@@ -8,6 +8,12 @@ and scattered back to their futures.  This mirrors the paper's observation
 here the trade is explicit: batch 1 = lowest latency, batch N = N-fold
 throughput at ~constant step time (the TPU is batch-insensitive until the
 code-match stream saturates HBM).
+
+The engine is index-polymorphic: anything with the ``VectorIndex.search``
+contract serves, in particular :class:`repro.dist.shard_index.
+ShardedVectorIndex` -- one batcher then fronts a whole doc-sharded mesh
+(the ES coordinating-node arrangement), and the per-request results are
+bit-identical to the single-device index for ``page >= n_docs``.
 """
 
 from __future__ import annotations
@@ -28,7 +34,7 @@ __all__ = ["BatchedSearchEngine"]
 class BatchedSearchEngine:
     def __init__(
         self,
-        index: VectorIndex,
+        index: "VectorIndex | ShardedVectorIndex",  # noqa: F821 - any .search
         batch_size: int = 32,
         max_wait_s: float = 0.005,
         k: int = 10,

@@ -12,7 +12,7 @@ benchmark compares against (same avg.diff/P@k metrics as the paper).
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ quantized payload is what crosses the axis, dequantization happens after.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple, Tuple
 
 import jax

@@ -9,7 +9,6 @@ compute (async collectives), which is the standard DP comm/compute overlap.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, Optional
 
 import jax

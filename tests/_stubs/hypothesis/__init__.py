@@ -1,0 +1,73 @@
+"""Minimal deterministic stand-in for the ``hypothesis`` API used by this
+suite (``given`` / ``settings`` / ``strategies``).
+
+Activated by tests/conftest.py only when the real package is missing.  Each
+``@given`` test runs ``max_examples`` times over values drawn from a PRNG
+seeded by the test's qualified name, so runs are reproducible and failures
+re-fire on re-run.  No shrinking, no database -- just the sampling core.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+from . import strategies
+
+__all__ = ["given", "settings", "strategies", "assume", "example"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Assumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    """Skip the current example when ``condition`` is falsy."""
+    if not condition:
+        raise _Assumption()
+    return True
+
+
+def given(*strats, **kw_strats):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_hyp_settings", {})
+            n = conf.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = [s.example(rng) for s in strats]
+                drawn_kw = {k: s.example(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+                except _Assumption:
+                    continue
+        # pytest resolves fixture names through __wrapped__'s signature;
+        # the drawn params are not fixtures, so hide the original signature
+        del wrapper.__wrapped__
+        # pytest plugins (anyio) introspect `.hypothesis.inner_test`
+        wrapper.hypothesis = type("_Hyp", (), {"inner_test": staticmethod(fn)})()
+        return wrapper
+
+    return decorate
+
+
+def settings(**config):
+    """Decorator form only (the suite uses ``@settings(...)`` above
+    ``@given``); stores config consumed by the ``given`` wrapper."""
+
+    def decorate(fn):
+        fn._hyp_settings = dict(config)
+        return fn
+
+    return decorate
+
+
+def example(*args, **kwargs):  # pragma: no cover - API-compat no-op
+    def decorate(fn):
+        return fn
+
+    return decorate

@@ -1,0 +1,79 @@
+"""Strategy objects for the vendored hypothesis shim.
+
+Each strategy exposes ``example(rng) -> value``.  Draws are uniform over the
+declared domain, with boundary values mixed in at a fixed rate (real
+hypothesis biases toward boundaries too; encoder bucket edges live there).
+"""
+
+from __future__ import annotations
+
+import struct
+
+__all__ = ["integers", "floats", "sampled_from", "booleans", "just"]
+
+_BOUNDARY_RATE = 0.15
+
+
+class _Strategy:
+    def __init__(self, draw, boundaries=()):
+        self._draw = draw
+        self._boundaries = tuple(boundaries)
+
+    def example(self, rng):
+        if self._boundaries and rng.random() < _BOUNDARY_RATE:
+            return rng.choice(self._boundaries)
+        return self._draw(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self.example(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(1000):
+                v = self.example(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too restrictive")
+
+        return _Strategy(draw)
+
+
+def integers(min_value, max_value):
+    return _Strategy(
+        lambda rng: rng.randint(min_value, max_value),
+        boundaries=(min_value, max_value),
+    )
+
+
+def _to_width(x: float, width: int) -> float:
+    if width == 32:
+        return struct.unpack("f", struct.pack("f", x))[0]
+    if width == 16:
+        return struct.unpack("e", struct.pack("e", x))[0]
+    return x
+
+
+def floats(min_value, max_value, allow_nan=False, allow_infinity=False,
+           width=64):
+    del allow_nan, allow_infinity  # bounded domains are always finite
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng):
+        v = _to_width(rng.uniform(lo, hi), width)
+        return min(max(v, lo), hi)  # width-rounding must not escape bounds
+
+    bounds = {_to_width(b, width) for b in (lo, hi, 0.0) if lo <= b <= hi}
+    return _Strategy(draw, boundaries=sorted(bounds))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def just(value):
+    return _Strategy(lambda rng: value)

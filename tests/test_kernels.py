@@ -81,7 +81,9 @@ class TestRerankKernel:
         QV = rng.normal(size=(q, n)).astype(np.float32)
         got = rk_ops.rerank_scores(jnp.asarray(CV), jnp.asarray(QV), force_pallas=True)
         want = rerank_scores_ref(jnp.asarray(CV), jnp.asarray(QV))
-        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+        # atol covers f32 accumulation-order drift between the blocked pallas
+        # loop and the XLA einsum at n=400 (observed max ~2e-5)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=5e-5)
 
     def test_topk_wrapper_matches_core(self):
         from repro.core.rerank import rerank_topk as core_rerank

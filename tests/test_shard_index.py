@@ -1,0 +1,135 @@
+"""Sharded-vs-single-device search parity (dist/shard_index.py).
+
+The pinned invariant: for ``page >= n_docs`` the doc-sharded index returns
+ids AND scores bit-identical to ``VectorIndex.search`` for every engine --
+sharding is a throughput axis, never a quality trade.  Multi-device cases
+run in a subprocess because ``--xla_force_host_platform_device_count`` must
+precede jax initialisation (same pattern as test_moe.py).
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import TrimFilter, VectorIndex
+from repro.launch.mesh import make_shard_mesh
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _build(n_docs=123, n_features=16, n_queries=7, seed=0):
+    rng = np.random.default_rng(seed)
+    V = rng.normal(size=(n_docs, n_features)).astype(np.float32)
+    Q = rng.normal(size=(n_queries, n_features)).astype(np.float32)
+    return VectorIndex.build(V), Q
+
+
+@pytest.mark.parametrize("engine", ["postings", "codes", "onehot",
+                                    "codes_pallas"])
+def test_single_shard_is_identity(engine):
+    """ns=1 runs in-process: one shard must already be bit-identical."""
+    idx, Q = _build()
+    sidx = idx.shard(make_shard_mesh(1))
+    ids1, s1 = idx.search(Q, k=10, page=300, engine=engine)
+    ids2, s2 = sidx.search(Q, k=10, page=300, engine=engine)
+    assert np.array_equal(np.asarray(ids1), np.asarray(ids2))
+    assert np.array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_single_shard_trimmed_small_page():
+    """Approximate regime smoke: trim + page < n_docs stays well-formed."""
+    idx, Q = _build()
+    sidx = idx.shard(make_shard_mesh(1))
+    ids, scores = sidx.search(Q, k=5, page=32, trim=TrimFilter(0.05),
+                              engine="codes")
+    assert ids.shape == (7, 5)
+    assert np.isfinite(np.asarray(scores)).all()
+    assert (np.asarray(ids) >= 0).all() and (np.asarray(ids) < 123).all()
+
+
+def _run_subprocess(script: str) -> None:
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, cwd=_REPO)
+    assert "OK" in out.stdout, out.stdout + out.stderr
+
+
+_PRELUDE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import VectorIndex
+from repro.launch.mesh import make_shard_mesh
+
+def build(n_docs, n_features=16, n_queries=7, seed=0):
+    rng = np.random.default_rng(seed)
+    V = rng.normal(size=(n_docs, n_features)).astype(np.float32)
+    Q = rng.normal(size=(n_queries, n_features)).astype(np.float32)
+    return VectorIndex.build(V), Q
+"""
+
+
+def test_four_shard_parity_all_engines():
+    """4-device mesh, ragged (123 % 4 != 0) AND even (120 % 4 == 0) splits:
+    ids/scores bit-identical for all three engines at page >= n_docs."""
+    _run_subprocess(_PRELUDE + r"""
+for n_docs in (123, 120):
+    idx, Q = build(n_docs)
+    sidx = idx.shard(make_shard_mesh(4))
+    assert sidx.n_shards == 4 and sidx.n_docs == n_docs
+    for engine in ("postings", "codes", "onehot", "codes_pallas"):
+        ids1, s1 = idx.search(Q, k=10, page=2 * n_docs, engine=engine)
+        ids2, s2 = sidx.search(Q, k=10, page=2 * n_docs, engine=engine)
+        assert np.array_equal(np.asarray(ids1), np.asarray(ids2)), \
+            (n_docs, engine)
+        assert np.array_equal(np.asarray(s1), np.asarray(s2)), \
+            (n_docs, engine)
+print("OK")
+""")
+
+
+def test_four_shard_weighting_and_self_retrieval():
+    """Global-psum idf == single-device idf; count weighting too; querying
+    an indexed doc returns itself first (score 1.0) through the merge."""
+    _run_subprocess(_PRELUDE + r"""
+idx, _ = build(123)
+sidx = idx.shard(make_shard_mesh(4))
+V = np.asarray(idx.vectors)
+for weighting in ("idf", "count"):
+    ids1, s1 = idx.search(V[:9], k=10, page=200, weighting=weighting)
+    ids2, s2 = sidx.search(V[:9], k=10, page=200, weighting=weighting)
+    assert np.array_equal(np.asarray(ids1), np.asarray(ids2)), weighting
+    assert np.array_equal(np.asarray(s1), np.asarray(s2)), weighting
+assert (np.asarray(ids2)[:, 0] == np.arange(9)).all()
+np.testing.assert_allclose(np.asarray(s2)[:, 0], 1.0, rtol=1e-5)
+print("OK")
+""")
+
+
+def test_batched_engine_serves_sharded_index():
+    """BatchedSearchEngine fronting a doc-sharded index: the third engine of
+    the parity triangle (engine results == sharded == single-device)."""
+    _run_subprocess(_PRELUDE + r"""
+from repro.serve.engine import BatchedSearchEngine
+
+idx, _ = build(123)
+sidx = idx.shard(make_shard_mesh(4))
+V = np.asarray(idx.vectors)
+gold_ids, gold_s = idx.search(V[:8], k=5, page=300, trim=None, engine="codes")
+eng = BatchedSearchEngine(sidx, batch_size=4, k=5, page=300, trim=None,
+                          engine="codes")
+try:
+    futs = [eng.submit(V[i]) for i in range(8)]
+    for i, f in enumerate(futs):
+        ids, scores = f.result(timeout=60)
+        assert ids[0] == i, (i, ids)
+        assert np.array_equal(ids, np.asarray(gold_ids)[i])
+        assert np.array_equal(scores, np.asarray(gold_s)[i])
+finally:
+    eng.close()
+print("OK")
+""")
