@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke-shard bench bench-full
+.PHONY: test smoke-shard smoke-replica bench bench-full
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -14,6 +14,13 @@ test:
 # real multi-device lowering instead of the 1-device no-op fallbacks
 smoke-shard:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" $(PY) -m pytest -x -q
+
+# tier-1 under 8 virtual host devices (4 doc-shards x 2 replicas): the
+# replica-tier analogue of smoke-shard -- in-process tests still see 1-shard
+# meshes, but the subprocess parity tests get the full 4x2 (data, replica)
+# mesh, and every other mesh path lowers against 8 devices
+smoke-replica:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" $(PY) -m pytest -x -q
 
 bench:
 	$(PY) -m benchmarks.run

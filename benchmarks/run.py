@@ -15,18 +15,18 @@ import sys
 import time
 
 
-def _run_shard_scale(full: bool) -> None:
-    """benchmarks/shard_scale.py in a subprocess: the virtual-device fan-out
-    flag must precede jax initialisation, and jax is already live here.
-    Emits artifacts/BENCH_shard_scale.json (QPS + recall per shard count)."""
+def _run_device_bench(name: str, grid_args: list, full: bool) -> None:
+    """A virtual-device bench (shard_scale / replica_scale) in a subprocess:
+    the device fan-out flag must precede jax initialisation, and jax is
+    already live here.  Each emits its artifacts/BENCH_<name>.json."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    cmd = [sys.executable, "-m", "benchmarks.shard_scale", "--shards", "1,2,4"]
+    cmd = [sys.executable, "-m", f"benchmarks.{name}"] + grid_args
     if not full:
         # quick-config rows are not comparable to the full trajectory; keep
-        # them out of the accumulating BENCH_shard_scale.json
+        # them out of the accumulating BENCH_<name>.json
         cmd += ["--docs", "4000", "--features", "32", "--queries", "32",
                 "--json", os.path.join(root, "artifacts",
-                                       "BENCH_shard_scale_quick.json")]
+                                       f"BENCH_{name}_quick.json")]
     env = dict(os.environ)
     env["PYTHONPATH"] = "src" + os.pathsep * bool(env.get("PYTHONPATH")) \
         + env.get("PYTHONPATH", "")
@@ -35,13 +35,13 @@ def _run_shard_scale(full: bool) -> None:
         out = subprocess.run(cmd, cwd=root, env=env, capture_output=True,
                              text=True, timeout=1800)
     except subprocess.TimeoutExpired:
-        print(f"shard_scale,{(time.perf_counter()-t0)*1e6:.0f},FAILED_timeout")
+        print(f"{name},{(time.perf_counter()-t0)*1e6:.0f},FAILED_timeout")
         return
     for line in out.stdout.splitlines():
-        if line.startswith("shard_scale,"):
+        if line.startswith(f"{name},"):
             print(line)
     if out.returncode != 0:
-        print(f"shard_scale,{(time.perf_counter()-t0)*1e6:.0f},"
+        print(f"{name},{(time.perf_counter()-t0)*1e6:.0f},"
               f"FAILED_rc={out.returncode}")
         sys.stderr.write(out.stderr[-2000:])
 
@@ -83,7 +83,8 @@ def main() -> None:
     rows_cp = complexity_probe.run(quick=quick)
     print(f"complexity_probe,{(time.perf_counter()-t0)*1e6:.0f},rows={len(rows_cp)}")
 
-    _run_shard_scale(full)
+    _run_device_bench("shard_scale", ["--shards", "1,2,4"], full)
+    _run_device_bench("replica_scale", ["--grid", "1x1,2x1,2x2,4x2"], full)
 
     t0 = time.perf_counter()
     roofline.main()

@@ -58,8 +58,13 @@ def brute_force_topk(
     k: int,
     block: int = 8192,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """The paper's naive baseline: one linear scan, O(nd) (gold standard)."""
+    """The paper's naive baseline: one linear scan, O(nd) (gold standard).
+
+    ``k`` clamps to the corpus size (same contract as ``VectorIndex.search``):
+    without it, ``k > d`` rows would pad the result with ``(id 0, -inf)``
+    junk that silently poisons any recall computed against it."""
     d, n = vectors.shape
+    k = min(k, d)
     Q = queries.shape[0]
     pad = (-d) % block
     padded = jnp.pad(vectors, ((0, pad), (0, 0)))

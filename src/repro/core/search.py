@@ -204,6 +204,10 @@ class VectorIndex:
         return ShardedVectorIndex.from_index(self, mesh)
 
     def gold_topk(self, queries: jnp.ndarray, k: int = 10):
-        """Paper's gold standard: brute-force cosine scan over all vectors."""
+        """Paper's gold standard: brute-force cosine scan over all vectors.
+
+        ``k`` clamps to ``n_docs``, matching :meth:`search`'s
+        ``k = min(k, page) <= n_docs`` -- a corpus can't yield more hits
+        than it has documents."""
         q = normalize(jnp.atleast_2d(jnp.asarray(queries, jnp.float32)))
-        return brute_force_topk(self.vectors, q, k)
+        return brute_force_topk(self.vectors, q, min(k, self.n_docs))

@@ -24,8 +24,14 @@ this package                 Elasticsearch analogue
                              ranges (one per ``data``-axis device), runs
                              phase-1 scoring + local ``top_k(page)`` per shard
                              under ``shard_map`` (the per-shard query phase),
-                             all-gathers candidates and merges globally by
-                             exact cosine (the coordinating node's reduce).
+                             and merges candidates globally by exact cosine
+                             (the coordinating node's reduce) -- either one
+                             blocking all-gather or a ring-streamed fold.
+``replica`` mesh axis        replica shards: on a ``(data, replica)`` mesh the
+                             index leaves replicate across ``replica`` and
+                             query batches round-robin over the replica
+                             groups -- R full serving copies, ~R x QPS, zero
+                             quality change.
 ===========================  ====================================================
 
 Global document ids are ``local_id + shard_offset``, mirroring how ES derives
@@ -39,6 +45,7 @@ from repro.dist.annotate import constrain, current_mesh, use_mesh
 from repro.dist.sharding import (
     DATA_AXIS,
     MODEL_AXIS,
+    REPLICA_AXIS,
     batch_axes,
     generic_param_spec,
     lm_param_spec,
@@ -53,6 +60,7 @@ __all__ = [
     "use_mesh",
     "DATA_AXIS",
     "MODEL_AXIS",
+    "REPLICA_AXIS",
     "batch_axes",
     "generic_param_spec",
     "lm_param_spec",

@@ -7,9 +7,32 @@ device.  A query runs the ES distributed query/fetch protocol:
 1. **query phase** (per shard, under ``shard_map``): phase-1 scoring over
    the local codes/postings, local ``top_k(page)``, exact-cosine scoring of
    the local candidate page;
-2. **merge phase**: candidates all-gather to every device (ids are
-   globalised by the shard's doc-id offset) and a global ``top_k(k)`` over
-   the exact cosines picks the final hits -- the coordinating node's reduce.
+2. **merge phase**: per-shard candidate pages reach the coordinating
+   reduce (ids are globalised by the shard's doc-id offset) and a global
+   ``top_k(k)`` over the exact cosines picks the final hits.
+
+Two merge transports implement step 2 (``search(..., merge=...)``):
+
+* ``"gather"`` -- one blocking all-gather of every shard's page, then a
+  flat global top-k (the PR-1 path; peak buffer ``S * page`` per query).
+* ``"stream"`` -- candidate pages ring-rotate along the ``data`` axis
+  (``ppermute``) and *stream* into a running top-k one shard at a time:
+  the group coordinator (data index 0) folds pages in shard order, so
+  communication of page ``t+1`` overlaps the merge of page ``t`` and the
+  peak buffer is ``k + page`` regardless of shard count.  Tie-breaks
+  replicate the flat gather's shard-major order, so both transports
+  return identical hits.
+
+**Replica tier** (ES replica shards): on a 2-D ``(data, replica)`` mesh
+(:func:`repro.launch.mesh.make_shard_mesh` with ``n_replicas > 1``) every
+index leaf is replicated across the ``replica`` axis -- R full copies of
+the doc-sharded corpus.  Incoming query batches round-robin across replica
+groups (the batch splits along ``replica`` in the ``shard_map`` in-spec),
+each group runs the full query/fetch protocol against its own copy, and
+per-replica results are bit-identical to the single-replica path: QPS
+scales ~R x while quality is untouched (``page >= n_docs`` parity holds
+per group).  Batches are zero-padded up to a multiple of R and the pad
+rows sliced off after the merge, so they can never leak into results.
 
 Because the merge ranks *exact* phase-2 cosines, ``page >= n_docs`` makes
 the sharded search bit-identical to the single-device index: the same dot
@@ -18,8 +41,9 @@ per-shard candidate allocation (each shard contributes its own top
 ``page`` -- the same semantics as ES ``size`` fan-out).
 
 IDF query weighting stays *global*: document frequencies are summed across
-shards with a ``psum`` (integer-exact), so trimming/weighting decisions are
-independent of the shard count.
+shards with a ``psum`` over ``data`` (integer-exact, identical in every
+replica group), so trimming/weighting decisions are independent of both
+the shard count and the replica count.
 
 Ragged corpora pad each shard to a common length; padded rows carry a
 never-matching sentinel code, score ``-inf`` in both phases, and can never
@@ -41,10 +65,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.encoding import Encoder
 from repro.core.filtering import BestFilter, TrimFilter, expand_mask, feature_mask
 from repro.core.postings import Postings, build_postings, idf_weights, lookup
-from repro.core.rerank import exact_scores, normalize
+from repro.core.rerank import normalize
 from repro.core.search import _SENTINEL, VectorIndex, phase1_engine_scores
 
-from .sharding import DATA_AXIS
+from .sharding import DATA_AXIS, REPLICA_AXIS
 
 __all__ = ["ShardedVectorIndex"]
 
@@ -86,6 +110,12 @@ class ShardedVectorIndex:
         return self.vectors.shape[0]
 
     @property
+    def n_replicas(self) -> int:
+        if REPLICA_AXIS in self.mesh.axis_names:
+            return int(self.mesh.shape[REPLICA_AXIS])
+        return 1
+
+    @property
     def docs_per_shard(self) -> int:
         return self.vectors.shape[1]
 
@@ -97,7 +127,11 @@ class ShardedVectorIndex:
     @classmethod
     def from_index(cls, index: VectorIndex, mesh: Mesh) -> "ShardedVectorIndex":
         """Partition an existing single-device index across ``mesh``'s
-        ``data`` axis (contiguous ranges, ES-style doc-sharding)."""
+        ``data`` axis (contiguous ranges, ES-style doc-sharding).
+
+        On a ``(data, replica)`` mesh every leaf's spec leaves the
+        ``replica`` axis unmentioned, so ``NamedSharding`` replicates each
+        doc-shard across it -- R identical serving copies of the corpus."""
         if DATA_AXIS not in mesh.axis_names:
             raise ValueError(f"mesh has no {DATA_AXIS!r} axis: {mesh.axis_names}")
         ns = int(mesh.shape[DATA_AXIS])
@@ -163,18 +197,33 @@ class ShardedVectorIndex:
         engine: str = "postings",
         weighting: str = "idf",
         max_postings: Optional[int] = None,
+        merge: str = "gather",
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Distributed two-phase search -> (ids (Q,k), cosine scores (Q,k)).
 
         Same contract as :meth:`VectorIndex.search`; bit-identical to it
-        when ``page >= n_docs``.
+        when ``page >= n_docs``, for either ``merge`` transport
+        (``"gather"`` = blocking all-gather, ``"stream"`` = ring-streamed
+        per-shard pages) and any replica count -- queries round-robin
+        across replica groups, each holding a full copy of the corpus.
         """
+        if merge not in ("gather", "stream"):
+            raise ValueError(f"unknown merge transport {merge!r}")
         queries = jnp.atleast_2d(queries)
         page = min(page, self.n_docs)
         k = min(k, page)
         page_loc = min(page, self.docs_per_shard)
 
-        q = normalize(jnp.asarray(queries, jnp.float32))
+        # round-robin over replica groups: the batch splits along the
+        # replica axis, so pad it up to a multiple of R (pad rows are
+        # sliced off below and can never reach a caller)
+        n_q = queries.shape[0]
+        q_pad = (-n_q) % self.n_replicas
+        q = jnp.asarray(queries, jnp.float32)
+        if q_pad:
+            q = jnp.concatenate(
+                [q, jnp.zeros((q_pad, q.shape[1]), jnp.float32)])
+        q = normalize(q)
         qcodes = self.encoder.encode(q)
         mask = expand_mask(feature_mask(q, trim=trim, best=best),
                            qcodes.shape[-1])
@@ -184,29 +233,65 @@ class ShardedVectorIndex:
         gids, scores = _query_phase(
             self, q, qcodes, mask, page_loc=page_loc, engine=engine,
             weighting=weighting, max_postings=L,
+            k=k if merge == "stream" else 0, merge=merge,
         )
+        # drop replica-pad rows BEFORE the final reduce: the rescore inside
+        # _merge_phase must run at the true (Q, k, n) shape -- the canonical
+        # shape of exact_scores -- or pad rows would perturb the einsum
+        # blocking and cost bit-parity with the single-device index
+        if q_pad:
+            gids, scores, q = gids[:n_q], scores[:n_q], q[:n_q]
         return _merge_phase(self.vectors, gids, scores, q, k=k)
 
 
-@partial(jax.jit, static_argnames=("k",))
 def _merge_phase(vectors, gids, scores, q, *, k):
-    """Coordinating-node reduce: global top-k over the gathered exact
-    cosines, then final scores recomputed at the (Q, k, n) shape shared
-    with rerank_topk -- see exact_scores for why this gives bit-parity."""
+    """Coordinating-node reduce: global top-k over the exact cosines, then
+    final scores recomputed at the (Q, k, n) shape shared with rerank_topk
+    -- see exact_scores for why this gives bit-parity.  For the stream
+    transport the inputs are already the merged (Q, k) page (sorted by
+    score), so the top-k is an identity pass and only the rescore runs.
+
+    The select + candidate-vector fetch run distributed (top-k and gather
+    are exact, layout can't change a bit); the rescore einsum runs on the
+    coordinating device with *unsharded* operands, because GSPMD blocks a
+    sharded einsum differently per mesh shape -- rescoring in-mesh costs
+    last-ulp parity between e.g. a 4x1 and a 2x4 layout of the same corpus.
+    """
+    top_ids, cvec = _merge_select(vectors, gids, scores, k=k)
+    dev = jax.devices()[0]
+    return top_ids, _rescore(jax.device_put(cvec, dev),
+                             jax.device_put(q, dev))
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _merge_select(vectors, gids, scores, *, k):
     _, pos = jax.lax.top_k(scores, k)
     top_ids = jnp.take_along_axis(gids, pos, axis=1)
     flat_vectors = vectors.reshape(-1, vectors.shape[-1])
-    return top_ids, exact_scores(flat_vectors, top_ids, q)
+    return top_ids, flat_vectors[top_ids]           # (Q, k, n) hit vectors
 
 
-@partial(jax.jit,
-         static_argnames=("page_loc", "engine", "weighting", "max_postings"))
+@jax.jit
+def _rescore(cvec, q):
+    """exact_scores' canonical (Q, k, n) einsum over pre-fetched hits."""
+    return jnp.einsum("qkn,qn->qk", cvec, q,
+                      preferred_element_type=jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("page_loc", "engine", "weighting",
+                                   "max_postings", "k", "merge"))
 def _query_phase(sidx, q, qcodes, mask, *, page_loc, engine, weighting,
-                 max_postings):
-    """Per-shard query phase under shard_map -> gathered candidates.
+                 max_postings, k, merge):
+    """Per-shard query phase under shard_map -> merge-ready candidates.
 
-    Returns global candidate ids (Q, S*page_loc) and their exact cosine
-    scores; padded/invalid candidates are ``-inf``.
+    ``merge="gather"``: returns global candidate ids (Q, S*page_loc) and
+    their exact cosine scores (one all-gather; padded/invalid candidates
+    are ``-inf``).  ``merge="stream"``: candidate pages ring-rotate along
+    the ``data`` axis and fold into a running top-``k`` in shard order on
+    each group's coordinator, which then broadcasts -- returns the merged
+    (Q, k) ids/scores directly.  On a ``(data, replica)`` mesh the query
+    batch additionally splits along ``replica`` (Q/R rows per group) and
+    reassembles in the out-spec.
     """
     from .shmap import shard_map
 
@@ -214,6 +299,7 @@ def _query_phase(sidx, q, qcodes, mask, *, page_loc, engine, weighting,
     dp = sidx.docs_per_shard
     enc = sidx.encoder
     n_docs = sidx.n_docs
+    n_shards = sidx.n_shards
 
     def local(vec, codes, pdocs, pcodes, off, cnt, q, qcodes, mask):
         vec, codes = vec[0], codes[0]
@@ -242,15 +328,54 @@ def _query_phase(sidx, q, qcodes, mask, *, page_loc, engine, weighting,
                         preferred_element_type=jnp.float32)
         s2 = jnp.where(cand < cnt, s2, -jnp.inf)
         gid = (cand + off).astype(jnp.int32)
-        return gid, s2
+        if merge == "gather":
+            return gid, s2
+        return _stream_merge_local(gid, s2, n_shards, k)
 
     row = P(DATA_AXIS, None, None)
+    rep = REPLICA_AXIS in mesh.axis_names
+    qaxis = REPLICA_AXIS if rep else None
+    out = P(qaxis, DATA_AXIS) if merge == "gather" else P(qaxis, None)
     fn = shard_map(
         local, mesh=mesh,
         in_specs=(row, row, row, row, P(DATA_AXIS), P(DATA_AXIS),
-                  P(None, None), P(None, None), P(None, None)),
-        out_specs=(P(None, DATA_AXIS), P(None, DATA_AXIS)),
+                  P(qaxis, None), P(qaxis, None), P(qaxis, None)),
+        out_specs=(out, out),
         check=False,
     )
     return fn(sidx.vectors, sidx.codes, sidx.post_docs, sidx.post_codes,
               sidx.offsets, sidx.counts, q, qcodes, mask)
+
+
+def _stream_merge_local(gid, s2, n_shards, k):
+    """Ring-streamed coordinator merge (runs inside the shard_map body).
+
+    Pages rotate shard -> shard-1 along ``data``; after step t the device
+    at data index i holds the page of shard (i+t) % S, so the group
+    coordinator (data index 0) folds pages in shard order 0..S-1 -- the
+    same shard-major tie-break order as the flat all-gather, which is what
+    keeps the two transports bit-identical.  Each fold is a (k+page)-wide
+    stable top-k, so communication of the next page overlaps the fold of
+    the current one and peak memory stays k+page per query instead of
+    S*page.  The coordinator's result is broadcast with a masked psum
+    (every other device contributes zeros).
+
+    Pre-merge ``-inf`` placeholder rows can never survive: ``k`` is
+    clamped to ``page <= n_docs``, so at least ``k`` finite-score real
+    candidates exist across the S pages and displace them.
+    """
+    acc_s = jnp.full((s2.shape[0], k), -jnp.inf, s2.dtype)
+    acc_i = jnp.zeros((gid.shape[0], k), gid.dtype)
+    perm = [(j, (j - 1) % n_shards) for j in range(n_shards)]
+    for t in range(n_shards):
+        cat_s = jnp.concatenate([acc_s, s2], axis=1)
+        cat_i = jnp.concatenate([acc_i, gid], axis=1)
+        acc_s, pos = jax.lax.top_k(cat_s, k)
+        acc_i = jnp.take_along_axis(cat_i, pos, axis=1)
+        if t < n_shards - 1:
+            s2 = jax.lax.ppermute(s2, DATA_AXIS, perm)
+            gid = jax.lax.ppermute(gid, DATA_AXIS, perm)
+    lead = jax.lax.axis_index(DATA_AXIS) == 0
+    acc_i = jax.lax.psum(jnp.where(lead, acc_i, 0), DATA_AXIS)
+    acc_s = jax.lax.psum(jnp.where(lead, acc_s, 0.0), DATA_AXIS)
+    return acc_i, acc_s

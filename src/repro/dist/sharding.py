@@ -32,6 +32,7 @@ from jax.sharding import PartitionSpec as P
 __all__ = [
     "DATA_AXIS",
     "MODEL_AXIS",
+    "REPLICA_AXIS",
     "batch_axes",
     "tree_specs",
     "lm_param_spec",
@@ -42,6 +43,10 @@ __all__ = [
 
 DATA_AXIS = "data"
 MODEL_AXIS = "model"
+# serving-tier replication (ES replica shards): index leaves replicate across
+# this axis, query batches round-robin over it -- a pure QPS axis, never a
+# placement one, so no param-spec rule ever mentions it
+REPLICA_AXIS = "replica"
 
 # leaves replicate below this size under generic rules (a 16 MB f32 table);
 # small weights cost more in collective latency than they save in HBM

@@ -26,19 +26,26 @@ def make_local_mesh(data: int = 1, model: int = 1):
                          devices=jax.devices()[: data * model])
 
 
-def make_shard_mesh(n_shards: int):
-    """1-D ``data`` mesh for doc-sharded search (one doc-shard per device).
+def make_shard_mesh(n_shards: int, n_replicas: int = 1):
+    """Mesh for doc-sharded search: 1-D ``data`` (one doc-shard per device),
+    or 2-D ``(data, replica)`` when ``n_replicas > 1`` (each doc-shard
+    replicated across the ``replica`` axis, ES replica shards).
 
     Search has no tensor-parallel dimension -- every shard runs the whole
-    two-phase pipeline over its own document range -- so the mesh is pure
-    ``data``.  Use ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
-    to fan a CPU host out into N virtual shard hosts.
+    two-phase pipeline over its own document range -- so the axes are pure
+    serving axes: ``data`` partitions the corpus, ``replica`` multiplies
+    QPS.  Use ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to fan
+    a CPU host out into N virtual shard hosts.
     """
+    need = n_shards * n_replicas
     devs = jax.devices()
-    if n_shards > len(devs):
+    if need > len(devs):
         raise ValueError(
-            f"{n_shards} shards need {n_shards} devices but only "
-            f"{len(devs)} exist; set XLA_FLAGS="
-            f"--xla_force_host_platform_device_count={n_shards} "
+            f"{n_shards} shards x {n_replicas} replicas need {need} devices "
+            f"but only {len(devs)} exist; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} "
             "before the first jax import")
-    return jax.make_mesh((n_shards,), ("data",), devices=devs[:n_shards])
+    if n_replicas == 1:                      # keep the PR-1 1-D mesh contract
+        return jax.make_mesh((n_shards,), ("data",), devices=devs[:need])
+    return jax.make_mesh((n_shards, n_replicas), ("data", "replica"),
+                         devices=devs[:need])

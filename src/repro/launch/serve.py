@@ -1,14 +1,18 @@
 """Serving launcher: build a vector index and serve batched queries.
 
     PYTHONPATH=src python -m repro.launch.serve --docs 10000 --features 128 \
-        --queries 256 --batch-size 32 [--shards 4]
+        --queries 256 --batch-size 32 [--shards 4 --replicas 2 --merge stream]
 
 Stands up the paper's system end to end on local devices: synthetic corpus
 -> LSA -> encoded index -> BatchedSearchEngine, then reports quality vs the
 brute-force gold standard and effective latency/throughput.  ``--shards N``
-doc-shards the index over an N-device ``data`` mesh (ES-style), forcing N
-virtual host devices when the platform has fewer.  (The pod-scale index
-layouts are exercised by repro.launch.dryrun's vectordb-wiki cells.)
+doc-shards the index over an N-device ``data`` mesh (ES-style);
+``--replicas R`` replicates every doc-shard R times on a ``(data, replica)``
+mesh (queries round-robin across the replica groups -- ES replica shards);
+``--merge stream`` streams per-shard candidate pages into the coordinating
+merge instead of one blocking all-gather.  S*R virtual host devices are
+forced when the platform has fewer.  (The pod-scale index layouts are
+exercised by repro.launch.dryrun's vectordb-wiki cells.)
 """
 
 from __future__ import annotations
@@ -17,12 +21,13 @@ import argparse
 import sys
 import time
 
-# --shards needs N host devices, and XLA_FLAGS must be set before the first
-# jax import (which the repro.core import below triggers); malformed values
-# fall through to argparse, which owns the error message
+# --shards x --replicas needs S*R host devices, and XLA_FLAGS must be set
+# before the first jax import (which the repro.core import below triggers);
+# malformed values fall through to argparse, which owns the error message
 from repro.launch.hostdev import force_host_devices, peek_int_arg
 
-force_host_devices(peek_int_arg(sys.argv, "--shards"))
+force_host_devices(peek_int_arg(sys.argv, "--shards")
+                   * max(peek_int_arg(sys.argv, "--replicas"), 1))
 
 import numpy as np
 
@@ -45,7 +50,18 @@ def main():
                     choices=["codes", "postings", "onehot"])
     ap.add_argument("--shards", type=int, default=0,
                     help="doc-shard the index over N devices (0 = unsharded)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replicate each doc-shard R times (needs --shards; "
+                         "queries round-robin across replica groups)")
+    ap.add_argument("--merge", default=None,
+                    choices=["gather", "stream"],
+                    help="sharded merge transport (default: gather; stream = "
+                         "ring-streamed per-shard pages)")
     args = ap.parse_args()
+    if args.replicas > 1 and args.shards < 1:
+        ap.error("--replicas needs --shards >= 1")
+    if args.merge and args.shards < 1:
+        ap.error("--merge needs --shards >= 1")
 
     print(f"building corpus ({args.docs} docs) + LSA-{args.features} ...")
     corpus = make_corpus(n_docs=args.docs, vocab_size=max(args.docs, 8000),
@@ -63,13 +79,15 @@ def main():
     if args.shards > 0:
         from repro.launch.mesh import make_shard_mesh
 
-        mesh = make_shard_mesh(args.shards)
-        print(f"doc-sharding index over {args.shards} device(s) ...")
+        mesh = make_shard_mesh(args.shards, args.replicas)
+        print(f"doc-sharding index over {args.shards} shard(s) "
+              f"x {args.replicas} replica(s) ...")
         index = index.shard(mesh)
 
     engine = BatchedSearchEngine(
         index, batch_size=args.batch_size, k=10, page=args.page,
-        trim=TrimFilter(args.trim) if args.trim else None, engine=args.engine)
+        trim=TrimFilter(args.trim) if args.trim else None, engine=args.engine,
+        merge=args.merge)
     try:
         t0 = time.time()
         futs = [engine.submit(q) for q in queries]

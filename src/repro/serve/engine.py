@@ -14,6 +14,23 @@ contract serves, in particular :class:`repro.dist.shard_index.
 ShardedVectorIndex` -- one batcher then fronts a whole doc-sharded mesh
 (the ES coordinating-node arrangement), and the per-request results are
 bit-identical to the single-device index for ``page >= n_docs``.
+
+Fronting a sharded index, each submitted batch runs the ES query/fetch
+protocol end to end: per-shard phase-1 + local top-k under ``shard_map``,
+then the coordinating merge.  ``merge="stream"`` makes that merge
+asynchronous on-device -- per-shard candidate pages ring-rotate along the
+``data`` axis and stream into the coordinator's running top-k, so the
+communication of one shard's page overlaps the fold of the previous one
+instead of a single blocking all-gather.  On a ``(data, replica)`` mesh
+(``make_shard_mesh(shards, replicas)``) the batch itself round-robins
+across replica groups, each holding a full copy of the corpus: R groups
+answer Q/R queries apiece, multiplying QPS without touching quality.
+
+Lifecycle: ``submit`` after ``close`` raises ``RuntimeError`` (the queue
+has no worker to drain it); a search that raises inside the worker fails
+only that batch's futures (``set_exception``) and the worker keeps
+serving subsequent batches; ``close`` drains everything already queued
+before returning.
 """
 
 from __future__ import annotations
@@ -41,11 +58,15 @@ class BatchedSearchEngine:
         page: int = 320,
         trim: Optional[TrimFilter] = TrimFilter(0.05),
         engine: str = "codes",
+        merge: Optional[str] = None,
     ):
         self.index = index
         self.batch_size = batch_size
         self.max_wait_s = max_wait_s
         self.k, self.page, self.trim, self.engine = k, page, trim, engine
+        # merge transport for sharded indexes ("gather" | "stream"); None
+        # omits the kwarg so plain VectorIndex keeps serving unchanged
+        self.merge = merge
         self._lock = threading.Condition()
         self._queue: List[Tuple[np.ndarray, Future]] = []
         self._stop = False
@@ -56,6 +77,8 @@ class BatchedSearchEngine:
     def submit(self, query_vec: np.ndarray) -> Future:
         fut: Future = Future()
         with self._lock:
+            if self._stop:
+                raise RuntimeError("engine closed")
             self._queue.append((np.asarray(query_vec, np.float32), fut))
             self._lock.notify()
         return fut
@@ -83,14 +106,26 @@ class BatchedSearchEngine:
                 del self._queue[: len(batch)]
             if not batch:
                 continue
-            qs = np.stack([q for q, _ in batch])
-            pad = self.batch_size - qs.shape[0]
-            if pad:
-                qs = np.concatenate([qs, np.zeros((pad, qs.shape[1]), qs.dtype)])
-            ids, scores = self.index.search(
-                jnp.asarray(qs), k=self.k, page=self.page, trim=self.trim,
-                engine=self.engine,
-            )
-            ids, scores = np.asarray(ids), np.asarray(scores)
+            # a failing search must not kill the worker: every queued and
+            # in-flight future would strand (resolve only by caller
+            # timeout) -- fail this batch's futures, serve the next batch
+            try:
+                qs = np.stack([q for q, _ in batch])
+                pad = self.batch_size - qs.shape[0]
+                if pad:
+                    qs = np.concatenate(
+                        [qs, np.zeros((pad, qs.shape[1]), qs.dtype)])
+                kwargs = {"merge": self.merge} if self.merge else {}
+                ids, scores = self.index.search(
+                    jnp.asarray(qs), k=self.k, page=self.page, trim=self.trim,
+                    engine=self.engine, **kwargs,
+                )
+                ids, scores = np.asarray(ids), np.asarray(scores)
+            except Exception as exc:  # noqa: BLE001 - forwarded to futures
+                for _, fut in batch:
+                    if not fut.done():
+                        fut.set_exception(exc)
+                continue
             for i, (_, fut) in enumerate(batch):
-                fut.set_result((ids[i], scores[i]))
+                if not fut.done():          # caller may have cancelled
+                    fut.set_result((ids[i], scores[i]))

@@ -1,0 +1,201 @@
+"""BatchedSearchEngine contract: batching/padding correctness + lifecycle.
+
+The engine is a thin request batcher over ``index.search``; these tests pin
+that the batching is *invisible* (results identical to a direct search, pad
+rows never leak) and that the lifecycle is safe (submit-after-close raises,
+a poisoned batch fails only its own futures, close drains the queue).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import VectorIndex
+from repro.serve.engine import BatchedSearchEngine
+
+N_DOCS, N_FEAT = 150, 16
+
+
+@pytest.fixture(scope="module")
+def index():
+    rng = np.random.default_rng(0)
+    return VectorIndex.build(
+        rng.normal(size=(N_DOCS, N_FEAT)).astype(np.float32))
+
+
+@pytest.fixture()
+def queries():
+    return np.random.default_rng(1).normal(
+        size=(11, N_FEAT)).astype(np.float32)
+
+
+def test_batched_results_match_direct_search(index, queries):
+    """Full and partial batches return exactly what index.search returns."""
+    gold_ids, gold_s = index.search(queries, k=5, page=N_DOCS, trim=None,
+                                    engine="codes")
+    eng = BatchedSearchEngine(index, batch_size=4, k=5, page=N_DOCS,
+                              trim=None, engine="codes")
+    try:
+        futs = [eng.submit(q) for q in queries]   # 11 = 2 full + 1 partial
+        for i, f in enumerate(futs):
+            ids, scores = f.result(timeout=60)
+            assert np.array_equal(ids, np.asarray(gold_ids)[i]), i
+            assert np.array_equal(scores, np.asarray(gold_s)[i]), i
+    finally:
+        eng.close()
+
+
+def test_partial_batch_pad_rows_never_leak(index, queries):
+    """batch_size 8, one request: the 7 zero-pad rows must not surface.
+
+    Bitwise reference is a direct search of the same zero-padded batch
+    (XLA's einsum blocking depends on the batch shape, so a Q=1 search can
+    differ in the last ulp); the unpadded gold pins ids + score closeness.
+    """
+    eng = BatchedSearchEngine(index, batch_size=8, k=5, page=N_DOCS,
+                              trim=None, engine="codes")
+    try:
+        ids, scores = eng.submit(queries[0]).result(timeout=60)
+    finally:
+        eng.close()
+    padded = np.concatenate(
+        [queries[:1], np.zeros((7, N_FEAT), np.float32)])
+    batch_ids, batch_s = index.search(padded, k=5, page=N_DOCS, trim=None,
+                                      engine="codes")
+    gold_ids, gold_s = index.search(queries[:1], k=5, page=N_DOCS, trim=None,
+                                    engine="codes")
+    assert ids.shape == (5,) and scores.shape == (5,)
+    assert np.array_equal(ids, np.asarray(batch_ids)[0])
+    assert np.array_equal(scores, np.asarray(batch_s)[0])
+    assert np.array_equal(ids, np.asarray(gold_ids)[0])
+    np.testing.assert_allclose(scores, np.asarray(gold_s)[0], rtol=1e-6)
+
+
+def test_close_drains_pending_requests(index, queries):
+    """Everything queued before close() resolves; close() blocks until then."""
+    eng = BatchedSearchEngine(index, batch_size=4, max_wait_s=10.0, k=5,
+                              page=N_DOCS, trim=None, engine="codes")
+    futs = [eng.submit(q) for q in queries]       # partial last batch queued
+    eng.close()
+    for f in futs:
+        ids, _ = f.result(timeout=0)              # must already be resolved
+        assert ids.shape == (5,)
+
+
+def test_submit_after_close_raises(index, queries):
+    """A closed engine has no worker: submit must fail fast, not hang."""
+    eng = BatchedSearchEngine(index, batch_size=4, k=5, page=N_DOCS)
+    eng.close()
+    with pytest.raises(RuntimeError, match="engine closed"):
+        eng.submit(queries[0])
+
+
+class _FlakyIndex:
+    """index.search stand-in that raises on marked batches."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.poison = threading.Event()
+        self.calls = 0
+
+    def search(self, queries, **kw):
+        self.calls += 1
+        if self.poison.is_set():
+            raise ValueError("injected search failure")
+        return self.inner.search(queries, **kw)
+
+
+def test_worker_survives_search_exception(index, queries):
+    """A raising search fails that batch's futures with the original error
+    and the SAME worker keeps serving subsequent batches."""
+    flaky = _FlakyIndex(index)
+    eng = BatchedSearchEngine(flaky, batch_size=4, k=5, page=N_DOCS,
+                              trim=None, engine="codes")
+    try:
+        flaky.poison.set()
+        bad = [eng.submit(q) for q in queries[:4]]
+        for f in bad:
+            with pytest.raises(ValueError, match="injected search failure"):
+                f.result(timeout=60)
+        assert eng._worker.is_alive()
+
+        flaky.poison.clear()
+        gold_ids, _ = index.search(queries[4:8], k=5, page=N_DOCS, trim=None,
+                                   engine="codes")
+        good = [eng.submit(q) for q in queries[4:8]]
+        for i, f in enumerate(good):
+            ids, _ = f.result(timeout=60)
+            assert np.array_equal(ids, np.asarray(gold_ids)[i])
+    finally:
+        eng.close()
+
+
+def test_cancelled_future_does_not_kill_worker(index, queries):
+    """A caller cancelling its queued future (e.g. after a search() timeout)
+    must not crash result delivery -- set_result on a cancelled future
+    raises InvalidStateError, which would strand every later future."""
+    eng = BatchedSearchEngine(index, batch_size=4, k=5, page=N_DOCS,
+                              trim=None, engine="codes")
+    try:
+        with eng._lock:                   # hold the worker off the queue
+            futs = [eng.submit(q) for q in queries[:4]]
+            assert futs[0].cancel()
+        for f in futs[1:]:
+            ids, _ = f.result(timeout=60)
+            assert ids.shape == (5,)
+        assert eng._worker.is_alive()
+        ids, _ = eng.submit(queries[4]).result(timeout=60)
+        assert ids.shape == (5,)
+    finally:
+        eng.close()
+
+
+def test_concurrent_submitters_all_resolve(index):
+    """Many threads submitting at once: every future resolves correctly
+    (the batcher's lock/notify protocol loses no requests)."""
+    rng = np.random.default_rng(2)
+    Q = rng.normal(size=(24, N_FEAT)).astype(np.float32)
+    gold_ids, _ = index.search(Q, k=5, page=N_DOCS, trim=None, engine="codes")
+    eng = BatchedSearchEngine(index, batch_size=5, k=5, page=N_DOCS,
+                              trim=None, engine="codes")
+    results = {}
+
+    def worker(i):
+        results[i] = eng.submit(Q[i]).result(timeout=60)
+
+    try:
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(len(Q))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+    finally:
+        eng.close()
+    assert len(results) == len(Q)
+    for i, (ids, _) in results.items():
+        assert np.array_equal(ids, np.asarray(gold_ids)[i]), i
+
+
+def test_merge_kwarg_forwarded_only_when_set(index, queries):
+    """merge=None keeps the plain-VectorIndex call signature; a sharded
+    index gets the transport passed through (single-shard mesh in-process)."""
+    from repro.launch.mesh import make_shard_mesh
+
+    sidx = index.shard(make_shard_mesh(1))
+    gold_ids, gold_s = index.search(queries, k=5, page=N_DOCS, trim=None,
+                                    engine="codes")
+    for merge in (None, "stream"):
+        eng = BatchedSearchEngine(sidx if merge else index, batch_size=4,
+                                  k=5, page=N_DOCS, trim=None,
+                                  engine="codes", merge=merge)
+        try:
+            futs = [eng.submit(q) for q in queries]
+            for i, f in enumerate(futs):
+                ids, scores = f.result(timeout=60)
+                assert np.array_equal(ids, np.asarray(gold_ids)[i]), (merge, i)
+                assert np.array_equal(scores, np.asarray(gold_s)[i]), (merge, i)
+        finally:
+            eng.close()

@@ -1,10 +1,13 @@
 """Sharded-vs-single-device search parity (dist/shard_index.py).
 
 The pinned invariant: for ``page >= n_docs`` the doc-sharded index returns
-ids AND scores bit-identical to ``VectorIndex.search`` for every engine --
-sharding is a throughput axis, never a quality trade.  Multi-device cases
-run in a subprocess because ``--xla_force_host_platform_device_count`` must
-precede jax initialisation (same pattern as test_moe.py).
+ids AND scores bit-identical to ``VectorIndex.search`` for every engine,
+every merge transport (blocking gather / ring stream) and every replica
+count -- sharding and replication are throughput axes, never a quality
+trade.  Multi-device cases run in a subprocess because
+``--xla_force_host_platform_device_count`` must precede jax initialisation
+(same pattern as test_moe.py); the replica cases force 8 devices (4 shards
+x 2 replicas).
 """
 
 import os
@@ -58,9 +61,10 @@ def _run_subprocess(script: str) -> None:
     assert "OK" in out.stdout, out.stdout + out.stderr
 
 
-_PRELUDE = r"""
+def _prelude(n_devices=4):
+    return rf"""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_devices}"
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import VectorIndex
 from repro.launch.mesh import make_shard_mesh
@@ -71,6 +75,9 @@ def build(n_docs, n_features=16, n_queries=7, seed=0):
     Q = rng.normal(size=(n_queries, n_features)).astype(np.float32)
     return VectorIndex.build(V), Q
 """
+
+
+_PRELUDE = _prelude(4)
 
 
 def test_four_shard_parity_all_engines():
@@ -110,26 +117,100 @@ print("OK")
 """)
 
 
+def test_single_shard_stream_merge_is_identity():
+    """S=1 runs in-process: the stream transport degenerates to a sort +
+    self-psum and must already be bit-identical to the gather path."""
+    idx, Q = _build()
+    sidx = idx.shard(make_shard_mesh(1))
+    ids1, s1 = idx.search(Q, k=10, page=300, engine="codes")
+    ids2, s2 = sidx.search(Q, k=10, page=300, engine="codes", merge="stream")
+    assert np.array_equal(np.asarray(ids1), np.asarray(ids2))
+    assert np.array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_unknown_merge_transport_rejected():
+    idx, Q = _build()
+    sidx = idx.shard(make_shard_mesh(1))
+    with pytest.raises(ValueError, match="merge transport"):
+        sidx.search(Q, merge="scatter")
+
+
+def test_replica_parity_all_engines():
+    """4 shards x 2 replicas on an 8-device (data, replica) mesh, ragged
+    (123 % 4 != 0) AND even (120 % 4 == 0) splits: ids/scores bit-identical
+    to the single-device index for every engine and both merge transports,
+    at page >= n_docs.  n_queries=7 is odd, so the round-robin split across
+    2 replica groups also exercises the query zero-pad + slice path."""
+    _run_subprocess(_prelude(8) + r"""
+for n_docs in (123, 120):
+    idx, Q = build(n_docs)
+    sidx = idx.shard(make_shard_mesh(4, 2))
+    assert sidx.n_shards == 4 and sidx.n_replicas == 2
+    assert sidx.n_docs == n_docs
+    for engine in ("postings", "codes", "onehot", "codes_pallas"):
+        ids1, s1 = idx.search(Q, k=10, page=2 * n_docs, engine=engine)
+        for merge in ("gather", "stream"):
+            ids2, s2 = sidx.search(Q, k=10, page=2 * n_docs, engine=engine,
+                                   merge=merge)
+            assert np.array_equal(np.asarray(ids1), np.asarray(ids2)), \
+                (n_docs, engine, merge)
+            assert np.array_equal(np.asarray(s1), np.asarray(s2)), \
+                (n_docs, engine, merge)
+print("OK")
+""")
+
+
+def test_replica_round_robin_and_stream_merge_invariants():
+    """Replica-group round-robin is invisible to callers: every batch size
+    0 < Q <= 8 (even, odd, and Q < R) returns the R=1 mesh's results
+    bit-exactly, with the stream transport, on a 2x4 mesh (ragged corpus).
+    Also pins the merged stream path for page < n_docs (approximate
+    regime): well-formed ids/scores, no -inf leakage from pre-merge
+    placeholder rows."""
+    _run_subprocess(_prelude(8) + r"""
+idx, Q = build(123, n_queries=8)
+base = idx.shard(make_shard_mesh(4, 1))
+sidx = idx.shard(make_shard_mesh(2, 4))
+for nq in range(1, 9):
+    ids1, s1 = base.search(Q[:nq], k=10, page=300, engine="codes")
+    ids2, s2 = sidx.search(Q[:nq], k=10, page=300, engine="codes",
+                           merge="stream")
+    assert ids2.shape == (nq, 10), nq
+    assert np.array_equal(np.asarray(ids1), np.asarray(ids2)), nq
+    assert np.array_equal(np.asarray(s1), np.asarray(s2)), nq
+
+ids, scores = sidx.search(Q, k=5, page=16, engine="codes", merge="stream")
+assert ids.shape == (8, 5)
+assert np.isfinite(np.asarray(scores)).all()
+assert (np.asarray(ids) >= 0).all() and (np.asarray(ids) < 123).all()
+print("OK")
+""")
+
+
 def test_batched_engine_serves_sharded_index():
     """BatchedSearchEngine fronting a doc-sharded index: the third engine of
-    the parity triangle (engine results == sharded == single-device)."""
-    _run_subprocess(_PRELUDE + r"""
+    the parity triangle (engine results == sharded == single-device).  The
+    replicated mesh with the stream transport must serve the same bits --
+    the whole replica tier is invisible behind the batcher."""
+    _run_subprocess(_prelude(8) + r"""
 from repro.serve.engine import BatchedSearchEngine
 
 idx, _ = build(123)
-sidx = idx.shard(make_shard_mesh(4))
 V = np.asarray(idx.vectors)
 gold_ids, gold_s = idx.search(V[:8], k=5, page=300, trim=None, engine="codes")
-eng = BatchedSearchEngine(sidx, batch_size=4, k=5, page=300, trim=None,
-                          engine="codes")
-try:
-    futs = [eng.submit(V[i]) for i in range(8)]
-    for i, f in enumerate(futs):
-        ids, scores = f.result(timeout=60)
-        assert ids[0] == i, (i, ids)
-        assert np.array_equal(ids, np.asarray(gold_ids)[i])
-        assert np.array_equal(scores, np.asarray(gold_s)[i])
-finally:
-    eng.close()
+for mesh, merge in ((make_shard_mesh(4), None),
+                    (make_shard_mesh(4, 2), "stream")):
+    sidx = idx.shard(mesh)
+    eng = BatchedSearchEngine(sidx, batch_size=4, k=5, page=300, trim=None,
+                              engine="codes", merge=merge)
+    try:
+        futs = [eng.submit(V[i]) for i in range(8)]
+        for i, f in enumerate(futs):
+            ids, scores = f.result(timeout=60)
+            assert ids[0] == i, (merge, i, ids)
+            assert np.array_equal(ids, np.asarray(gold_ids)[i]), (merge, i)
+            assert np.array_equal(scores, np.asarray(gold_s)[i]), (merge, i)
+    finally:
+        eng.close()
 print("OK")
 """)
