@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke-shard smoke-replica bench bench-full
+.PHONY: test smoke-shard smoke-replica smoke-build bench bench-full
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -21,6 +21,16 @@ smoke-shard:
 # mesh, and every other mesh path lowers against 8 devices
 smoke-replica:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" $(PY) -m pytest -x -q
+
+# quick on-device build + ingest smoke under 8 virtual devices: one-program
+# SPMD build vs the from_index reference at every shard count that fits,
+# plus append-segment ingest throughput (the _quick artifact name keeps it
+# gitignored and out of the accumulating BENCH_build_scale.json trajectory)
+smoke-build:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" $(PY) -m \
+	  benchmarks.build_scale --shards 1,2,4,8 --docs 2000 --features 32 \
+	  --ingest-batch 64 --ingest-batches 2 --repeats 1 \
+	  --json artifacts/BENCH_build_scale_quick.json
 
 bench:
 	$(PY) -m benchmarks.run

@@ -17,7 +17,8 @@ from typing import Optional, Union
 
 import jax.numpy as jnp
 
-__all__ = ["TrimFilter", "BestFilter", "Filter", "feature_mask", "expand_mask"]
+__all__ = ["TrimFilter", "BestFilter", "Filter", "feature_mask", "expand_mask",
+           "index_best_codes"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +67,21 @@ def feature_mask(
     if best is not None:
         m = m & best.mask(x)
     return m
+
+
+def index_best_codes(
+    vectors: jnp.ndarray, codes: jnp.ndarray, m: int, sentinel: int
+) -> jnp.ndarray:
+    """Index-side *best* filter: code columns of non-best features take the
+    never-matching ``sentinel`` code, dropping them from every posting list.
+
+    The single implementation shared by ``VectorIndex.build`` and the
+    on-device sharded build (:mod:`repro.dist.shard_index`): both paths must
+    produce bit-identical codes, so the masking lives here, once.  Pure
+    row-wise jnp -- safe under ``jit``/``shard_map``.
+    """
+    mask = expand_mask(feature_mask(vectors, best=BestFilter(m)), codes.shape[-1])
+    return jnp.where(mask, codes, jnp.asarray(sentinel, codes.dtype))
 
 
 def expand_mask(mask: jnp.ndarray, n_columns: int) -> jnp.ndarray:

@@ -27,7 +27,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["Postings", "build_postings", "lookup", "idf_weights", "score_postings"]
+__all__ = ["Postings", "build_postings", "lookup", "idf_weights",
+           "score_postings", "code_df"]
 
 
 class Postings(NamedTuple):
@@ -64,6 +65,21 @@ def lookup(postings: Postings, qcodes: jnp.ndarray) -> tuple[jnp.ndarray, jnp.nd
     """
     lo, hi = jax.vmap(_searchsorted_row)(postings.post_codes, qcodes)
     return lo, hi
+
+
+def code_df(codes: jnp.ndarray, qcodes: jnp.ndarray) -> jnp.ndarray:
+    """Per-token document frequency against a raw ``(d, C)`` code matrix.
+
+    The segment-side analogue of :func:`lookup`'s ``hi - lo``: append
+    segments (incremental ingest, :mod:`repro.dist.shard_index`) carry no
+    posting lists, so their df contribution is a direct per-column bucket
+    equality count.  Sentinel-coded rows (empty slots, tombstones) can never
+    equal a legal query code and contribute zero automatically.
+
+    qcodes: (Q, C) -> (Q, C) int32 counts.
+    """
+    return jnp.sum(qcodes[:, None, :] == codes[None, :, :], axis=1,
+                   dtype=jnp.int32)
 
 
 def idf_weights(df: jnp.ndarray, n_docs: int) -> jnp.ndarray:

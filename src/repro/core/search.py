@@ -24,7 +24,13 @@ import jax.numpy as jnp
 
 from .codes import score_codes, score_onehot
 from .encoding import Encoder, RoundingEncoder
-from .filtering import BestFilter, TrimFilter, expand_mask, feature_mask
+from .filtering import (
+    BestFilter,
+    TrimFilter,
+    expand_mask,
+    feature_mask,
+    index_best_codes,
+)
 from .postings import (
     Postings,
     build_postings,
@@ -123,11 +129,8 @@ class VectorIndex:
         vectors = normalize(jnp.asarray(vectors, jnp.float32))
         codes = encoder.encode(vectors)
         if index_best is not None:
-            mask = expand_mask(
-                feature_mask(vectors, best=BestFilter(index_best)), codes.shape[-1]
-            )
-            sentinel = _SENTINEL[codes.dtype]
-            codes = jnp.where(mask, codes, jnp.asarray(sentinel, codes.dtype))
+            codes = index_best_codes(
+                vectors, codes, index_best, _SENTINEL[codes.dtype])
         postings = build_postings(codes)
         return cls(vectors, codes, postings, encoder, index_best)
 

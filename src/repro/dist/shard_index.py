@@ -34,16 +34,53 @@ scales ~R x while quality is untouched (``page >= n_docs`` parity holds
 per group).  Batches are zero-padded up to a multiple of R and the pad
 rows sliced off after the merge, so they can never leak into results.
 
-Because the merge ranks *exact* phase-2 cosines, ``page >= n_docs`` makes
-the sharded search bit-identical to the single-device index: the same dot
-products reach the same top-k.  Smaller pages change recall only through
-per-shard candidate allocation (each shard contributes its own top
-``page`` -- the same semantics as ES ``size`` fan-out).
+**On-device sharded build** (:meth:`ShardedVectorIndex.build_sharded`):
+raw vectors are ``device_put`` straight onto the ``data`` axis and ONE
+jitted SPMD program runs the whole pipeline per shard under ``shard_map``
+-- normalize -> ``encoder.encode`` -> ``index_best`` sentinel masking ->
+``build_postings`` -- so index construction scales with the mesh exactly
+like search does.  :meth:`from_index` (partitioning an existing
+single-device index) likewise rebuilds the per-shard posting lists in one
+SPMD program; neither path loops over shards on the host.
+
+**Incremental ingest** (ES segment semantics):
+
+* :meth:`add_documents` appends new docs to per-shard *append segments*
+  (round-robin shard routing, monotonically growing global ids starting at
+  ``n_docs``).  Segments carry codes but no posting lists; their phase-1
+  scores come from a direct per-column bucket-equality match (the same
+  score every engine computes) and their df joins the global psum through
+  :func:`repro.core.postings.code_df`.
+* :meth:`delete` marks docs dead: the per-doc ``live`` mask goes False and
+  the doc's codes become the sentinel.  Like Lucene, the *base* posting
+  lists keep tombstoned entries until compaction (df may transiently count
+  them); the ``live`` mask guarantees a tombstone can never surface in
+  results regardless of engine.
+* :meth:`compact` folds segments and tombstones back into a clean base by
+  re-running the on-device sharded build over the live doc table.  Global
+  ids are stable across compaction: dead ids simply stop existing (their
+  rows become sentinel-coded padding).
+
+BUILD/INGEST INVARIANTS (relied on throughout):
+
+* *Sentinel-tail postings*: padded and tombstoned rows carry the
+  never-matching sentinel code, which sorts to the tail of every posting
+  list -- range lookups cannot reach them, and a legal query code can
+  never equal the sentinel.
+* *Unsharded final rescore*: reported scores always come from the
+  canonical ``(Q, k, n)`` einsum with unsharded operands on the
+  coordinating device (see ``_merge_phase``) -- GSPMD blocks a sharded
+  einsum differently per mesh shape, which would cost last-ulp parity.
+* *Segment/tombstone semantics*: empty segment slots and tombstones are
+  sentinel-coded and ``live=False``; ``live`` is the source of truth for
+  result eligibility.  When fewer than ``k`` live docs exist, unfillable
+  result slots report ``(id=-1, score=-inf)``.
 
 IDF query weighting stays *global*: document frequencies are summed across
 shards with a ``psum`` over ``data`` (integer-exact, identical in every
 replica group), so trimming/weighting decisions are independent of both
-the shard count and the replica count.
+the shard count and the replica count.  ``N`` is the global id-space size
+(``n_docs`` + docs ever appended), ES ``maxDoc`` style.
 
 Ragged corpora pad each shard to a common length; padded rows carry a
 never-matching sentinel code, score ``-inf`` in both phases, and can never
@@ -62,15 +99,25 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.encoding import Encoder
-from repro.core.filtering import BestFilter, TrimFilter, expand_mask, feature_mask
-from repro.core.postings import Postings, build_postings, idf_weights, lookup
+from repro.core.encoding import Encoder, RoundingEncoder
+from repro.core.filtering import (BestFilter, TrimFilter, expand_mask,
+                                  feature_mask, index_best_codes)
+from repro.core.postings import (Postings, build_postings, code_df,
+                                 idf_weights, lookup)
 from repro.core.rerank import normalize
 from repro.core.search import _SENTINEL, VectorIndex, phase1_engine_scores
 
 from .sharding import DATA_AXIS, REPLICA_AXIS
 
 __all__ = ["ShardedVectorIndex"]
+
+
+def _put(mesh: Mesh, x, spec: P):
+    return jax.device_put(jnp.asarray(x), NamedSharding(mesh, spec))
+
+
+_ROW = P(DATA_AXIS, None, None)
+_VEC = P(DATA_AXIS, None)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -80,25 +127,36 @@ class ShardedVectorIndex:
 
     Array leaves carry an explicit leading shard dim (``n_shards`` first)
     and live sharded over the ``data`` mesh axis; each device holds one
-    contiguous document range plus its local->global id ``offset``.
+    contiguous document range plus its local->global id ``offset``.  The
+    ``seg_*`` leaves are the per-shard append segments of incremental
+    ingest (width 0 for a freshly built index); ``live`` is the per-doc
+    eligibility mask (False = pad or tombstone).
     """
 
     vectors: jnp.ndarray      # (S, dp, n) f32, unit rows; zero rows pad
-    codes: jnp.ndarray        # (S, dp, C) int; sentinel rows pad
+    codes: jnp.ndarray        # (S, dp, C) int; sentinel rows pad/tombstone
     post_docs: jnp.ndarray    # (S, C, dp) int32 per-shard posting order
     post_codes: jnp.ndarray   # (S, C, dp) sorted codes per shard
     offsets: jnp.ndarray      # (S,) int32 global id of each shard's doc 0
-    counts: jnp.ndarray       # (S,) int32 real (unpadded) docs per shard
+    live: jnp.ndarray         # (S, dp) bool -- False = pad or tombstone
+    seg_vectors: jnp.ndarray  # (S, G, n) f32 append-segment vectors
+    seg_codes: jnp.ndarray    # (S, G, C) int; sentinel = empty/tombstone
+    seg_gids: jnp.ndarray     # (S, G) int32 global ids; -1 = never used
+    seg_live: jnp.ndarray     # (S, G) bool
     encoder: Encoder
     mesh: Mesh
-    n_docs: int               # global corpus size
+    n_docs: int               # base id-space size (compaction folds segs in)
     index_best: Optional[int]
+    n_appended: int = 0       # docs ever appended since the last compact
 
     # -- pytree plumbing (mesh/encoder/sizes are static metadata) ----------
     def tree_flatten(self):
         children = (self.vectors, self.codes, self.post_docs,
-                    self.post_codes, self.offsets, self.counts)
-        return children, (self.encoder, self.mesh, self.n_docs, self.index_best)
+                    self.post_codes, self.offsets, self.live,
+                    self.seg_vectors, self.seg_codes, self.seg_gids,
+                    self.seg_live)
+        return children, (self.encoder, self.mesh, self.n_docs,
+                          self.index_best, self.n_appended)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -123,68 +181,294 @@ class ShardedVectorIndex:
     def n_features(self) -> int:
         return self.vectors.shape[2]
 
+    @property
+    def seg_capacity(self) -> int:
+        """Append-segment slots per shard (0 = no ingest since build)."""
+        return self.seg_vectors.shape[1]
+
+    @property
+    def n_ids(self) -> int:
+        """Global id-space size: base docs + docs ever appended."""
+        return self.n_docs + self.n_appended
+
     # ----------------------------------------------------------------- build
+    @classmethod
+    def _partition_geometry(cls, mesh: Mesh, n: int) -> Tuple[int, int, int]:
+        if DATA_AXIS not in mesh.axis_names:
+            raise ValueError(f"mesh has no {DATA_AXIS!r} axis: {mesh.axis_names}")
+        ns = int(mesh.shape[DATA_AXIS])
+        if ns > n:
+            raise ValueError(f"more shards ({ns}) than documents ({n})")
+        dp = math.ceil(n / ns)
+        return ns, dp, ns * dp - n
+
+    @classmethod
+    def _offsets(cls, ns: int, dp: int) -> np.ndarray:
+        return (np.arange(ns) * dp).astype(np.int32)
+
+    @classmethod
+    def _empty_segments(cls, mesh: Mesh, ns: int, n_feat: int, n_cols: int,
+                        code_dtype):
+        sentinel = _SENTINEL[np.dtype(code_dtype)]
+        return (
+            _put(mesh, jnp.zeros((ns, 0, n_feat), jnp.float32), _ROW),
+            _put(mesh, jnp.full((ns, 0, n_cols), sentinel, code_dtype), _ROW),
+            _put(mesh, jnp.full((ns, 0), -1, jnp.int32), _VEC),
+            _put(mesh, jnp.zeros((ns, 0), bool), _VEC),
+        )
+
+    @classmethod
+    def build_sharded(
+        cls,
+        vectors,
+        mesh: Mesh,
+        encoder: Encoder = RoundingEncoder(2),
+        index_best: Optional[int] = None,
+        *,
+        live=None,
+    ) -> "ShardedVectorIndex":
+        """Build the index ON the mesh: one compiled SPMD program runs
+        normalize -> encode -> ``index_best`` masking -> ``build_postings``
+        per shard under ``shard_map`` -- no per-shard host loop, no host
+        round-trip (device-resident ``vectors`` are resharded in place).
+
+        Bit-identical to ``VectorIndex.build(vectors, ...)`` followed by
+        :meth:`from_index` (pinned by tests/test_build_parity.py): every
+        stage is row-wise, so per-shard blocks produce the same bits as the
+        single-device whole.  ``live=False`` rows (used by :meth:`compact`
+        to carry tombstones through a rebuild) become sentinel-coded,
+        zero-vector padding in place.
+        """
+        v = jnp.asarray(vectors)
+        if v.dtype != jnp.float32:
+            v = v.astype(jnp.float32)
+        if v.ndim != 2:
+            raise ValueError(f"vectors must be 2-D, got shape {v.shape}")
+        n, n_feat = v.shape
+        ns, dp, pad = cls._partition_geometry(mesh, n)
+        lv = (jnp.ones((n,), bool) if live is None
+              else jnp.asarray(live, bool))
+        if pad:
+            v = jnp.concatenate([v, jnp.zeros((pad, n_feat), jnp.float32)])
+            lv = jnp.concatenate([lv, jnp.zeros((pad,), bool)])
+        raw = _put(mesh, v.reshape(ns, dp, n_feat), _ROW)
+        lv = _put(mesh, lv.reshape(ns, dp), _VEC)
+
+        vecs, codes, pdocs, pcodes = _build_program(
+            raw, lv, mesh=mesh, encoder=encoder, index_best=index_best)
+
+        return cls(
+            vectors=vecs,
+            codes=codes,
+            post_docs=pdocs,
+            post_codes=pcodes,
+            offsets=_put(mesh, cls._offsets(ns, dp), P(DATA_AXIS)),
+            live=lv,
+            encoder=encoder,
+            mesh=mesh,
+            n_docs=n,
+            index_best=index_best,
+            **cls._segments_kw(mesh, ns, n_feat, codes),
+        )
+
+    @classmethod
+    def _segments_kw(cls, mesh, ns, n_feat, codes):
+        sv, sc, sg, sl = cls._empty_segments(mesh, ns, n_feat,
+                                             codes.shape[-1], codes.dtype)
+        return {"seg_vectors": sv, "seg_codes": sc, "seg_gids": sg,
+                "seg_live": sl}
+
     @classmethod
     def from_index(cls, index: VectorIndex, mesh: Mesh) -> "ShardedVectorIndex":
         """Partition an existing single-device index across ``mesh``'s
-        ``data`` axis (contiguous ranges, ES-style doc-sharding).
+        ``data`` axis (contiguous ranges, ES-style doc-sharding).  The
+        per-shard posting lists are rebuilt in ONE compiled SPMD program
+        (argsort per shard under ``shard_map``) -- not a host loop -- and
+        device-resident leaves reshard without a host numpy round-trip.
 
         On a ``(data, replica)`` mesh every leaf's spec leaves the
         ``replica`` axis unmentioned, so ``NamedSharding`` replicates each
         doc-shard across it -- R identical serving copies of the corpus."""
-        if DATA_AXIS not in mesh.axis_names:
-            raise ValueError(f"mesh has no {DATA_AXIS!r} axis: {mesh.axis_names}")
-        ns = int(mesh.shape[DATA_AXIS])
         n = index.n_docs
-        if ns > n:
-            raise ValueError(f"more shards ({ns}) than documents ({n})")
-        dp = math.ceil(n / ns)
-        pad = ns * dp - n
+        ns, dp, pad = cls._partition_geometry(mesh, n)
 
-        vectors = np.asarray(index.vectors)
-        codes = np.asarray(index.codes)
+        vectors = jnp.asarray(index.vectors)
+        codes = jnp.asarray(index.codes)
         sentinel = _SENTINEL[codes.dtype]
-        vectors = np.concatenate(
-            [vectors, np.zeros((pad, vectors.shape[1]), vectors.dtype)])
-        codes = np.concatenate(
-            [codes, np.full((pad, codes.shape[1]), sentinel, codes.dtype)])
-        vectors = vectors.reshape(ns, dp, -1)
-        codes = codes.reshape(ns, dp, -1)
+        if pad:
+            vectors = jnp.concatenate(
+                [vectors, jnp.zeros((pad, vectors.shape[1]), vectors.dtype)])
+            codes = jnp.concatenate(
+                [codes, jnp.full((pad, codes.shape[1]), sentinel, codes.dtype)])
+        n_feat = vectors.shape[1]
+        vectors = _put(mesh, vectors.reshape(ns, dp, n_feat), _ROW)
+        codes = _put(mesh, codes.reshape(ns, dp, -1), _ROW)
 
-        # per-shard inverted indexes: the sentinel sorts to the tail of every
-        # posting list, so padded docs are invisible to range lookups
-        post_docs, post_codes = [], []
-        for s in range(ns):
-            p = build_postings(jnp.asarray(codes[s]))
-            post_docs.append(np.asarray(p.post_docs))
-            post_codes.append(np.asarray(p.post_codes))
+        # per-shard inverted indexes in one SPMD program: the sentinel sorts
+        # to the tail of every posting list, so padded docs are invisible to
+        # range lookups
+        pdocs, pcodes = _postings_program(codes, mesh=mesh)
 
-        offsets = (np.arange(ns) * dp).astype(np.int32)
-        counts = np.clip(n - offsets, 0, dp).astype(np.int32)
-
-        def put(x, spec):
-            return jax.device_put(jnp.asarray(x), NamedSharding(mesh, spec))
-
-        row = P(DATA_AXIS, None, None)
+        offsets = cls._offsets(ns, dp)
+        counts = np.clip(n - offsets, 0, dp)        # real rows per shard
+        live = np.arange(dp)[None, :] < counts[:, None]
         return cls(
-            vectors=put(vectors, row),
-            codes=put(codes, row),
-            post_docs=put(np.stack(post_docs), row),
-            post_codes=put(np.stack(post_codes), row),
-            offsets=put(offsets, P(DATA_AXIS)),
-            counts=put(counts, P(DATA_AXIS)),
+            vectors=vectors,
+            codes=codes,
+            post_docs=pdocs,
+            post_codes=pcodes,
+            offsets=_put(mesh, offsets, P(DATA_AXIS)),
+            live=_put(mesh, live, _VEC),
             encoder=index.encoder,
             mesh=mesh,
             n_docs=n,
             index_best=index.index_best,
+            **cls._segments_kw(mesh, ns, n_feat, codes),
         )
 
     @classmethod
     def build(cls, vectors, mesh: Mesh, encoder=None, index_best=None):
-        """Build + shard in one step (single-device build, then partition)."""
+        """Build + shard in one step -- now the on-device sharded build
+        (:meth:`build_sharded`); accepts device-resident vectors without a
+        host numpy round-trip."""
         kwargs = {} if encoder is None else {"encoder": encoder}
-        return cls.from_index(
-            VectorIndex.build(vectors, index_best=index_best, **kwargs), mesh)
+        return cls.build_sharded(vectors, mesh, index_best=index_best,
+                                 **kwargs)
+
+    # ----------------------------------------------------------------- ingest
+    def add_documents(self, vectors) -> "ShardedVectorIndex":
+        """Append new documents ES-style -> a new index sharing every
+        unchanged leaf with ``self``.
+
+        New docs are normalized/encoded on device, routed round-robin
+        across shards, and written into per-shard append segments; global
+        ids continue from ``n_ids`` (monotonic until :meth:`compact` folds
+        segments into the base).  Segments are searched alongside the base
+        (direct code match; no posting lists) until compaction.  Segment
+        capacity grows geometrically and the query phase traces ``n_ids``
+        as a runtime scalar, so an ingest stream recompiles the search
+        program only O(log(appended)) times (for ``page < n_ids``), not
+        per batch.
+        """
+        v = jnp.atleast_2d(jnp.asarray(vectors, jnp.float32))
+        m = int(v.shape[0])
+        if m == 0:
+            return self
+        if v.shape[1] != self.n_features:
+            raise ValueError(
+                f"expected {self.n_features}-feature vectors, got {v.shape}")
+        v = normalize(v)
+        codes = self.encoder.encode(v)
+        sentinel = _SENTINEL[self.codes.dtype]
+        if self.index_best is not None:
+            codes = index_best_codes(v, codes, self.index_best, sentinel)
+
+        ns, G = self.n_shards, self.seg_capacity
+        # routing is strictly round-robin on the global append counter, so
+        # per-shard slot usage is a pure function of n_appended (tombstones
+        # keep their slot) -- no device readback on the hot ingest path
+        used = np.full(ns, self.n_appended // ns, np.int64)
+        used[: self.n_appended % ns] += 1
+        shard_of = (self.n_appended + np.arange(m)) % ns
+        slot_of = used[shard_of] + np.arange(m) // ns
+        need = int(slot_of.max()) + 1
+        gids = (self.n_ids + np.arange(m)).astype(np.int32)
+
+        svec, scod = self.seg_vectors, self.seg_codes
+        sgid, sliv = self.seg_gids, self.seg_live
+        if need > G:
+            # grow geometrically: search programs specialise on the segment
+            # width, so exact-fit growth would recompile the whole SPMD
+            # query phase per ingest batch -- doubling amortises that to
+            # O(log(appended)) compiles (spare slots are sentinel-coded,
+            # live=False, and invisible to every mask)
+            grow = max(need, 2 * G, 8) - G
+            n_feat, C = self.n_features, scod.shape[-1]
+            svec = jnp.concatenate(
+                [svec, jnp.zeros((ns, grow, n_feat), jnp.float32)], axis=1)
+            scod = jnp.concatenate(
+                [scod, jnp.full((ns, grow, C), sentinel, scod.dtype)], axis=1)
+            sgid = jnp.concatenate(
+                [sgid, jnp.full((ns, grow), -1, jnp.int32)], axis=1)
+            sliv = jnp.concatenate(
+                [sliv, jnp.zeros((ns, grow), bool)], axis=1)
+        sh, sl = jnp.asarray(shard_of), jnp.asarray(slot_of)
+        return dataclasses.replace(
+            self,
+            seg_vectors=_put(self.mesh, svec.at[sh, sl].set(v), _ROW),
+            seg_codes=_put(self.mesh,
+                           scod.at[sh, sl].set(codes.astype(scod.dtype)),
+                           _ROW),
+            seg_gids=_put(self.mesh, sgid.at[sh, sl].set(jnp.asarray(gids)),
+                          _VEC),
+            seg_live=_put(self.mesh, sliv.at[sh, sl].set(True), _VEC),
+            n_appended=self.n_appended + m,
+        )
+
+    def delete(self, ids) -> "ShardedVectorIndex":
+        """Tombstone documents by global id -> a new index.
+
+        The doc's ``live`` flag goes False and its codes become the
+        sentinel, so the ``codes``/``onehot`` engines skip it outright and
+        the ``live`` mask blocks it from every result page.  Base posting
+        lists keep the tombstoned entry until :meth:`compact` (Lucene
+        semantics: df may transiently count deleted docs).  Deleting an
+        already-dead or padded id is a no-op for that id.
+        """
+        ids = np.unique(np.atleast_1d(np.asarray(ids, np.int64)))
+        if ids.size == 0:
+            return self
+        if (ids < 0).any() or (ids >= self.n_ids).any():
+            raise ValueError(
+                f"ids must be in [0, {self.n_ids}), got {ids.min()}..{ids.max()}")
+        sentinel = _SENTINEL[self.codes.dtype]
+        new = {}
+        base = ids[ids < self.n_docs]
+        if base.size:
+            s, r = np.divmod(base, self.docs_per_shard)
+            s, r = jnp.asarray(s), jnp.asarray(r)
+            new["live"] = _put(self.mesh, self.live.at[s, r].set(False), _VEC)
+            new["codes"] = _put(self.mesh,
+                                self.codes.at[s, r].set(sentinel), _ROW)
+        app = ids[ids >= self.n_docs]
+        if app.size:
+            s, g = np.nonzero(np.isin(np.asarray(self.seg_gids), app))
+            s, g = jnp.asarray(s), jnp.asarray(g)
+            new["seg_live"] = _put(self.mesh,
+                                   self.seg_live.at[s, g].set(False), _VEC)
+            new["seg_codes"] = _put(self.mesh,
+                                    self.seg_codes.at[s, g].set(sentinel),
+                                    _ROW)
+        return dataclasses.replace(self, **new)
+
+    def compact(self) -> "ShardedVectorIndex":
+        """Fold append segments and tombstones back into a clean base by
+        re-running the on-device sharded build over the live doc table.
+
+        Global ids are STABLE: the new base spans ``[0, n_ids)`` in old-id
+        order, with dead ids carried as sentinel-coded padding rows --
+        posting lists are tombstone-free again and df is exact.  The new
+        index has ``n_appended == 0`` and zero-width segments.
+        """
+        ns, dp, n_feat = self.n_shards, self.docs_per_shard, self.n_features
+        flat_v = self.vectors.reshape(ns * dp, n_feat)[: self.n_docs]
+        flat_l = self.live.reshape(ns * dp)[: self.n_docs]
+        if self.n_appended:
+            table_v = jnp.concatenate(
+                [flat_v, jnp.zeros((self.n_appended, n_feat), jnp.float32)])
+            table_l = jnp.concatenate(
+                [flat_l, jnp.zeros((self.n_appended,), bool)])
+            sg = self.seg_gids.reshape(-1)
+            idx = jnp.where(sg >= 0, sg, self.n_ids)     # never-used -> OOB
+            table_v = table_v.at[idx].set(
+                self.seg_vectors.reshape(-1, n_feat), mode="drop")
+            table_l = table_l.at[idx].set(
+                self.seg_live.reshape(-1), mode="drop")
+        else:
+            table_v, table_l = flat_v, flat_l
+        return type(self).build_sharded(
+            table_v, self.mesh, encoder=self.encoder,
+            index_best=self.index_best, live=table_l)
 
     # ------------------------------------------------------------------ search
     def search(
@@ -206,13 +490,15 @@ class ShardedVectorIndex:
         (``"gather"`` = blocking all-gather, ``"stream"`` = ring-streamed
         per-shard pages) and any replica count -- queries round-robin
         across replica groups, each holding a full copy of the corpus.
+        After ingest/deletes the same protocol covers base + segments;
+        result slots beyond the live doc count are ``(id=-1, score=-inf)``.
         """
         if merge not in ("gather", "stream"):
             raise ValueError(f"unknown merge transport {merge!r}")
         queries = jnp.atleast_2d(queries)
-        page = min(page, self.n_docs)
+        page = min(page, self.n_ids)
         k = min(k, page)
-        page_loc = min(page, self.docs_per_shard)
+        page_loc = min(page, self.docs_per_shard + self.seg_capacity)
 
         # round-robin over replica groups: the batch splits along the
         # replica axis, so pad it up to a multiple of R (pad rows are
@@ -230,10 +516,18 @@ class ShardedVectorIndex:
 
         L = self.docs_per_shard if max_postings is None \
             else min(max_postings, self.docs_per_shard)
+        seg = self.seg_capacity > 0
         gids, scores = _query_phase(
-            self, q, qcodes, mask, page_loc=page_loc, engine=engine,
-            weighting=weighting, max_postings=L,
-            k=k if merge == "stream" else 0, merge=merge,
+            self.vectors, self.codes, self.post_docs, self.post_codes,
+            self.offsets, self.live,
+            self.seg_vectors if seg else None,
+            self.seg_codes if seg else None,
+            self.seg_gids if seg else None,
+            self.seg_live if seg else None,
+            q, qcodes, mask, jnp.asarray(self.n_ids, jnp.int32),
+            mesh=self.mesh, max_abs_bucket=self.encoder.max_abs_bucket,
+            page_loc=page_loc, engine=engine, weighting=weighting,
+            max_postings=L, k=k if merge == "stream" else 0, merge=merge,
         )
         # drop replica-pad rows BEFORE the final reduce: the rescore inside
         # _merge_phase must run at the true (Q, k, n) shape -- the canonical
@@ -241,10 +535,56 @@ class ShardedVectorIndex:
         # blocking and cost bit-parity with the single-device index
         if q_pad:
             gids, scores, q = gids[:n_q], scores[:n_q], q[:n_q]
-        return _merge_phase(self.vectors, gids, scores, q, k=k)
+        return _merge_phase(self, gids, scores, q, k=k)
 
 
-def _merge_phase(vectors, gids, scores, q, *, k):
+@partial(jax.jit, static_argnames=("mesh", "encoder", "index_best"))
+def _build_program(raw, live, *, mesh, encoder, index_best):
+    """THE on-device build: one SPMD program, whole pipeline per shard.
+
+    Every stage is row-wise (normalize, encode, best-mask) or
+    column-independent over the local rows (the posting argsort), so each
+    shard's block produces bit-identical results to the same rows inside a
+    single-device build -- which is exactly the parity the property suite
+    pins.  ``live=False`` rows (pads, carried tombstones) become zero
+    vectors with sentinel codes, sorting to the tail of every posting list.
+    """
+    from .shmap import shard_map
+
+    def local(vec, lv):
+        vec, lv = vec[0], lv[0]
+        v = normalize(vec)
+        v = jnp.where(lv[:, None], v, 0.0)
+        codes = encoder.encode(v)
+        sentinel = _SENTINEL[codes.dtype]
+        if index_best is not None:
+            codes = index_best_codes(v, codes, index_best, sentinel)
+        codes = jnp.where(lv[:, None], codes,
+                          jnp.asarray(sentinel, codes.dtype))
+        p = build_postings(codes)
+        return v[None], codes[None], p.post_docs[None], p.post_codes[None]
+
+    fn = shard_map(local, mesh=mesh, in_specs=(_ROW, _VEC),
+                   out_specs=(_ROW, _ROW, _ROW, _ROW), check=False)
+    return fn(raw, live)
+
+
+@partial(jax.jit, static_argnames=("mesh",))
+def _postings_program(codes, *, mesh):
+    """Per-shard posting-list build in one SPMD program (from_index path:
+    codes already exist, only the argsort runs per shard)."""
+    from .shmap import shard_map
+
+    def local(c):
+        p = build_postings(c[0])
+        return p.post_docs[None], p.post_codes[None]
+
+    fn = shard_map(local, mesh=mesh, in_specs=(_ROW,),
+                   out_specs=(_ROW, _ROW), check=False)
+    return fn(codes)
+
+
+def _merge_phase(sidx, gids, scores, q, *, k):
     """Coordinating-node reduce: global top-k over the exact cosines, then
     final scores recomputed at the (Q, k, n) shape shared with rerank_topk
     -- see exact_scores for why this gives bit-parity.  For the stream
@@ -256,32 +596,74 @@ def _merge_phase(vectors, gids, scores, q, *, k):
     coordinating device with *unsharded* operands, because GSPMD blocks a
     sharded einsum differently per mesh shape -- rescoring in-mesh costs
     last-ulp parity between e.g. a 4x1 and a 2x4 layout of the same corpus.
+
+    Result slots whose merged score is -inf (fewer than k live candidates)
+    report id -1 and keep score -inf through the rescore.
     """
-    top_ids, cvec = _merge_select(vectors, gids, scores, k=k)
+    if sidx.n_appended:
+        top_ids, cvec = _merge_select_seg(
+            sidx.vectors, sidx.seg_vectors, sidx.seg_gids, gids, scores,
+            k=k, n_docs=sidx.n_docs)
+    else:
+        top_ids, cvec = _merge_select(sidx.vectors, gids, scores, k=k)
     dev = jax.devices()[0]
     return top_ids, _rescore(jax.device_put(cvec, dev),
-                             jax.device_put(q, dev))
+                             jax.device_put(q, dev),
+                             jax.device_put(top_ids, dev))
 
 
 @partial(jax.jit, static_argnames=("k",))
 def _merge_select(vectors, gids, scores, *, k):
-    _, pos = jax.lax.top_k(scores, k)
+    top_s, pos = jax.lax.top_k(scores, k)
     top_ids = jnp.take_along_axis(gids, pos, axis=1)
+    top_ids = jnp.where(jnp.isneginf(top_s), -1, top_ids)
     flat_vectors = vectors.reshape(-1, vectors.shape[-1])
-    return top_ids, flat_vectors[top_ids]           # (Q, k, n) hit vectors
+    cvec = flat_vectors[jnp.maximum(top_ids, 0)]    # (Q, k, n) hit vectors
+    return top_ids, cvec
+
+
+@partial(jax.jit, static_argnames=("k", "n_docs"))
+def _merge_select_seg(vectors, seg_vectors, seg_gids, gids, scores, *, k,
+                      n_docs):
+    """Merge select over base + append segments.
+
+    Pure gathers only (no scatter): base hits fetch from the flat base by
+    gid = flat row; appended hits (gid >= ``n_docs``) resolve their segment
+    slot by gid equality (gids are unique across segments) and fetch from
+    the flattened segment rows.  Scatter-built lookup tables are unsafe
+    here -- on a replicated ``(data, replica)`` layout GSPMD reassembles a
+    scattered table with a cross-replica sum that double-counts the base
+    rows; gathers have no such reduction and stay exact.
+    """
+    top_s, pos = jax.lax.top_k(scores, k)
+    top_ids = jnp.take_along_axis(gids, pos, axis=1)
+    top_ids = jnp.where(jnp.isneginf(top_s), -1, top_ids)
+    n_feat = vectors.shape[-1]
+    flat = vectors.reshape(-1, n_feat)              # rows [0, S*dp)
+    base = flat[jnp.clip(top_ids, 0, flat.shape[0] - 1)]
+    sg = seg_gids.reshape(-1)
+    slot = jnp.argmax(top_ids[:, :, None] == sg[None, None, :], axis=-1)
+    segv = seg_vectors.reshape(-1, n_feat)[slot]
+    cvec = jnp.where((top_ids >= n_docs)[..., None], segv, base)
+    return top_ids, cvec                            # (Q, k, n) hit vectors
 
 
 @jax.jit
-def _rescore(cvec, q):
-    """exact_scores' canonical (Q, k, n) einsum over pre-fetched hits."""
-    return jnp.einsum("qkn,qn->qk", cvec, q,
-                      preferred_element_type=jnp.float32)
+def _rescore(cvec, q, top_ids):
+    """exact_scores' canonical (Q, k, n) einsum over pre-fetched hits;
+    unfillable (id -1) slots stay -inf instead of a junk-row cosine."""
+    s = jnp.einsum("qkn,qn->qk", cvec, q,
+                   preferred_element_type=jnp.float32)
+    return jnp.where(top_ids < 0, -jnp.inf, s)
 
 
-@partial(jax.jit, static_argnames=("page_loc", "engine", "weighting",
-                                   "max_postings", "k", "merge"))
-def _query_phase(sidx, q, qcodes, mask, *, page_loc, engine, weighting,
-                 max_postings, k, merge):
+@partial(jax.jit, static_argnames=("mesh", "max_abs_bucket", "page_loc",
+                                   "engine", "weighting", "max_postings",
+                                   "k", "merge"))
+def _query_phase(vectors, codes, post_docs, post_codes, offsets, live,
+                 seg_vectors, seg_codes, seg_gids, seg_live,
+                 q, qcodes, mask, n_ids, *, mesh, max_abs_bucket, page_loc,
+                 engine, weighting, max_postings, k, merge):
     """Per-shard query phase under shard_map -> merge-ready candidates.
 
     ``merge="gather"``: returns global candidate ids (Q, S*page_loc) and
@@ -292,24 +674,44 @@ def _query_phase(sidx, q, qcodes, mask, *, page_loc, engine, weighting,
     (Q, k) ids/scores directly.  On a ``(data, replica)`` mesh the query
     batch additionally splits along ``replica`` (Q/R rows per group) and
     reassembles in the out-spec.
+
+    With append segments (``seg_* is not None``) each shard scores its
+    segment rows by direct per-column bucket equality -- the same score
+    every engine computes -- and folds them into the local candidate page;
+    their df joins the global psum via ``code_df``.  A fresh index
+    (no segments) compiles the exact pre-ingest program.
+
+    Takes leaves, not the index pytree, and the id-space size ``n_ids`` as
+    a TRACED scalar: repeated ingest batches that stay within the segment
+    capacity then hit this jit's cache (same shapes, same treedef) instead
+    of recompiling the SPMD program per ``add_documents``.
     """
     from .shmap import shard_map
 
-    mesh = sidx.mesh
-    dp = sidx.docs_per_shard
-    enc = sidx.encoder
-    n_docs = sidx.n_docs
-    n_shards = sidx.n_shards
+    dp = vectors.shape[1]
+    G = 0 if seg_vectors is None else seg_vectors.shape[1]
+    n_shards = vectors.shape[0]
 
-    def local(vec, codes, pdocs, pcodes, off, cnt, q, qcodes, mask):
-        vec, codes = vec[0], codes[0]
+    def local(*args):
+        if G:
+            (vec, codes, pdocs, pcodes, off, lv,
+             svec, scod, sgid, sliv, q, qcodes, mask, n_ids) = args
+            svec, scod = svec[0], scod[0]
+            sgid, sliv = sgid[0], sliv[0]
+        else:
+            (vec, codes, pdocs, pcodes, off, lv,
+             q, qcodes, mask, n_ids) = args
+        vec, codes, lv = vec[0], codes[0], lv[0]
         postings = Postings(pdocs[0], pcodes[0], dp)
-        off, cnt = off[0], cnt[0]
+        off = off[0]
 
         if weighting == "idf":
             lo, hi = jax.vmap(lambda c: lookup(postings, c))(qcodes)
-            df = jax.lax.psum(hi - lo, DATA_AXIS)   # global df, integer-exact
-            w = idf_weights(df, n_docs)
+            df = hi - lo
+            if G:
+                df = df + code_df(scod, qcodes)
+            df = jax.lax.psum(df, DATA_AXIS)        # global df, integer-exact
+            w = idf_weights(df, n_ids)
         elif weighting == "count":
             w = jnp.ones(qcodes.shape, jnp.float32)
         else:
@@ -317,34 +719,52 @@ def _query_phase(sidx, q, qcodes, mask, *, page_loc, engine, weighting,
         w = jnp.where(mask, w, 0.0)
 
         s1 = phase1_engine_scores(codes, postings, qcodes, w, engine,
-                                  max_postings, enc.max_abs_bucket)
+                                  max_postings, max_abs_bucket)
+        s1 = jnp.where(lv[None, :], s1, -jnp.inf)   # pads/tombstones out
+        if G:
+            # segment phase 1: direct bucket-equality match (the identity
+            # every engine lowers); sentinel slots never match but mask
+            # them anyway -- liveness must not hinge on code values
+            eq = (qcodes[:, None, :] == scod[None, :, :]).astype(jnp.int8)
+            s_seg = jnp.einsum("qgc,qc->qg", eq, w,
+                               preferred_element_type=jnp.float32)
+            s1 = jnp.concatenate(
+                [s1, jnp.where(sliv[None, :], s_seg, -jnp.inf)], axis=1)
+        _, cand = jax.lax.top_k(s1, page_loc)       # (Q, page_loc)
 
-        valid = jnp.arange(dp) < cnt                       # pads at the tail
-        s1 = jnp.where(valid[None, :], s1, -jnp.inf)
-        _, cand = jax.lax.top_k(s1, page_loc)              # (Q, page_loc)
-
-        cvec = vec[cand]                                   # (Q, page_loc, n)
+        if G:
+            vec_all = jnp.concatenate([vec, svec], axis=0)
+            live_all = jnp.concatenate([lv, sliv])
+            gid_all = jnp.concatenate(
+                [off + jnp.arange(dp, dtype=jnp.int32), sgid])
+        else:
+            vec_all, live_all = vec, lv
+        cvec = vec_all[cand]                        # (Q, page_loc, n)
         s2 = jnp.einsum("qpn,qn->qp", cvec, q,
                         preferred_element_type=jnp.float32)
-        s2 = jnp.where(cand < cnt, s2, -jnp.inf)
-        gid = (cand + off).astype(jnp.int32)
+        s2 = jnp.where(live_all[cand], s2, -jnp.inf)
+        gid = gid_all[cand] if G else (cand + off).astype(jnp.int32)
         if merge == "gather":
             return gid, s2
         return _stream_merge_local(gid, s2, n_shards, k)
 
-    row = P(DATA_AXIS, None, None)
     rep = REPLICA_AXIS in mesh.axis_names
     qaxis = REPLICA_AXIS if rep else None
+    args = [vectors, codes, post_docs, post_codes, offsets, live]
+    specs = [_ROW, _ROW, _ROW, _ROW, P(DATA_AXIS), _VEC]
+    if G:
+        args += [seg_vectors, seg_codes, seg_gids, seg_live]
+        specs += [_ROW, _ROW, _VEC, _VEC]
+    args += [q, qcodes, mask, n_ids]
+    specs += [P(qaxis, None)] * 3 + [P()]
     out = P(qaxis, DATA_AXIS) if merge == "gather" else P(qaxis, None)
     fn = shard_map(
         local, mesh=mesh,
-        in_specs=(row, row, row, row, P(DATA_AXIS), P(DATA_AXIS),
-                  P(qaxis, None), P(qaxis, None), P(qaxis, None)),
+        in_specs=tuple(specs),
         out_specs=(out, out),
         check=False,
     )
-    return fn(sidx.vectors, sidx.codes, sidx.post_docs, sidx.post_codes,
-              sidx.offsets, sidx.counts, q, qcodes, mask)
+    return fn(*args)
 
 
 def _stream_merge_local(gid, s2, n_shards, k):
@@ -360,9 +780,9 @@ def _stream_merge_local(gid, s2, n_shards, k):
     S*page.  The coordinator's result is broadcast with a masked psum
     (every other device contributes zeros).
 
-    Pre-merge ``-inf`` placeholder rows can never survive: ``k`` is
-    clamped to ``page <= n_docs``, so at least ``k`` finite-score real
-    candidates exist across the S pages and displace them.
+    Pre-merge ``-inf`` placeholder rows surface only when fewer than ``k``
+    live candidates exist across the S pages (possible after deletes);
+    the merge select downstream reports those slots as (id=-1, -inf).
     """
     acc_s = jnp.full((s2.shape[0], k), -jnp.inf, s2.dtype)
     acc_i = jnp.zeros((gid.shape[0], k), gid.dtype)

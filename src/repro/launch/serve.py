@@ -1,18 +1,23 @@
 """Serving launcher: build a vector index and serve batched queries.
 
     PYTHONPATH=src python -m repro.launch.serve --docs 10000 --features 128 \
-        --queries 256 --batch-size 32 [--shards 4 --replicas 2 --merge stream]
+        --queries 256 --batch-size 32 [--shards 4 --replicas 2 --merge stream] \
+        [--ingest 1000]
 
 Stands up the paper's system end to end on local devices: synthetic corpus
 -> LSA -> encoded index -> BatchedSearchEngine, then reports quality vs the
 brute-force gold standard and effective latency/throughput.  ``--shards N``
-doc-shards the index over an N-device ``data`` mesh (ES-style);
-``--replicas R`` replicates every doc-shard R times on a ``(data, replica)``
-mesh (queries round-robin across the replica groups -- ES replica shards);
-``--merge stream`` streams per-shard candidate pages into the coordinating
-merge instead of one blocking all-gather.  S*R virtual host devices are
-forced when the platform has fewer.  (The pod-scale index layouts are
-exercised by repro.launch.dryrun's vectordb-wiki cells.)
+doc-shards the index over an N-device ``data`` mesh (ES-style; the index is
+built ON the mesh by the one-program sharded build); ``--replicas R``
+replicates every doc-shard R times on a ``(data, replica)`` mesh (queries
+round-robin across the replica groups -- ES replica shards); ``--merge
+stream`` streams per-shard candidate pages into the coordinating merge
+instead of one blocking all-gather; ``--ingest M`` holds the last M docs
+out of the build and hot-adds them through the live engine (ES append
+segments), so the quality report covers docs that were never in the built
+index.  S*R virtual host devices are forced when the platform has fewer.
+(The pod-scale index layouts are exercised by repro.launch.dryrun's
+vectordb-wiki cells.)
 """
 
 from __future__ import annotations
@@ -57,38 +62,63 @@ def main():
                     choices=["gather", "stream"],
                     help="sharded merge transport (default: gather; stream = "
                          "ring-streamed per-shard pages)")
+    ap.add_argument("--ingest", type=int, default=0,
+                    help="hold back N docs from the build and hot-add them "
+                         "through the running engine (needs --shards)")
     args = ap.parse_args()
     if args.replicas > 1 and args.shards < 1:
         ap.error("--replicas needs --shards >= 1")
     if args.merge and args.shards < 1:
         ap.error("--merge needs --shards >= 1")
+    if args.ingest and args.shards < 1:
+        ap.error("--ingest needs --shards >= 1 (plain VectorIndex is "
+                 "immutable)")
+    if not 0 <= args.ingest < args.docs:
+        ap.error("--ingest must be in [0, --docs)")
 
     print(f"building corpus ({args.docs} docs) + LSA-{args.features} ...")
     corpus = make_corpus(n_docs=args.docs, vocab_size=max(args.docs, 8000),
                          n_topics=64, seed=0)
     pipe = build_lsa(corpus, n_features=args.features)
-    index = VectorIndex.build(
-        pipe.doc_vectors,
-        CombinedEncoder(RoundingEncoder(1), IntervalEncoder(0.1)))
+    encoder = CombinedEncoder(RoundingEncoder(1), IntervalEncoder(0.1))
+    # gold standard is brute force over the FULL corpus -- including the
+    # held-back docs the engine only ever sees through hot ingest -- and
+    # needs no encoded index, only the normalized vectors
+    import jax.numpy as jnp
+
+    from repro.core.rerank import brute_force_topk, normalize
 
     rng = np.random.default_rng(1)
     qids = rng.choice(args.docs, size=args.queries, replace=False)
     queries = np.asarray(pipe.doc_vectors[qids])
-    gold_ids, _ = index.gold_topk(pipe.doc_vectors[qids], 10)
+    unit_vecs = normalize(jnp.asarray(pipe.doc_vectors, jnp.float32))
+    gold_ids, _ = brute_force_topk(unit_vecs, unit_vecs[qids], 10)
 
     if args.shards > 0:
+        from repro.dist.shard_index import ShardedVectorIndex
         from repro.launch.mesh import make_shard_mesh
 
         mesh = make_shard_mesh(args.shards, args.replicas)
-        print(f"doc-sharding index over {args.shards} shard(s) "
-              f"x {args.replicas} replica(s) ...")
-        index = index.shard(mesh)
+        built = args.docs - args.ingest
+        print(f"on-device sharded build: {built} docs over {args.shards} "
+              f"shard(s) x {args.replicas} replica(s) ...")
+        index = ShardedVectorIndex.build_sharded(
+            pipe.doc_vectors[:built], mesh, encoder=encoder)
+    else:
+        index = VectorIndex.build(pipe.doc_vectors, encoder)
 
     engine = BatchedSearchEngine(
         index, batch_size=args.batch_size, k=10, page=args.page,
         trim=TrimFilter(args.trim) if args.trim else None, engine=args.engine,
         merge=args.merge)
     try:
+        if args.ingest:
+            t0 = time.time()
+            first = engine.add_documents(pipe.doc_vectors[-args.ingest:])
+            dt = time.time() - t0
+            print(f"hot-added {args.ingest} docs (ids {first}.."
+                  f"{first + args.ingest - 1}) in {dt*1e3:.1f} ms "
+                  f"({args.ingest/dt:.0f} docs/s)")
         t0 = time.time()
         futs = [engine.submit(q) for q in queries]
         results = [f.result(timeout=120) for f in futs]
@@ -96,7 +126,6 @@ def main():
     finally:
         engine.close()
 
-    import jax.numpy as jnp
     ids = jnp.asarray(np.stack([r[0] for r in results]))
     p10 = float(precision_at_k(ids, gold_ids).mean())
     print(f"served {args.queries} queries in {dt:.2f}s "

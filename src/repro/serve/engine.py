@@ -31,6 +31,13 @@ has no worker to drain it); a search that raises inside the worker fails
 only that batch's futures (``set_exception``) and the worker keeps
 serving subsequent batches; ``close`` drains everything already queued
 before returning.
+
+**Hot ingest**: ``add_documents`` grows a sharded index ES-style (append
+segments, :meth:`repro.dist.shard_index.ShardedVectorIndex.add_documents`)
+and atomically swaps the new index in under the engine lock -- the batch
+in flight finishes against the old index, every batch dequeued afterwards
+sees the new documents.  Ingest is a control-plane operation: submits
+block for its (short) duration, which is the ES refresh semantics.
 """
 
 from __future__ import annotations
@@ -85,6 +92,27 @@ class BatchedSearchEngine:
 
     def search(self, query_vec: np.ndarray, timeout: float = 10.0):
         return self.submit(query_vec).result(timeout=timeout)
+
+    def add_documents(self, vectors: np.ndarray) -> int:
+        """Hot-add documents; returns the first global id assigned.
+
+        The grown index (per-shard append segments) replaces ``self.index``
+        atomically: in-flight batches finish on the old index, subsequent
+        batches search the new docs.  Raises ``RuntimeError`` after
+        ``close`` and ``TypeError`` for indexes without incremental ingest
+        (plain :class:`VectorIndex` is immutable -- shard it first).
+        """
+        with self._lock:
+            if self._stop:
+                raise RuntimeError("engine closed")
+            add = getattr(self.index, "add_documents", None)
+            if add is None:
+                raise TypeError(
+                    f"{type(self.index).__name__} does not support "
+                    "incremental ingest; serve a ShardedVectorIndex")
+            first_id = self.index.n_ids
+            self.index = add(vectors)
+            return first_id
 
     def close(self):
         with self._lock:

@@ -1,0 +1,243 @@
+"""Incremental ingest regressions (dist/shard_index.py segments/tombstones).
+
+The pinned invariant: padded and tombstoned sentinel docs NEVER surface in
+search results at any (k, page) -- before and after ``add_documents`` /
+``delete`` / ``compact`` -- for both phase-1 engine families (postings
+range-lookup and direct code match) and both merge transports.  Result
+slots beyond the live doc count report ``(id=-1, score=-inf)`` instead of
+leaking a pad.  Multi-shard cases run in a subprocess (virtual-device flag
+precedes jax init, same pattern as test_shard_index.py).
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import VectorIndex
+from repro.dist.shard_index import ShardedVectorIndex
+from repro.launch.mesh import make_shard_mesh
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_KP_GRID = [(1, 1), (3, 8), (10, 23), (10, 10_000), (64, 64)]
+
+
+def _check_clean(sidx, queries, live_ids, *, engines=("postings", "codes"),
+                 merge="gather"):
+    """No dead/pad/sentinel id in any result cell, -inf slots are id -1."""
+    live_ids = set(live_ids)
+    for engine in engines:
+        for k, page in _KP_GRID:
+            ids, scores = sidx.search(queries, k=k, page=page, engine=engine,
+                                      merge=merge)
+            ids, scores = np.asarray(ids), np.asarray(scores)
+            dead = (ids == -1)
+            assert (np.isneginf(scores) == dead).all(), (engine, k, page)
+            assert all(i in live_ids for i in ids[~dead].ravel()), \
+                (engine, k, page, ids)
+
+
+def _build(n_docs=23, dims=12, seed=0):
+    rng = np.random.default_rng(seed)
+    V = rng.normal(size=(n_docs, dims)).astype(np.float32)
+    W = rng.normal(size=(9, dims)).astype(np.float32)
+    return V, W
+
+
+def test_sentinel_never_surfaces_through_ingest_lifecycle():
+    """The satellite regression: every (k, page) cell stays sentinel-free
+    before ingest, after add_documents, after delete, and after compact."""
+    V, W = _build()
+    sidx = ShardedVectorIndex.build_sharded(V, make_shard_mesh(1))
+    Q = np.concatenate([V[:3], W[:3]])
+
+    _check_clean(sidx, Q, range(23))
+
+    grown = sidx.add_documents(W)                    # gids 23..31
+    assert grown.n_ids == 32 and grown.seg_capacity == 9
+    _check_clean(grown, Q, range(32))
+
+    pruned = grown.delete([0, 7, 25, 31])            # base + segment dead
+    _check_clean(pruned, Q, set(range(32)) - {0, 7, 25, 31})
+
+    packed = pruned.compact()
+    assert packed.n_docs == 32 and packed.n_appended == 0
+    assert packed.seg_capacity == 0
+    _check_clean(packed, Q, set(range(32)) - {0, 7, 25, 31})
+
+    # compaction folds tombstones out of the posting lists too: the dead
+    # rows' codes are the sentinel, so they sort to every list's tail
+    codes = np.asarray(packed.codes).reshape(-1, packed.codes.shape[-1])
+    from repro.core.search import _SENTINEL
+    sentinel = _SENTINEL[codes.dtype]
+    assert (codes[[0, 7, 25, 31]] == sentinel).all()
+
+
+def test_appended_docs_are_searchable_and_exact():
+    """A hot-added doc is retrievable as its own top hit (score ~1), and a
+    compacted index returns the same live result set."""
+    V, W = _build(seed=1)
+    sidx = ShardedVectorIndex.build_sharded(V, make_shard_mesh(1))
+    grown = sidx.add_documents(W)
+    ids, scores = grown.search(W, k=3, page=1_000, engine="codes")
+    ids, scores = np.asarray(ids), np.asarray(scores)
+    assert (ids[:, 0] == np.arange(23, 32)).all()
+    np.testing.assert_allclose(scores[:, 0], 1.0, rtol=1e-5)
+
+    packed = grown.compact()
+    ids2, _ = packed.search(W, k=32, page=1_000, engine="postings")
+    idsf, _ = grown.search(W, k=32, page=1_000, engine="postings")
+    assert np.array_equal(np.sort(np.asarray(ids2), 1),
+                          np.sort(np.asarray(idsf), 1))
+
+
+def test_delete_is_immediate_for_every_engine():
+    """Tombstones vanish from results before compaction, under BOTH engine
+    families: the live mask blocks postings-range hits, the sentinel codes
+    block direct code-match hits."""
+    V, W = _build(seed=2)
+    sidx = ShardedVectorIndex.build_sharded(V, make_shard_mesh(1))
+    target = int(np.asarray(sidx.search(V[5], k=1, page=100)[0])[0, 0])
+    assert target == 5
+    pruned = sidx.delete([5])
+    for engine in ("postings", "codes", "onehot"):
+        ids, _ = pruned.search(V[5], k=23, page=100, engine=engine)
+        assert 5 not in np.asarray(ids), engine
+    # deleting an already-dead id is a no-op; out-of-range raises
+    pruned.delete([5])
+    with pytest.raises(ValueError, match="ids must be in"):
+        pruned.delete([23])
+
+
+def test_gids_stay_monotonic_across_delete():
+    V, W = _build(seed=3)
+    sidx = ShardedVectorIndex.build_sharded(V[:5], make_shard_mesh(1))
+    grown = sidx.add_documents(W[:2]).delete([5, 6]).add_documents(W[2:4])
+    assert grown.n_ids == 9
+    ids, _ = grown.search(W[2:4], k=2, page=20, engine="codes")
+    assert (np.asarray(ids)[:, 0] == [7, 8]).all()
+
+
+def test_add_documents_validates_and_noops():
+    V, W = _build(seed=4)
+    sidx = ShardedVectorIndex.build_sharded(V, make_shard_mesh(1))
+    assert sidx.add_documents(np.zeros((0, 12), np.float32)) is sidx
+    with pytest.raises(ValueError, match="feature"):
+        sidx.add_documents(np.zeros((2, 5), np.float32))
+
+
+def test_ingest_within_capacity_reuses_compiled_search():
+    """Hot-ingest must not recompile the SPMD query program per batch:
+    segment capacity grows geometrically and n_ids is a traced scalar, so
+    adds that fit the existing capacity leave shapes AND treedef unchanged
+    -- the second search is a pure jit-cache hit (phase1_engine_scores is
+    only called when _query_phase re-traces).  Holds in the serving regime
+    ``page < n_ids``; a page clamped by the corpus size legitimately
+    re-specialises when the corpus grows past it."""
+    import repro.dist.shard_index as si
+
+    V, W = _build(seed=6)
+    sidx = ShardedVectorIndex.build_sharded(V, make_shard_mesh(1))
+    calls = []
+    orig = si.phase1_engine_scores
+    si.phase1_engine_scores = \
+        lambda *a, **kw: (calls.append(1), orig(*a, **kw))[1]
+    try:
+        g1 = sidx.add_documents(W[:2])          # capacity grows 0 -> 8
+        assert g1.seg_capacity == 8
+        g1.search(V[:2], k=3, page=16, engine="codes")
+        traced = len(calls)
+        assert traced >= 1
+        g2 = g1.add_documents(W[2:5])           # fits: same shapes/treedef
+        assert g2.seg_capacity == 8
+        g2.search(V[:2], k=3, page=16, engine="codes")
+        assert len(calls) == traced, "search recompiled within capacity"
+    finally:
+        si.phase1_engine_scores = orig
+
+
+def test_batched_engine_hot_ingest():
+    """BatchedSearchEngine.add_documents: the hot-add path serves the new
+    docs to every subsequently dequeued batch, and plain VectorIndex
+    (immutable) is rejected."""
+    from repro.serve.engine import BatchedSearchEngine
+
+    V, W = _build(seed=5)
+    sidx = ShardedVectorIndex.build_sharded(V, make_shard_mesh(1))
+    eng = BatchedSearchEngine(sidx, batch_size=2, k=3, page=1_000, trim=None,
+                              engine="codes")
+    try:
+        ids0, _ = eng.search(V[0], timeout=60)
+        assert ids0[0] == 0
+        first = eng.add_documents(W)
+        assert first == 23
+        ids1, s1 = eng.search(W[4], timeout=60)
+        assert ids1[0] == 27 and abs(s1[0] - 1) < 1e-5
+    finally:
+        eng.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.add_documents(W)
+
+    eng2 = BatchedSearchEngine(VectorIndex.build(V), trim=None)
+    try:
+        with pytest.raises(TypeError, match="incremental ingest"):
+            eng2.add_documents(W)
+    finally:
+        eng2.close()
+
+
+def _run_subprocess(script: str) -> None:
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, cwd=_REPO)
+    assert "OK" in out.stdout, out.stdout + out.stderr
+
+
+def test_multi_shard_ingest_lifecycle():
+    """4 shards x 2 replicas, ragged base: round-robin segment routing,
+    both merge transports, tombstones in base AND segments, compact -- the
+    sentinel-free invariant holds in every cell."""
+    _run_subprocess(r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+from repro.dist.shard_index import ShardedVectorIndex
+from repro.launch.mesh import make_shard_mesh
+
+rng = np.random.default_rng(0)
+V = rng.normal(size=(27, 10)).astype(np.float32)
+W = rng.normal(size=(10, 10)).astype(np.float32)
+Q = np.concatenate([V[:3], W[:4]])          # 7 queries: odd, pads replicas
+
+def check(sidx, live):
+    live = set(live)
+    for merge in ("gather", "stream"):
+        for engine in ("postings", "codes"):
+            for k, page in ((1, 1), (5, 16), (16, 37), (40, 10_000)):
+                ids, s = sidx.search(Q, k=k, page=page, engine=engine,
+                                     merge=merge)
+                ids, s = np.asarray(ids), np.asarray(s)
+                dead = ids == -1
+                assert (np.isneginf(s) == dead).all(), (merge, engine, k, page)
+                assert all(i in live for i in ids[~dead].ravel()), \
+                    (merge, engine, k, page, ids)
+
+sidx = ShardedVectorIndex.build_sharded(V, make_shard_mesh(4, 2))
+check(sidx, range(27))
+grown = sidx.add_documents(W)               # gids 27..36, round-robin shards
+assert int((np.asarray(grown.seg_gids) >= 0).sum()) == 10
+assert grown.n_ids == 37
+check(grown, range(37))
+ids, s = grown.search(W[:4], k=1, page=1_000, engine="codes")
+assert (np.asarray(ids)[:, 0] == np.arange(27, 31)).all()
+pruned = grown.delete([2, 11, 28, 36])
+check(pruned, set(range(37)) - {2, 11, 28, 36})
+packed = pruned.compact()
+assert packed.n_docs == 37 and packed.seg_capacity == 0
+check(packed, set(range(37)) - {2, 11, 28, 36})
+print("OK")
+""")
