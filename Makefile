@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke-shard smoke-replica smoke-build bench bench-full
+.PHONY: test smoke-shard smoke-replica smoke-build smoke-cluster bench bench-full
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -31,6 +31,17 @@ smoke-build:
 	  benchmarks.build_scale --shards 1,2,4,8 --docs 2000 --features 32 \
 	  --ingest-batch 64 --ingest-batches 2 --repeats 1 \
 	  --json artifacts/BENCH_build_scale_quick.json
+
+# cluster control-plane smoke under 8 virtual devices (4 doc-shards x 2
+# replica groups): per-group batchers, concurrent client streams, and the
+# one-group-down failover parity assert, via the cluster bench in quick
+# config (the _quick artifact name keeps it out of the accumulating
+# BENCH_cluster_scale.json trajectory)
+smoke-cluster:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" $(PY) -m \
+	  benchmarks.cluster_scale --grid 4x2 --streams 1,4 --docs 2000 \
+	  --features 32 --queries 16 --repeats 1 \
+	  --json artifacts/BENCH_cluster_scale_quick.json
 
 bench:
 	$(PY) -m benchmarks.run

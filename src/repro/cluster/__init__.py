@@ -1,0 +1,53 @@
+"""Serving control plane over the doc-sharded data plane.
+
+The paper's production claim is that a fulltext-engine-backed vector
+database inherits Elasticsearch's robustness/stability/scalability.  The
+data plane (:mod:`repro.dist`) reproduces the *index* side of that claim
+-- doc-shards, replica copies, segments, tombstones.  This package is the
+*cluster* side: the machinery that keeps serving when copies die, keeps
+QPS scaling with replicas, and keeps segments healthy in the background.
+Every component maps onto an ES concept:
+
+===============================  ==========================================
+this package                     Elasticsearch analogue
+===============================  ==========================================
+:class:`ClusterEngine`           the coordinating node's request routing:
+(:mod:`~repro.cluster.router`)   R independent request batchers, one per
+                                 replica group (R concurrent search
+                                 programs on disjoint device sets);
+                                 stream affinity = ``preference=
+                                 <custom_string>`` session stickiness;
+                                 least-loaded spill = adaptive replica
+                                 selection.
+:class:`HealthMap`               the cluster state's routing table (shard
+(:mod:`~repro.cluster.health`)   copies ``STARTED``/``UNASSIGNED``);
+                                 ``mark_down``/``mark_up`` = shard-failed
+                                 / shard-started cluster-state updates,
+                                 ``generation`` = cluster-state version.
+failover resubmit                ES retrying a failed shard fetch on the
+(in :class:`ClusterEngine`)      next copy of the same shard -- here the
+                                 whole request replays on a surviving
+                                 group and results stay bit-identical,
+                                 because every group computes
+                                 bit-identical results.
+:class:`MaintenanceDaemon`       the background Lucene merge scheduler /
+(:mod:`~repro.cluster.           ``index.merge.policy
+maintenance`)                    .deletes_pct_allowed``: watches per-shard
+                                 tombstone ratios and rewrites (compacts)
+                                 past the threshold, hot-swapping under
+                                 the engine lock so no in-flight query is
+                                 dropped.
+===============================  ==========================================
+
+The data-plane hooks these build on live in
+:class:`repro.dist.shard_index.ShardedVectorIndex`: ``replica_group(g)``
+(a replica column as an independent 1-D index -- group addressability),
+``search(..., live_groups=...)`` (the health-masked merge), and
+``tombstone_ratio`` / exact-df deletes (the maintenance trigger).
+"""
+
+from repro.cluster.health import HealthMap
+from repro.cluster.maintenance import MaintenanceDaemon
+from repro.cluster.router import ClusterEngine
+
+__all__ = ["ClusterEngine", "HealthMap", "MaintenanceDaemon"]

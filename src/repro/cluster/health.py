@@ -1,0 +1,88 @@
+"""Replica-group health map (the ES cluster-state routing table).
+
+:class:`HealthMap` tracks which replica groups are routable.  It is the
+cluster's single source of routing truth, the analogue of Elasticsearch's
+cluster state marking shard copies ``STARTED`` vs ``UNASSIGNED``: the
+router consults it on every pick, failover marks a group down when a
+search against it fails, and an operator (or test) flips groups with
+``mark_down``/``mark_up`` the way ES applies shard-failed cluster-state
+updates.
+
+Marking a group down is a ROUTING decision only -- requests already queued
+on the group's batcher drain normally (the index may be perfectly healthy,
+e.g. a rolling restart); only new picks avoid it.  Actually-dead groups
+are handled one level up: the router's failure path marks the group down
+*and* resubmits the failed requests to a surviving copy.
+
+Thread-safe; every mutation bumps ``generation`` (ES cluster-state
+version) so pollers can cheaply detect change.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Tuple
+
+__all__ = ["HealthMap"]
+
+
+class HealthMap:
+    def __init__(self, n_groups: int):
+        if n_groups < 1:
+            raise ValueError(f"need at least one replica group, got {n_groups}")
+        self.n_groups = n_groups
+        self._down: set = set()
+        self._lock = threading.Lock()
+        self._generation = 0
+
+    def _check(self, group: int) -> None:
+        if not 0 <= group < self.n_groups:
+            raise ValueError(
+                f"group must be in [0, {self.n_groups}), got {group}")
+
+    def mark_down(self, group: int) -> bool:
+        """Stop routing to ``group``; returns True if the state changed."""
+        self._check(group)
+        with self._lock:
+            if group in self._down:
+                return False
+            self._down.add(group)
+            self._generation += 1
+            return True
+
+    def mark_up(self, group: int) -> bool:
+        """Restore routing to ``group``; returns True if the state changed."""
+        self._check(group)
+        with self._lock:
+            if group not in self._down:
+                return False
+            self._down.discard(group)
+            self._generation += 1
+            return True
+
+    def is_up(self, group: int) -> bool:
+        self._check(group)
+        with self._lock:
+            return group not in self._down
+
+    def up_groups(self) -> Tuple[int, ...]:
+        """Routable groups, ascending (possibly empty: a full outage)."""
+        with self._lock:
+            return tuple(g for g in range(self.n_groups)
+                         if g not in self._down)
+
+    @property
+    def generation(self) -> int:
+        with self._lock:
+            return self._generation
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"n_groups": self.n_groups,
+                    "down": tuple(sorted(self._down)),
+                    "generation": self._generation}
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        s = self.snapshot()
+        return (f"HealthMap({s['n_groups']} groups, down={s['down']}, "
+                f"gen={s['generation']})")

@@ -1,0 +1,129 @@
+"""Background auto-compaction daemon (the Lucene merge scheduler).
+
+Elasticsearch never asks the operator to reclaim deleted docs: a
+background merge policy watches each shard's deletes ratio
+(``index.merge.policy.deletes_pct_allowed``) and rewrites segments when it
+drifts too high.  :class:`MaintenanceDaemon` is that loop for the serving
+tier: it polls every engine's ``index.tombstone_ratio`` (worst per-shard
+dead fraction, maintained host-side by ``ShardedVectorIndex.delete``) and
+past ``threshold`` (default 20%) runs ``compact()`` -- the on-device
+sharded rebuild over the live doc table -- then hot-swaps the result in
+via :meth:`BatchedSearchEngine.swap_index`.
+
+The swap discipline is what makes this safe under live traffic:
+
+* the expensive rebuild runs OUTSIDE the engine lock, against a snapshot
+  of the served index;
+* the swap is a compare-and-swap on that snapshot -- if an ingest or
+  delete landed meanwhile (``self.index`` moved), the stale rebuild is
+  simply dropped and the next tick retries against fresh state;
+* in-flight batches finish on the index they dequeued with; no query is
+  ever dropped or served a half-built index.
+
+Compaction preserves global ids and exact df (the delete path already
+keeps df exact), so results are unchanged across a background compact
+apart from tombstone-free posting lists.
+
+Down groups (per the cluster :class:`~repro.cluster.health.HealthMap`)
+are skipped -- a dead copy is failover's problem, not maintenance's.  A
+rebuild that ITSELF fails (device OOM, compile error) is recorded in
+``failures`` and its snapshot quarantined, so the daemon neither dies nor
+hot-loops the same expensive failure; the next ingest/delete produces a
+new snapshot and re-arms the group.
+
+``poll_once()`` exposes one deterministic sweep for tests; ``start()``
+runs it on a daemon thread every ``interval_s``.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import List, Optional, Sequence
+
+__all__ = ["MaintenanceDaemon"]
+
+
+class MaintenanceDaemon:
+    def __init__(
+        self,
+        batchers: Sequence,               # BatchedSearchEngine per group
+        threshold: float = 0.2,
+        interval_s: float = 0.05,
+        health=None,                      # Optional[HealthMap]
+    ):
+        if not 0.0 < threshold:
+            raise ValueError(f"threshold must be positive, got {threshold}")
+        self._batchers = list(batchers)
+        self.threshold = threshold
+        self.interval_s = interval_s
+        self._health = health
+        self._stop_evt = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.events: List[dict] = []      # one entry per applied compaction
+        self.failures: List[dict] = []    # one entry per failed rebuild
+        self._quarantine: dict = {}       # group -> snapshot whose rebuild
+        #                                   failed; skipped until it changes
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "MaintenanceDaemon":
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._run, daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop_evt.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    @property
+    def compactions(self) -> int:
+        return len(self.events)
+
+    # ----------------------------------------------------------------- work
+    def poll_once(self) -> int:
+        """One maintenance sweep over every group; returns compactions
+        applied.  Deterministic entry point for tests and operators."""
+        applied = 0
+        for g, batcher in enumerate(self._batchers):
+            if self._health is not None and not self._health.is_up(g):
+                continue
+            snapshot = batcher.index
+            ratio = getattr(snapshot, "tombstone_ratio", 0.0)
+            if ratio <= self.threshold:
+                continue
+            if self._quarantine.get(g) is snapshot:
+                continue    # this exact state already failed to rebuild --
+                #             don't hot-loop the failure; any ingest/delete
+                #             produces a new snapshot and re-arms the group
+            try:
+                compacted = snapshot.compact()        # outside the lock
+            except Exception as exc:  # noqa: BLE001 - recorded, not fatal
+                # a failing on-device rebuild (OOM, compile error) must not
+                # kill maintenance for the healthy groups -- log it and
+                # quarantine the snapshot instead of silently retrying the
+                # same expensive failure every tick
+                self._quarantine[g] = snapshot
+                self.failures.append({"group": g, "tombstone_ratio": ratio,
+                                      "error": repr(exc)})
+                continue
+            try:
+                swapped = batcher.swap_index(compacted, expected=snapshot)
+            except RuntimeError:
+                continue                              # engine closed mid-sweep
+            if swapped:
+                self._quarantine.pop(g, None)
+                applied += 1
+                self.events.append({
+                    "group": g,
+                    "tombstone_ratio": ratio,
+                    "n_ids": snapshot.n_ids,
+                })
+            # CAS miss: an ingest/delete raced the rebuild -- the next
+            # sweep re-evaluates the fresh index
+        return applied
+
+    def _run(self) -> None:
+        while not self._stop_evt.wait(self.interval_s):
+            self.poll_once()

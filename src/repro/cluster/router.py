@@ -1,0 +1,302 @@
+"""ClusterEngine: per-replica-group request batchers + failover routing.
+
+The coordinating-node control plane over the sharded data plane.  A
+``(data, replica)`` mesh gives R bit-identical serving copies of the
+doc-sharded corpus, but one :class:`~repro.serve.engine.BatchedSearchEngine`
+fronting the whole mesh only materialises that parallelism *inside a
+single batch* (queries round-robin across groups within one SPMD call).
+:class:`ClusterEngine` instead views each replica column as an
+independent 1-D index (:meth:`ShardedVectorIndex.replica_group`) and runs
+R independent batchers, one per group -- R concurrent search programs on
+disjoint device sets, so concurrent QPS actually scales with R.
+
+Routing (the ES coordinating node's copy selection):
+
+* **stream affinity** -- a request stream (session id, user, connection)
+  pins to one group on first sight, like ES ``preference=<custom_string>``
+  session stickiness: the stream's queries batch together and hit one
+  group's caches.
+* **least-loaded spill** -- when the pinned group's ``pending`` depth
+  exceeds ``spill_factor * batch_size``, overflow routes to the
+  least-loaded healthy group (adaptive replica selection).  The pin is
+  not rewritten: the stream returns home once the spike drains.
+* **failover** -- a search failure marks the group down in the
+  :class:`~repro.cluster.health.HealthMap` and transparently resubmits
+  the affected requests to surviving copies (ES retries a failed fetch on
+  the next shard copy).  Results are bit-identical to the healthy
+  cluster, because every group computes bit-identical results.  Only when
+  no healthy copy remains does the caller see the failure.
+
+``inject_failure(group)`` is the failure-injection hook: it poisons that
+group's index behind its batcher (every search raises), which exercises
+the full detect -> mark_down -> resubmit path end to end without touching
+devices.  ``heal`` + ``mark_up`` bring the group back.
+
+Control-plane writes (``add_documents`` / ``delete``) apply to EVERY
+group, down or not -- a downed copy must stay consistent for ``mark_up``,
+exactly like ES replica recovery replaying the translog.  Deterministic
+ingest routing guarantees every copy assigns identical gids.
+
+``auto_compact=<threshold>`` starts a
+:class:`~repro.cluster.maintenance.MaintenanceDaemon` that watches every
+group's tombstone ratio and compacts in the background (hot CAS swap, no
+dropped queries).
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from concurrent.futures import CancelledError, Future
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import TrimFilter
+from repro.serve.engine import BatchedSearchEngine
+
+from .health import HealthMap
+from .maintenance import MaintenanceDaemon
+
+__all__ = ["ClusterEngine"]
+
+
+class _FailpointIndex:
+    """Failure-injection wrapper around one group's index.
+
+    Transparent for every read (attribute access proxies through) but
+    ``search`` raises while ``fail`` is set -- the hook ClusterEngine's
+    failover path is exercised with.  The fail state lives in a CELL
+    shared by every descendant wrapper: mutators (ingest/delete/compact)
+    re-wrap their result around the same cell, so the failpoint the
+    router holds keeps controlling the group through any number of hot
+    swaps (a poisoned group that ingests stays poisoned until ``heal``).
+    """
+
+    def __init__(self, inner, cell: Optional[dict] = None):
+        self._cell = cell if cell is not None else {"fail": None}
+        self.inner = inner
+
+    @property
+    def fail(self) -> Optional[Exception]:
+        return self._cell["fail"]
+
+    @fail.setter
+    def fail(self, exc: Optional[Exception]) -> None:
+        self._cell["fail"] = exc
+
+    def search(self, *args, **kwargs):
+        if self.fail is not None:
+            raise self.fail
+        return self.inner.search(*args, **kwargs)
+
+    def add_documents(self, vectors):
+        return _FailpointIndex(self.inner.add_documents(vectors), self._cell)
+
+    def delete(self, ids):
+        return _FailpointIndex(self.inner.delete(ids), self._cell)
+
+    def compact(self):
+        return _FailpointIndex(self.inner.compact(), self._cell)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+class ClusterEngine:
+    def __init__(
+        self,
+        index,                            # ShardedVectorIndex | list of them
+        batch_size: int = 32,
+        max_wait_s: float = 0.005,
+        k: int = 10,
+        page: int = 320,
+        trim: Optional[TrimFilter] = TrimFilter(0.05),
+        engine: str = "codes",
+        merge: Optional[str] = None,
+        max_postings: "Optional[int | str]" = None,
+        spill_factor: float = 2.0,
+        max_stream_pins: int = 4096,
+        auto_compact: Optional[float] = None,
+        compact_interval_s: float = 0.05,
+    ):
+        """``index`` is a ShardedVectorIndex (its R replica groups become
+        the cluster's groups) or an explicit list of group indexes (full
+        serving copies -- how tests run a multi-group cluster on one
+        device).  ``auto_compact`` is a tombstone-ratio threshold; set, it
+        starts the background maintenance daemon."""
+        if isinstance(index, (list, tuple)):
+            groups = list(index)
+        else:
+            groups = [index.replica_group(g)
+                      for g in range(index.n_replicas)]
+        if not groups:
+            raise ValueError("need at least one replica group")
+        self._failpoints = [_FailpointIndex(g) for g in groups]
+        self.health = HealthMap(len(groups))
+        self._batchers: List[BatchedSearchEngine] = [
+            BatchedSearchEngine(
+                fp, batch_size=batch_size, max_wait_s=max_wait_s, k=k,
+                page=page, trim=trim, engine=engine, merge=merge,
+                max_postings=max_postings)
+            for fp in self._failpoints
+        ]
+        self.spill_threshold = max(1, int(spill_factor * batch_size))
+        # LRU-capped pin map: stream ids are caller-supplied (sessions,
+        # connections), so an uncapped map is an unbounded leak in a
+        # long-lived service.  Evicting a cold pin is benign -- every
+        # group returns bit-identical results, the stream just re-pins.
+        self.max_stream_pins = max(1, max_stream_pins)
+        self._streams: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        self._closed = False
+        self.maintenance: Optional[MaintenanceDaemon] = None
+        if auto_compact is not None:
+            self.maintenance = MaintenanceDaemon(
+                self._batchers, threshold=auto_compact,
+                interval_s=compact_interval_s, health=self.health).start()
+
+    # ------------------------------------------------------------ topology
+    @property
+    def n_groups(self) -> int:
+        return len(self._batchers)
+
+    @property
+    def batchers(self):
+        """The per-group batchers (read-only view; load/ingest state)."""
+        return tuple(self._batchers)
+
+    def group_index(self, group: int):
+        """The index currently served by ``group`` (unwrapped)."""
+        return self._batchers[group].index.inner
+
+    def loads(self):
+        """(pending per group) -- the router's own routing signal."""
+        return tuple(b.pending for b in self._batchers)
+
+    # ------------------------------------------------------------- routing
+    def _pick(self, stream, exclude=()) -> int:
+        up = [g for g in self.health.up_groups() if g not in exclude]
+        if not up:
+            raise RuntimeError("no healthy replica group available")
+        least = min(up, key=lambda g: self._batchers[g].pending)
+        if stream is None:
+            return least
+        with self._lock:
+            pinned = self._streams.get(stream)
+            if pinned is None:
+                self._streams[stream] = pinned = least
+            self._streams.move_to_end(stream)
+            while len(self._streams) > self.max_stream_pins:
+                self._streams.popitem(last=False)
+        if pinned in up and self._batchers[pinned].pending <= self.spill_threshold:
+            return pinned
+        return least                      # spill; the pin itself persists
+
+    def submit(self, query_vec: np.ndarray, stream=None) -> Future:
+        """Route one query -> Future of (ids, scores).
+
+        The returned future resolves even through a group failure: the
+        completion callback marks the failed group down and resubmits to
+        the next healthy copy (each copy tried at most once).  Only with
+        no healthy copy left does the future carry the failure."""
+        if self._closed:
+            raise RuntimeError("engine closed")
+        outer: Future = Future()
+        q = np.asarray(query_vec, np.float32)
+        tried: set = set()
+        marked: list = []                 # groups THIS request marked down
+
+        def attempt(prev_exc=None):
+            try:
+                g = self._pick(stream, exclude=tried)
+            except RuntimeError as exc:
+                if prev_exc is not None:
+                    # every copy failed the SAME request: the request, not
+                    # the cluster, is the likely fault (a genuinely dead
+                    # copy fails while its siblings answer) -- undo this
+                    # request's mark_downs so one poisoned query cannot
+                    # black-hole the whole cluster, and surface the error
+                    for m in marked:
+                        self.health.mark_up(m)
+                if not outer.done():
+                    outer.set_exception(prev_exc or exc)
+                return
+            tried.add(g)
+            try:
+                inner = self._batchers[g].submit(q)
+            except RuntimeError as exc:   # batcher closed under us
+                if not outer.done():
+                    outer.set_exception(prev_exc or exc)
+                return
+            inner.add_done_callback(lambda f: _finish(f, g))
+
+        def _finish(inner: Future, g: int):
+            if outer.cancelled():
+                return
+            try:
+                exc = inner.exception()
+            except CancelledError as cancel:
+                exc = cancel
+            if exc is None:
+                if not outer.done():
+                    outer.set_result(inner.result())
+                return
+            # failover: this copy is bad -- take it out of routing and
+            # replay the request on the next healthy copy
+            if self.health.mark_down(g):
+                marked.append(g)
+            attempt(prev_exc=exc)
+
+        attempt()
+        return outer
+
+    def search(self, query_vec: np.ndarray, stream=None,
+               timeout: float = 10.0):
+        return self.submit(query_vec, stream=stream).result(timeout=timeout)
+
+    # ------------------------------------------------------- control plane
+    def add_documents(self, vectors) -> int:
+        """Hot-add documents to EVERY replica group (down groups included:
+        a copy must stay consistent to be markable up again).  Returns the
+        first assigned global id -- identical in every group because
+        ingest routing is deterministic."""
+        firsts = {b.add_documents(vectors) for b in self._batchers}
+        if len(firsts) != 1:              # pragma: no cover - invariant
+            raise RuntimeError(f"replica groups diverged: first ids {firsts}")
+        return firsts.pop()
+
+    def delete(self, ids) -> None:
+        """Hot-tombstone documents in every replica group."""
+        for b in self._batchers:
+            b.delete(ids)
+
+    # ------------------------------------------------------------- health
+    def mark_down(self, group: int) -> bool:
+        """Operator/drain hook: stop routing NEW work to ``group``.
+        Requests already queued on its batcher drain normally."""
+        return self.health.mark_down(group)
+
+    def mark_up(self, group: int) -> bool:
+        return self.health.mark_up(group)
+
+    def inject_failure(self, group: int, exc: Optional[Exception] = None):
+        """Failure injection: every search on ``group`` raises until
+        :meth:`heal`.  The routing layer discovers it the honest way -- a
+        failed request -- and fails over."""
+        self._failpoints[group].fail = exc if exc is not None else (
+            RuntimeError(f"injected failure: replica group {group} is down"))
+
+    def heal(self, group: int) -> None:
+        """Clear an injected failure (does not flip health: pair with
+        :meth:`mark_up`, the way an ES node rejoin is a separate event
+        from the fault clearing)."""
+        self._failpoints[group].fail = None
+
+    # ----------------------------------------------------------- lifecycle
+    def close(self):
+        self._closed = True
+        if self.maintenance is not None:
+            self.maintenance.stop()
+        for b in self._batchers:
+            b.close()

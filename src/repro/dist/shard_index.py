@@ -34,6 +34,22 @@ scales ~R x while quality is untouched (``page >= n_docs`` parity holds
 per group).  Batches are zero-padded up to a multiple of R and the pad
 rows sliced off after the merge, so they can never leak into results.
 
+Two control-plane entry points sit on top of the replica tier:
+
+* :meth:`replica_group` makes the groups *addressable*: it views one
+  replica column as an independent 1-D ``data``-mesh index (the leaves are
+  already resident on that column's devices, so the re-put is free).  The
+  cluster router (:mod:`repro.cluster.router`) fronts each group with its
+  own request batcher, which is what lets concurrent QPS scale with R
+  instead of materialising only inside a single batch.
+* ``search(..., live_groups=...)`` is the *health-masked merge*: query
+  blocks are assigned only to the named (healthy) replica columns, dead
+  columns receive zero rows, and the out-rows of the live columns are
+  gathered back into query order before the final rescore -- so a dead
+  group's doc range is transparently served by the surviving replicas and
+  the results match the healthy cluster (every group holds a full,
+  bit-identical copy).
+
 **On-device sharded build** (:meth:`ShardedVectorIndex.build_sharded`):
 raw vectors are ``device_put`` straight onto the ``data`` axis and ONE
 jitted SPMD program runs the whole pipeline per shard under ``shard_map``
@@ -51,11 +67,17 @@ SPMD program; neither path loops over shards on the host.
   scores come from a direct per-column bucket-equality match (the same
   score every engine computes) and their df joins the global psum through
   :func:`repro.core.postings.code_df`.
-* :meth:`delete` marks docs dead: the per-doc ``live`` mask goes False and
-  the doc's codes become the sentinel.  Like Lucene, the *base* posting
-  lists keep tombstoned entries until compaction (df may transiently count
-  them); the ``live`` mask guarantees a tombstone can never surface in
-  results regardless of engine.
+* :meth:`delete` marks docs dead: the per-doc ``live`` mask goes False,
+  the doc's codes become the sentinel, and the affected shards' posting
+  lists are rebuilt in the same one-program SPMD argsort the build uses --
+  so document frequencies are EXACT under tombstones (idf-sensitive
+  engines score identically before and after :meth:`compact`), unlike
+  Lucene's lazy semantics where df transiently counts deleted docs.  The
+  ``live`` mask stays the source of truth for result eligibility.  Each
+  shard's tombstone count is tracked host-side (``shard_tombstones``);
+  ``tombstone_ratio`` is the worst per-shard dead fraction, the trigger
+  the cluster maintenance daemon (:mod:`repro.cluster.maintenance`)
+  watches for background auto-compaction.
 * :meth:`compact` folds segments and tombstones back into a clean base by
   re-running the on-device sharded build over the live doc table.  Global
   ids are stable across compaction: dead ids simply stop existing (their
@@ -148,6 +170,7 @@ class ShardedVectorIndex:
     n_docs: int               # base id-space size (compaction folds segs in)
     index_best: Optional[int]
     n_appended: int = 0       # docs ever appended since the last compact
+    shard_tombstones: Tuple[int, ...] = ()  # per-shard uncompacted deletes
 
     # -- pytree plumbing (mesh/encoder/sizes are static metadata) ----------
     def tree_flatten(self):
@@ -156,7 +179,8 @@ class ShardedVectorIndex:
                     self.seg_vectors, self.seg_codes, self.seg_gids,
                     self.seg_live)
         return children, (self.encoder, self.mesh, self.n_docs,
-                          self.index_best, self.n_appended)
+                          self.index_best, self.n_appended,
+                          self.shard_tombstones)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -190,6 +214,105 @@ class ShardedVectorIndex:
     def n_ids(self) -> int:
         """Global id-space size: base docs + docs ever appended."""
         return self.n_docs + self.n_appended
+
+    @property
+    def n_tombstones(self) -> int:
+        """Docs deleted since the last compaction (whole index)."""
+        return sum(self.shard_tombstones)
+
+    @staticmethod
+    def _seg_slots_used(n_appended: int, ns: int) -> np.ndarray:
+        """(S,) append-segment slots used per shard.  THE round-robin
+        occupancy formula -- shared by ingest routing and the tombstone
+        accounting so the two can never diverge."""
+        used = np.full(ns, n_appended // ns, np.int64)
+        used[: n_appended % ns] += 1
+        return used
+
+    @property
+    def shard_populations(self) -> np.ndarray:
+        """(S,) docs ever assigned to each shard (base + appended) -- a pure
+        function of the contiguous base split and round-robin ingest
+        routing, so no device readback."""
+        ns, dp = self.n_shards, self.docs_per_shard
+        base = np.clip(self.n_docs - np.arange(ns) * dp, 0, dp)
+        return base + self._seg_slots_used(self.n_appended, ns)
+
+    @property
+    def tombstone_ratio(self) -> float:
+        """Worst per-shard dead fraction (ES ``deletes_pct_allowed`` style:
+        deleted / docs-ever-assigned, per shard, max over shards) -- the
+        signal the cluster maintenance daemon compares against its
+        auto-compaction threshold."""
+        if not any(self.shard_tombstones):
+            return 0.0
+        dead = np.asarray(self.shard_tombstones, np.float64)
+        return float(np.max(dead / np.maximum(self.shard_populations, 1)))
+
+    @property
+    def max_df(self) -> int:
+        """Longest live posting list over every (shard, column): the exact
+        per-shard ``max_postings`` window -- sized from the shard's actual
+        code distribution instead of the ``docs_per_shard`` worst case.
+        Tombstone-free by construction (:meth:`delete` rebuilds postings,
+        sentinels are excluded), cached per instance (every mutation
+        returns a new index, so the cache can never go stale)."""
+        cached = self.__dict__.get("_max_df_cache")
+        if cached is None:
+            cached = int(_max_df_program(
+                self.post_codes, mesh=self.mesh,
+                sentinel=int(_SENTINEL[self.codes.dtype])))
+            self.__dict__["_max_df_cache"] = cached
+        return cached
+
+    # ------------------------------------------------------------- replicas
+    def replica_group(self, g: int) -> "ShardedVectorIndex":
+        """View replica group ``g`` as an independent index on the 1-D
+        ``data`` sub-mesh of that replica column's devices.
+
+        Every leaf is already replicated across the ``replica`` axis, so
+        each column device holds its doc-shard outright and the re-put is
+        a no-copy resharding.  The group index runs the plain 1-D search
+        path (bit-identical to single-device for ``page >= n_docs``) and
+        can be served, searched, and compacted independently of its
+        siblings -- the unit the cluster router batches per-group."""
+        R = self.n_replicas
+        if not 0 <= g < R:
+            raise ValueError(f"replica group must be in [0, {R}), got {g}")
+        if R == 1:
+            return self
+        devs = np.asarray(self.mesh.devices)[:, g]
+        sub = Mesh(devs, (DATA_AXIS,))
+        put = lambda x, spec: jax.device_put(x, NamedSharding(sub, spec))
+        return dataclasses.replace(
+            self, mesh=sub,
+            vectors=put(self.vectors, _ROW),
+            codes=put(self.codes, _ROW),
+            post_docs=put(self.post_docs, _ROW),
+            post_codes=put(self.post_codes, _ROW),
+            offsets=put(self.offsets, P(DATA_AXIS)),
+            live=put(self.live, _VEC),
+            seg_vectors=put(self.seg_vectors, _ROW),
+            seg_codes=put(self.seg_codes, _ROW),
+            seg_gids=put(self.seg_gids, _VEC),
+            seg_live=put(self.seg_live, _VEC),
+        )
+
+    # -------------------------------------------------------- introspection
+    def token_df(self, queries) -> jnp.ndarray:
+        """Global per-token document frequencies, (Q, C) int32 -- EXACTLY
+        what the query phase's idf weighting sees: per-shard base postings
+        lookup + segment code match, psum over ``data``.  With the eager
+        postings refresh in :meth:`delete` this counts live docs only, so
+        it is invariant under :meth:`compact` -- the pin behind the
+        "idf-sensitive engines score identically across compaction"
+        guarantee (and a cheap cluster debugging probe)."""
+        q = normalize(jnp.atleast_2d(jnp.asarray(queries, jnp.float32)))
+        qcodes = self.encoder.encode(q)
+        seg = self.seg_capacity > 0
+        return _token_df_program(
+            self.post_docs, self.post_codes,
+            self.seg_codes if seg else None, qcodes, mesh=self.mesh)
 
     # ----------------------------------------------------------------- build
     @classmethod
@@ -367,8 +490,7 @@ class ShardedVectorIndex:
         # routing is strictly round-robin on the global append counter, so
         # per-shard slot usage is a pure function of n_appended (tombstones
         # keep their slot) -- no device readback on the hot ingest path
-        used = np.full(ns, self.n_appended // ns, np.int64)
-        used[: self.n_appended % ns] += 1
+        used = self._seg_slots_used(self.n_appended, ns)
         shard_of = (self.n_appended + np.arange(m)) % ns
         slot_of = used[shard_of] + np.arange(m) // ns
         need = int(slot_of.max()) + 1
@@ -411,9 +533,15 @@ class ShardedVectorIndex:
         The doc's ``live`` flag goes False and its codes become the
         sentinel, so the ``codes``/``onehot`` engines skip it outright and
         the ``live`` mask blocks it from every result page.  Base posting
-        lists keep the tombstoned entry until :meth:`compact` (Lucene
-        semantics: df may transiently count deleted docs).  Deleting an
-        already-dead or padded id is a no-op for that id.
+        lists are REBUILT in the same one-program SPMD argsort the build
+        uses (the sentinel sorts every tombstone to the list tails), so
+        document frequencies are exact immediately -- idf weights, and
+        therefore idf-sensitive phase-1 scores, are identical before and
+        after :meth:`compact`.  That is stricter than Lucene (which lets
+        df count deleted docs until a merge) at the cost of one argsort
+        per delete batch -- a control-plane price, not a query-path one.
+        Deleting an already-dead or padded id is a no-op for that id (and
+        does not count toward ``shard_tombstones``).
         """
         ids = np.unique(np.atleast_1d(np.asarray(ids, np.int64)))
         if ids.size == 0:
@@ -422,23 +550,35 @@ class ShardedVectorIndex:
             raise ValueError(
                 f"ids must be in [0, {self.n_ids}), got {ids.min()}..{ids.max()}")
         sentinel = _SENTINEL[self.codes.dtype]
+        dead = np.zeros(self.n_shards, np.int64)
         new = {}
         base = ids[ids < self.n_docs]
         if base.size:
             s, r = np.divmod(base, self.docs_per_shard)
+            was_live = np.asarray(self.live)[s, r]
+            np.add.at(dead, s[was_live], 1)
             s, r = jnp.asarray(s), jnp.asarray(r)
             new["live"] = _put(self.mesh, self.live.at[s, r].set(False), _VEC)
             new["codes"] = _put(self.mesh,
                                 self.codes.at[s, r].set(sentinel), _ROW)
+            # exact-df postings refresh: one SPMD argsort over the updated
+            # codes drops the tombstones out of every posting list
+            pdocs, pcodes = _postings_program(new["codes"], mesh=self.mesh)
+            new["post_docs"], new["post_codes"] = pdocs, pcodes
         app = ids[ids >= self.n_docs]
         if app.size:
             s, g = np.nonzero(np.isin(np.asarray(self.seg_gids), app))
+            was_live = np.asarray(self.seg_live)[s, g]
+            np.add.at(dead, s[was_live], 1)
             s, g = jnp.asarray(s), jnp.asarray(g)
             new["seg_live"] = _put(self.mesh,
                                    self.seg_live.at[s, g].set(False), _VEC)
             new["seg_codes"] = _put(self.mesh,
                                     self.seg_codes.at[s, g].set(sentinel),
                                     _ROW)
+        old = (np.asarray(self.shard_tombstones, np.int64)
+               if self.shard_tombstones else np.zeros(self.n_shards, np.int64))
+        new["shard_tombstones"] = tuple(int(x) for x in old + dead)
         return dataclasses.replace(self, **new)
 
     def compact(self) -> "ShardedVectorIndex":
@@ -480,8 +620,9 @@ class ShardedVectorIndex:
         best: Optional[BestFilter] = None,
         engine: str = "postings",
         weighting: str = "idf",
-        max_postings: Optional[int] = None,
+        max_postings: "Optional[int | str]" = None,
         merge: str = "gather",
+        live_groups: "Optional[Tuple[int, ...]]" = None,
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Distributed two-phase search -> (ids (Q,k), cosine scores (Q,k)).
 
@@ -492,28 +633,59 @@ class ShardedVectorIndex:
         across replica groups, each holding a full copy of the corpus.
         After ingest/deletes the same protocol covers base + segments;
         result slots beyond the live doc count are ``(id=-1, score=-inf)``.
+
+        ``max_postings="auto"`` sizes the postings window from the actual
+        code distribution (:attr:`max_df`, the longest live posting list
+        over every shard) -- exact like ``None``, but the window is the
+        true maximum instead of the ``docs_per_shard`` worst case.
+
+        ``live_groups`` is the failover mask: query blocks are assigned
+        only to the named replica columns (dead columns get zero rows,
+        which can never reach a caller) -- the health-masked merge the
+        cluster control plane routes through when a group is down.
         """
         if merge not in ("gather", "stream"):
             raise ValueError(f"unknown merge transport {merge!r}")
+        R = self.n_replicas
+        if live_groups is None:
+            groups = tuple(range(R))
+        else:
+            groups = tuple(sorted({int(g) for g in live_groups}))
+            if not groups or groups[0] < 0 or groups[-1] >= R:
+                raise ValueError(
+                    f"live_groups must be a non-empty subset of [0, {R}), "
+                    f"got {live_groups}")
+        U = len(groups)
         queries = jnp.atleast_2d(queries)
         page = min(page, self.n_ids)
         k = min(k, page)
         page_loc = min(page, self.docs_per_shard + self.seg_capacity)
 
-        # round-robin over replica groups: the batch splits along the
-        # replica axis, so pad it up to a multiple of R (pad rows are
-        # sliced off below and can never reach a caller)
+        # round-robin over the LIVE replica groups: the batch splits along
+        # the replica axis, so pad it to U row-blocks and place block j in
+        # live column groups[j]; down columns receive zero rows.  All pad
+        # and dead-column rows are dropped again below, before the final
+        # rescore, and can never reach a caller.
         n_q = queries.shape[0]
-        q_pad = (-n_q) % self.n_replicas
+        B = -(-n_q // U)                    # rows per live group
         q = jnp.asarray(queries, jnp.float32)
-        if q_pad:
+        pad_real = U * B - n_q
+        if pad_real:
             q = jnp.concatenate(
-                [q, jnp.zeros((q_pad, q.shape[1]), jnp.float32)])
+                [q, jnp.zeros((pad_real, q.shape[1]), jnp.float32)])
+        if U < R:
+            src = np.full(R * B, U * B, np.int64)       # OOB -> zero row
+            for j, c in enumerate(groups):
+                src[c * B:(c + 1) * B] = np.arange(j * B, (j + 1) * B)
+            q = jnp.concatenate(
+                [q, jnp.zeros((1, q.shape[1]), jnp.float32)])[jnp.asarray(src)]
         q = normalize(q)
         qcodes = self.encoder.encode(q)
         mask = expand_mask(feature_mask(q, trim=trim, best=best),
                            qcodes.shape[-1])
 
+        if max_postings == "auto":
+            max_postings = max(1, self.max_df)
         L = self.docs_per_shard if max_postings is None \
             else min(max_postings, self.docs_per_shard)
         seg = self.seg_capacity > 0
@@ -529,11 +701,16 @@ class ShardedVectorIndex:
             page_loc=page_loc, engine=engine, weighting=weighting,
             max_postings=L, k=k if merge == "stream" else 0, merge=merge,
         )
-        # drop replica-pad rows BEFORE the final reduce: the rescore inside
-        # _merge_phase must run at the true (Q, k, n) shape -- the canonical
-        # shape of exact_scores -- or pad rows would perturb the einsum
-        # blocking and cost bit-parity with the single-device index
-        if q_pad:
+        # drop replica-pad and dead-column rows BEFORE the final reduce: the
+        # rescore inside _merge_phase must run at the true (Q, k, n) shape
+        # -- the canonical shape of exact_scores -- or pad rows would
+        # perturb the einsum blocking and cost bit-parity with the
+        # single-device index
+        if U < R:
+            sel = jnp.asarray(np.concatenate(
+                [np.arange(c * B, (c + 1) * B) for c in groups])[:n_q])
+            gids, scores, q = gids[sel], scores[sel], q[sel]
+        elif pad_real:
             gids, scores, q = gids[:n_q], scores[:n_q], q[:n_q]
         return _merge_phase(self, gids, scores, q, k=k)
 
@@ -799,3 +976,67 @@ def _stream_merge_local(gid, s2, n_shards, k):
     acc_i = jax.lax.psum(jnp.where(lead, acc_i, 0), DATA_AXIS)
     acc_s = jax.lax.psum(jnp.where(lead, acc_s, 0.0), DATA_AXIS)
     return acc_i, acc_s
+
+
+@partial(jax.jit, static_argnames=("mesh", "sentinel"))
+def _max_df_program(post_codes, *, mesh, sentinel):
+    """Longest live posting list over every (shard, column) -> scalar.
+
+    Per shard the posting codes are already sorted per column, so a run of
+    equal values IS a posting list: segment-count the runs, read each
+    position's run length back, mask the sentinel tail, and pmax across
+    shards.  This is the exact ``max_postings`` window -- every legal
+    posting range fits -- computed from the shard's real code
+    distribution instead of the ``docs_per_shard`` worst case.
+    """
+    from .shmap import shard_map
+
+    d = post_codes.shape[-1]
+
+    def local(pc):
+        x = pc[0]                                   # (C, d) sorted rows
+
+        def run_max(row):
+            change = jnp.concatenate(
+                [jnp.zeros((1,), jnp.int32),
+                 (row[1:] != row[:-1]).astype(jnp.int32)])
+            gid = jnp.cumsum(change)
+            counts = jax.ops.segment_sum(
+                jnp.ones((d,), jnp.int32), gid, num_segments=d)
+            return jnp.max(jnp.where(row != sentinel, counts[gid], 0))
+
+        return jax.lax.pmax(jnp.max(jax.vmap(run_max)(x)), DATA_AXIS)
+
+    fn = shard_map(local, mesh=mesh, in_specs=(_ROW,), out_specs=P(),
+                   check=False)
+    return fn(post_codes)
+
+
+@partial(jax.jit, static_argnames=("mesh",))
+def _token_df_program(post_docs, post_codes, seg_codes, qcodes, *, mesh):
+    """Global per-token df, the query phase's idf input verbatim: per-shard
+    postings range lookup plus segment code match, psum over ``data``.
+    Queries are replicated (df is identical in every replica group)."""
+    from .shmap import shard_map
+
+    dp = post_codes.shape[-1]
+    G = seg_codes is not None
+
+    def local(*args):
+        if G:
+            pd, pc, sc, qc = args
+            sc = sc[0]
+        else:
+            pd, pc, qc = args
+        postings = Postings(pd[0], pc[0], dp)
+        lo, hi = jax.vmap(lambda c: lookup(postings, c))(qc)
+        df = hi - lo
+        if G:
+            df = df + code_df(sc, qc)
+        return jax.lax.psum(df, DATA_AXIS)
+
+    args = [post_docs, post_codes] + ([seg_codes] if G else []) + [qcodes]
+    specs = [_ROW, _ROW] + ([_ROW] if G else []) + [P(None, None)]
+    fn = shard_map(local, mesh=mesh, in_specs=tuple(specs),
+                   out_specs=P(None, None), check=False)
+    return fn(*args)

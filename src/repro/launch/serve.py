@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.serve --docs 10000 --features 128 \
         --queries 256 --batch-size 32 [--shards 4 --replicas 2 --merge stream] \
-        [--ingest 1000]
+        [--ingest 1000] [--cluster [--fail-shard 0] [--auto-compact 0.2]]
 
 Stands up the paper's system end to end on local devices: synthetic corpus
 -> LSA -> encoded index -> BatchedSearchEngine, then reports quality vs the
@@ -16,8 +16,17 @@ instead of one blocking all-gather; ``--ingest M`` holds the last M docs
 out of the build and hot-adds them through the live engine (ES append
 segments), so the quality report covers docs that were never in the built
 index.  S*R virtual host devices are forced when the platform has fewer.
-(The pod-scale index layouts are exercised by repro.launch.dryrun's
-vectordb-wiki cells.)
+
+Cluster control plane (:mod:`repro.cluster`): ``--cluster`` serves through
+:class:`ClusterEngine` -- R independent per-replica-group batchers with
+request-stream affinity instead of one batcher fronting the whole mesh.
+``--fail-shard G`` then injects a failure into replica group G after the
+first serving pass and re-serves the same queries: the run asserts the
+failover results are bit-identical to the healthy cluster.  ``--auto-compact
+T`` starts the background maintenance daemon with tombstone-ratio
+threshold T, deletes enough docs to trip it, waits for the background
+compaction, and re-serves to show quality is preserved.  (The pod-scale
+index layouts are exercised by repro.launch.dryrun's vectordb-wiki cells.)
 """
 
 from __future__ import annotations
@@ -65,6 +74,18 @@ def main():
     ap.add_argument("--ingest", type=int, default=0,
                     help="hold back N docs from the build and hot-add them "
                          "through the running engine (needs --shards)")
+    ap.add_argument("--cluster", action="store_true",
+                    help="serve through the cluster control plane: one "
+                         "independent batcher per replica group, stream "
+                         "affinity, failover routing (needs --shards)")
+    ap.add_argument("--fail-shard", type=int, default=None, metavar="G",
+                    help="inject a failure into replica group G after the "
+                         "first pass and verify bit-identical failover "
+                         "(needs --cluster and --replicas >= 2)")
+    ap.add_argument("--auto-compact", type=float, default=None, metavar="T",
+                    help="run the background maintenance daemon with "
+                         "tombstone-ratio threshold T and demo an "
+                         "auto-compaction (needs --cluster)")
     args = ap.parse_args()
     if args.replicas > 1 and args.shards < 1:
         ap.error("--replicas needs --shards >= 1")
@@ -75,6 +96,17 @@ def main():
                  "immutable)")
     if not 0 <= args.ingest < args.docs:
         ap.error("--ingest must be in [0, --docs)")
+    if args.cluster and args.shards < 1:
+        ap.error("--cluster needs --shards >= 1")
+    if args.fail_shard is not None:
+        if not args.cluster or args.replicas < 2:
+            ap.error("--fail-shard needs --cluster and --replicas >= 2 "
+                     "(failover needs a surviving replica group)")
+        if not 0 <= args.fail_shard < args.replicas:
+            ap.error(f"--fail-shard must be in [0, {args.replicas})")
+    if args.auto_compact is not None and not (args.cluster
+                                              and 0 < args.auto_compact < 1):
+        ap.error("--auto-compact needs --cluster and a threshold in (0, 1)")
 
     print(f"building corpus ({args.docs} docs) + LSA-{args.features} ...")
     corpus = make_corpus(n_docs=args.docs, vocab_size=max(args.docs, 8000),
@@ -107,10 +139,21 @@ def main():
     else:
         index = VectorIndex.build(pipe.doc_vectors, encoder)
 
-    engine = BatchedSearchEngine(
-        index, batch_size=args.batch_size, k=10, page=args.page,
-        trim=TrimFilter(args.trim) if args.trim else None, engine=args.engine,
-        merge=args.merge)
+    common = dict(batch_size=args.batch_size, k=10, page=args.page,
+                  trim=TrimFilter(args.trim) if args.trim else None,
+                  engine=args.engine, merge=args.merge)
+    if args.cluster:
+        from repro.cluster import ClusterEngine
+
+        engine = ClusterEngine(index, auto_compact=args.auto_compact,
+                               **common)
+        n_streams = 4 * engine.n_groups
+        submit = lambda i, q: engine.submit(q, stream=i % n_streams)
+        print(f"cluster control plane: {engine.n_groups} replica-group "
+              f"batcher(s), {n_streams} request streams")
+    else:
+        engine = BatchedSearchEngine(index, **common)
+        submit = lambda i, q: engine.submit(q)
     try:
         if args.ingest:
             t0 = time.time()
@@ -120,19 +163,71 @@ def main():
                   f"{first + args.ingest - 1}) in {dt*1e3:.1f} ms "
                   f"({args.ingest/dt:.0f} docs/s)")
         t0 = time.time()
-        futs = [engine.submit(q) for q in queries]
+        futs = [submit(i, q) for i, q in enumerate(queries)]
         results = [f.result(timeout=120) for f in futs]
         dt = time.time() - t0
+
+        ids = jnp.asarray(np.stack([r[0] for r in results]))
+        p10 = float(precision_at_k(ids, gold_ids).mean())
+        print(f"served {args.queries} queries in {dt:.2f}s "
+              f"({dt/args.queries*1e3:.1f} ms/query effective, "
+              f"batch={args.batch_size}, engine={args.engine})")
+        print(f"P@10 vs brute force: {p10:.3f} "
+              f"(trim={args.trim}, page={args.page})")
+
+        if args.fail_shard is not None:
+            engine.inject_failure(args.fail_shard)
+            t0 = time.time()
+            futs = [submit(i, q) for i, q in enumerate(queries)]
+            down = [f.result(timeout=120) for f in futs]
+            dt = time.time() - t0
+            same = all(np.array_equal(a[0], b[0])
+                       and np.array_equal(a[1], b[1])
+                       for a, b in zip(results, down))
+            assert same, "failover results diverged from the healthy cluster"
+            print(f"failover: injected failure into group {args.fail_shard}; "
+                  f"re-served {args.queries} queries in {dt:.2f}s on "
+                  f"groups {engine.health.up_groups()} -- results "
+                  f"bit-identical to the healthy cluster")
+            # recovery: clear the fault and rejoin the group (two separate
+            # events, like an ES node rejoin after the fault clears)
+            engine.heal(args.fail_shard)
+            engine.mark_up(args.fail_shard)
+
+        if args.auto_compact is not None:
+            # the tombstone ratio is dead / docs-ever-assigned over the
+            # WHOLE id space (built + hot-ingested), so size and draw the
+            # victims from the whole space too or a big --ingest keeps the
+            # ratio under the threshold forever
+            n_del = int(min(0.9, 1.5 * args.auto_compact) * args.docs)
+            pool = rng.permutation(np.setdiff1d(np.arange(args.docs), qids))
+            victims = pool[:n_del]
+            if len(victims) <= 1.2 * args.auto_compact * args.docs:
+                ap.error("--auto-compact threshold unreachable: too few "
+                         "deletable docs (raise --docs or lower --queries "
+                         "or the threshold)")
+            engine.delete(victims)
+            target = max(1, len(engine.health.up_groups()))
+            deadline = time.time() + 120
+            while (engine.maintenance.compactions < target
+                   and time.time() < deadline):
+                time.sleep(0.05)
+            n_compact = engine.maintenance.compactions
+            assert n_compact, "background auto-compaction never fired"
+            live_vecs = np.asarray(unit_vecs).copy()
+            live_vecs[victims] = 0.0
+            gold_live, _ = brute_force_topk(jnp.asarray(live_vecs),
+                                            unit_vecs[qids], 10)
+            futs = [submit(i, q) for i, q in enumerate(queries)]
+            ids2 = jnp.asarray(
+                np.stack([f.result(timeout=120)[0] for f in futs]))
+            p10_live = float(precision_at_k(ids2, gold_live).mean())
+            print(f"auto-compact: deleted {n_del} docs (ratio past "
+                  f"{args.auto_compact}), background daemon compacted "
+                  f"{n_compact} group(s); post-compact P@10 vs live gold: "
+                  f"{p10_live:.3f}")
     finally:
         engine.close()
-
-    ids = jnp.asarray(np.stack([r[0] for r in results]))
-    p10 = float(precision_at_k(ids, gold_ids).mean())
-    print(f"served {args.queries} queries in {dt:.2f}s "
-          f"({dt/args.queries*1e3:.1f} ms/query effective, "
-          f"batch={args.batch_size}, engine={args.engine})")
-    print(f"P@10 vs brute force: {p10:.3f} "
-          f"(trim={args.trim}, page={args.page})")
 
 
 if __name__ == "__main__":

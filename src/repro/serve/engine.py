@@ -36,8 +36,21 @@ before returning.
 segments, :meth:`repro.dist.shard_index.ShardedVectorIndex.add_documents`)
 and atomically swaps the new index in under the engine lock -- the batch
 in flight finishes against the old index, every batch dequeued afterwards
-sees the new documents.  Ingest is a control-plane operation: submits
-block for its (short) duration, which is the ES refresh semantics.
+sees the new documents.  ``delete`` tombstones the same way.  Ingest is a
+control-plane operation: submits block for its (short) duration, which is
+the ES refresh semantics.
+
+**Hot swap**: ``swap_index(new, expected=old)`` is the compare-and-swap
+the background maintenance daemon (:mod:`repro.cluster.maintenance`)
+compacts through: the rebuild runs OUTSIDE the lock against a snapshot,
+the swap takes the lock only for the pointer flip, and a concurrent
+``add_documents``/``delete`` (which changes ``self.index``) makes the CAS
+return False so the daemon retries against the fresh snapshot -- no
+in-flight query is ever dropped and no ingest is ever lost.
+
+``pending`` (queued + in-flight request count) is the router's load
+signal for least-loaded spill across replica-group batchers
+(:mod:`repro.cluster.router`).
 """
 
 from __future__ import annotations
@@ -66,17 +79,21 @@ class BatchedSearchEngine:
         trim: Optional[TrimFilter] = TrimFilter(0.05),
         engine: str = "codes",
         merge: Optional[str] = None,
+        max_postings: "Optional[int | str]" = None,
     ):
         self.index = index
         self.batch_size = batch_size
         self.max_wait_s = max_wait_s
         self.k, self.page, self.trim, self.engine = k, page, trim, engine
-        # merge transport for sharded indexes ("gather" | "stream"); None
-        # omits the kwarg so plain VectorIndex keeps serving unchanged
+        # merge transport for sharded indexes ("gather" | "stream") and the
+        # postings window ("auto" = size from the shard code distribution);
+        # None omits the kwarg so plain VectorIndex keeps serving unchanged
         self.merge = merge
+        self.max_postings = max_postings
         self._lock = threading.Condition()
         self._queue: List[Tuple[np.ndarray, Future]] = []
         self._stop = False
+        self._inflight = 0
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
 
@@ -92,6 +109,13 @@ class BatchedSearchEngine:
 
     def search(self, query_vec: np.ndarray, timeout: float = 10.0):
         return self.submit(query_vec).result(timeout=timeout)
+
+    @property
+    def pending(self) -> int:
+        """Queued + in-flight request count -- the cluster router's load
+        signal for stream-affinity spill decisions."""
+        with self._lock:
+            return len(self._queue) + self._inflight
 
     def add_documents(self, vectors: np.ndarray) -> int:
         """Hot-add documents; returns the first global id assigned.
@@ -114,6 +138,37 @@ class BatchedSearchEngine:
             self.index = add(vectors)
             return first_id
 
+    def delete(self, ids) -> None:
+        """Hot-tombstone documents by global id: the pruned index swaps in
+        under the engine lock (same semantics as :meth:`add_documents` --
+        in-flight batches finish on the old index, later batches never see
+        the dead docs).  Feeds ``index.tombstone_ratio``, the maintenance
+        daemon's auto-compaction trigger."""
+        with self._lock:
+            if self._stop:
+                raise RuntimeError("engine closed")
+            delete = getattr(self.index, "delete", None)
+            if delete is None:
+                raise TypeError(
+                    f"{type(self.index).__name__} does not support "
+                    "deletes; serve a ShardedVectorIndex")
+            self.index = delete(ids)
+
+    def swap_index(self, new_index, expected=None) -> bool:
+        """Atomically replace the served index (hot swap, no queries
+        dropped).  With ``expected`` this is a compare-and-swap: the flip
+        happens only while ``self.index is expected``, so a maintenance
+        rebuild computed from a snapshot can never clobber a concurrent
+        ingest -- it returns False and the caller retries on fresh state.
+        """
+        with self._lock:
+            if self._stop:
+                raise RuntimeError("engine closed")
+            if expected is not None and self.index is not expected:
+                return False
+            self.index = new_index
+            return True
+
     def close(self):
         with self._lock:
             self._stop = True
@@ -132,28 +187,37 @@ class BatchedSearchEngine:
                     return
                 batch = self._queue[: self.batch_size]
                 del self._queue[: len(batch)]
+                # snapshot under the lock: a hot swap after this point
+                # applies to the NEXT batch, this one finishes on `index`
+                index = self.index
+                self._inflight = len(batch)
             if not batch:
                 continue
             # a failing search must not kill the worker: every queued and
             # in-flight future would strand (resolve only by caller
             # timeout) -- fail this batch's futures, serve the next batch
             try:
-                qs = np.stack([q for q, _ in batch])
-                pad = self.batch_size - qs.shape[0]
-                if pad:
-                    qs = np.concatenate(
-                        [qs, np.zeros((pad, qs.shape[1]), qs.dtype)])
-                kwargs = {"merge": self.merge} if self.merge else {}
-                ids, scores = self.index.search(
-                    jnp.asarray(qs), k=self.k, page=self.page, trim=self.trim,
-                    engine=self.engine, **kwargs,
-                )
-                ids, scores = np.asarray(ids), np.asarray(scores)
-            except Exception as exc:  # noqa: BLE001 - forwarded to futures
-                for _, fut in batch:
-                    if not fut.done():
-                        fut.set_exception(exc)
-                continue
-            for i, (_, fut) in enumerate(batch):
-                if not fut.done():          # caller may have cancelled
-                    fut.set_result((ids[i], scores[i]))
+                try:
+                    qs = np.stack([q for q, _ in batch])
+                    pad = self.batch_size - qs.shape[0]
+                    if pad:
+                        qs = np.concatenate(
+                            [qs, np.zeros((pad, qs.shape[1]), qs.dtype)])
+                    kwargs = {"merge": self.merge} if self.merge else {}
+                    if self.max_postings is not None:
+                        kwargs["max_postings"] = self.max_postings
+                    ids, scores = index.search(
+                        jnp.asarray(qs), k=self.k, page=self.page,
+                        trim=self.trim, engine=self.engine, **kwargs,
+                    )
+                    ids, scores = np.asarray(ids), np.asarray(scores)
+                except Exception as exc:  # noqa: BLE001 - fwd to futures
+                    for _, fut in batch:
+                        if not fut.done():
+                            fut.set_exception(exc)
+                    continue
+                for i, (_, fut) in enumerate(batch):
+                    if not fut.done():      # caller may have cancelled
+                        fut.set_result((ids[i], scores[i]))
+            finally:
+                self._inflight = 0

@@ -179,6 +179,110 @@ def test_concurrent_submitters_all_resolve(index):
         assert np.array_equal(ids, np.asarray(gold_ids)[i]), i
 
 
+class _GatedFlakyIndex:
+    """Blocks in search until released, then optionally raises -- the
+    deterministic way to hold a batch in flight while the control plane
+    races it."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.entered = threading.Event()
+        self.release = threading.Event()
+        self.poison = threading.Event()
+
+    def search(self, queries, **kw):
+        self.entered.set()
+        assert self.release.wait(timeout=60), "gate never released"
+        if self.poison.is_set():
+            raise ValueError("injected search failure")
+        return self.inner.search(queries, **kw)
+
+
+def test_hot_swap_races_raising_search(index, queries):
+    """Failover edge case: a hot swap lands while the in-flight batch is
+    mid-raise.  The raising batch must fail only its own futures, the
+    worker must survive, and the next batch must serve from the SWAPPED
+    index -- the maintenance-daemon race in miniature."""
+    gated = _GatedFlakyIndex(index)
+    eng = BatchedSearchEngine(gated, batch_size=4, k=5, page=N_DOCS,
+                              trim=None, engine="codes")
+    try:
+        gated.poison.set()
+        doomed = [eng.submit(q) for q in queries[:4]]
+        assert gated.entered.wait(timeout=60)     # batch is in flight
+        # swap while the batch is mid-search: in-flight work keeps its
+        # snapshot; the swap applies to the next dequeue
+        assert eng.swap_index(index, expected=gated)
+        gated.release.set()
+        for f in doomed:
+            with pytest.raises(ValueError, match="injected search failure"):
+                f.result(timeout=60)
+        assert eng._worker.is_alive()
+        gold_ids, _ = index.search(queries[4:8], k=5, page=N_DOCS, trim=None,
+                                   engine="codes")
+        good = [eng.submit(q) for q in queries[4:8]]
+        for i, f in enumerate(good):
+            ids, _ = f.result(timeout=60)
+            assert np.array_equal(ids, np.asarray(gold_ids)[i])
+    finally:
+        gated.release.set()
+        eng.close()
+
+
+def test_swap_index_cas_semantics(index):
+    """swap_index is a compare-and-swap: a stale `expected` (e.g. an index
+    that was hot-swapped away mid-rebuild) must NOT clobber the live one."""
+    other = VectorIndex.build(
+        np.random.default_rng(3).normal(size=(40, N_FEAT)).astype(np.float32))
+    eng = BatchedSearchEngine(index, batch_size=2, k=3, page=N_DOCS)
+    try:
+        assert eng.swap_index(other, expected=index)
+        assert eng.index is other
+        assert not eng.swap_index(index, expected=index)  # stale snapshot
+        assert eng.index is other
+        eng.swap_index(index)                             # unconditional
+        assert eng.index is index
+    finally:
+        eng.close()
+    with pytest.raises(RuntimeError, match="engine closed"):
+        eng.swap_index(other)
+
+
+def test_pending_tracks_queue_and_inflight(index, queries):
+    """`pending` (the cluster router's load signal) counts queued AND
+    in-flight requests, and drains back to zero."""
+    gated = _GatedFlakyIndex(index)
+    eng = BatchedSearchEngine(gated, batch_size=2, k=3, page=N_DOCS,
+                              trim=None, engine="codes")
+    try:
+        futs = [eng.submit(q) for q in queries[:5]]
+        assert gated.entered.wait(timeout=60)
+        assert eng.pending >= 3          # 2 in flight + >= 3 queued - served
+        gated.release.set()
+        for f in futs:
+            f.result(timeout=60)
+        deadline = time.monotonic() + 60
+        while eng.pending and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert eng.pending == 0
+    finally:
+        gated.release.set()
+        eng.close()
+
+
+def test_delete_requires_mutable_index(index, queries):
+    """Plain VectorIndex has no tombstones: hot delete must fail fast, and
+    a closed engine must refuse the control-plane call outright."""
+    eng = BatchedSearchEngine(index, batch_size=2, k=3, page=N_DOCS)
+    try:
+        with pytest.raises(TypeError, match="does not support"):
+            eng.delete([0, 1])
+    finally:
+        eng.close()
+    with pytest.raises(RuntimeError, match="engine closed"):
+        eng.delete([0])
+
+
 def test_merge_kwarg_forwarded_only_when_set(index, queries):
     """merge=None keeps the plain-VectorIndex call signature; a sharded
     index gets the transport passed through (single-shard mesh in-process)."""
