@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke-shard smoke-replica smoke-build smoke-cluster bench bench-full
+.PHONY: test smoke-shard smoke-replica smoke-build smoke-cluster smoke-store bench bench-full
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -42,6 +42,19 @@ smoke-cluster:
 	  benchmarks.cluster_scale --grid 4x2 --streams 1,4 --docs 2000 \
 	  --features 32 --queries 16 --repeats 1 \
 	  --json artifacts/BENCH_cluster_scale_quick.json
+
+# durability smoke under 4 virtual devices: build -> commit -> hot ingest
+# through the write-ahead translog -> kill (drop every in-memory index) ->
+# crash-recover from the store directory alone -> assert bit-identical
+# search results (the store dir is recreated fresh each run: this launcher
+# always builds a fresh corpus, so a stale commit would be a lie)
+smoke-store:
+	rm -rf artifacts/store_smoke
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" $(PY) -m \
+	  repro.launch.serve --docs 2000 --features 32 --queries 32 \
+	  --shards 4 --ingest 200 --store artifacts/store_smoke \
+	  --kill-and-recover
+	rm -rf artifacts/store_smoke
 
 bench:
 	$(PY) -m benchmarks.run

@@ -36,7 +36,23 @@ maintenance`)                    .deletes_pct_allowed``: watches per-shard
                                  tombstone ratios and rewrites (compacts)
                                  past the threshold, hot-swapping under
                                  the engine lock so no in-flight query is
-                                 dropped.
+                                 dropped.  Given a durability store
+                                 (:mod:`repro.store`), it also rolls a
+                                 commit point after each compaction and
+                                 trims the replayed translog -- the ES
+                                 flush that follows a merge.
+canary health probing            the master pinging an unresponsive node
+(``MaintenanceDaemon.            and re-promoting its shard copies once
+probe_once``)                    it answers: downed groups get a canary
+                                 query each tick and ``mark_up`` when it
+                                 succeeds -- re-admission without manual
+                                 intervention.
+``ClusterEngine.restore_group``  replica recovery from the primary's
+                                 translog: a group whose MEMORY is gone
+                                 rebuilds from commit point + translog
+                                 replay (:mod:`repro.store`) onto its own
+                                 device column and rejoins, bit-identical
+                                 to its surviving siblings.
 ===============================  ==========================================
 
 The data-plane hooks these build on live in

@@ -14,6 +14,14 @@ e.g. a rolling restart); only new picks avoid it.  Actually-dead groups
 are handled one level up: the router's failure path marks the group down
 *and* resubmits the failed requests to a surviving copy.
 
+Two kinds of down (the ES allocation-``exclude`` vs shard-failed
+distinction): ``mark_down(g)`` records a FAULT -- the canary prober
+(:meth:`~repro.cluster.maintenance.MaintenanceDaemon.probe_once`) may
+re-admit the group once it answers again; ``mark_down(g, drain=True)``
+records OPERATOR INTENT -- the group is deliberately out of routing
+(rolling restart, debugging) and stays down, however healthy its
+canaries look, until an explicit ``mark_up``.  ``mark_up`` clears both.
+
 Thread-safe; every mutation bumps ``generation`` (ES cluster-state
 version) so pollers can cheaply detect change.
 """
@@ -32,6 +40,7 @@ class HealthMap:
             raise ValueError(f"need at least one replica group, got {n_groups}")
         self.n_groups = n_groups
         self._down: set = set()
+        self._drained: set = set()
         self._lock = threading.Lock()
         self._generation = 0
 
@@ -40,25 +49,59 @@ class HealthMap:
             raise ValueError(
                 f"group must be in [0, {self.n_groups}), got {group}")
 
-    def mark_down(self, group: int) -> bool:
-        """Stop routing to ``group``; returns True if the state changed."""
+    def mark_down(self, group: int, drain: bool = False) -> bool:
+        """Stop routing to ``group``; returns True if anything changed
+        (down flipped OR a new drain intent was recorded -- both bump
+        ``generation``).  ``drain=True`` records operator intent: the
+        group is exempt from canary re-admission until an explicit
+        :meth:`mark_up` (draining an already-down group still records
+        the intent)."""
         self._check(group)
         with self._lock:
-            if group in self._down:
-                return False
-            self._down.add(group)
-            self._generation += 1
-            return True
+            changed = False
+            if drain and group not in self._drained:
+                self._drained.add(group)
+                changed = True
+            if group not in self._down:
+                self._down.add(group)
+                changed = True
+            if changed:
+                self._generation += 1
+            return changed
 
     def mark_up(self, group: int) -> bool:
-        """Restore routing to ``group``; returns True if the state changed."""
+        """Restore routing to ``group``, clearing any drain intent (this
+        is the operator's explicit rejoin); returns True if the ROUTING
+        state changed (a drain-only clear still bumps ``generation``)."""
         self._check(group)
         with self._lock:
+            if group in self._drained or group in self._down:
+                self._generation += 1
+            self._drained.discard(group)
             if group not in self._down:
+                return False
+            self._down.discard(group)
+            return True
+
+    def readmit(self, group: int) -> bool:
+        """``mark_up`` UNLESS an operator drain is in force -- atomic, so
+        a drain recorded while a canary was in flight can never be undone
+        by its success (the prober's and the failover rollback's entry
+        point; only the operator's :meth:`mark_up` clears a drain)."""
+        self._check(group)
+        with self._lock:
+            if group in self._drained or group not in self._down:
                 return False
             self._down.discard(group)
             self._generation += 1
             return True
+
+    def is_drained(self, group: int) -> bool:
+        """True while an operator drain (``mark_down(g, drain=True)``)
+        is in force -- the prober must not re-admit such a group."""
+        self._check(group)
+        with self._lock:
+            return group in self._drained
 
     def is_up(self, group: int) -> bool:
         self._check(group)
@@ -80,6 +123,7 @@ class HealthMap:
         with self._lock:
             return {"n_groups": self.n_groups,
                     "down": tuple(sorted(self._down)),
+                    "drained": tuple(sorted(self._drained)),
                     "generation": self._generation}
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid

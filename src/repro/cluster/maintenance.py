@@ -31,14 +31,37 @@ rebuild that ITSELF fails (device OOM, compile error) is recorded in
 hot-loops the same expensive failure; the next ingest/delete produces a
 new snapshot and re-arms the group.
 
-``poll_once()`` exposes one deterministic sweep for tests; ``start()``
-runs it on a daemon thread every ``interval_s``.
+**Durability** (``store=``, :class:`repro.store.durable.Store`): after a
+successful compact-and-swap of an index that carries ``translog_seq``
+(the :class:`~repro.store.durable.DurableIndex` commit metadata riding
+through the CAS), the daemon rolls a new commit point and trims the
+replayed translog -- the ES flush that follows a merge.  The committed
+(state, seq) pair is exactly the pair that won the CAS, so a racing
+ingest can never be committed out from under its translog record.  A
+failing commit (disk error) is recorded in ``failures``, never fatal.
+
+**Health probing** (``probe=True``, needs ``health``): each background
+tick also sends a canary query through every FAULTED group's batcher and
+``mark_up``s the ones that answer -- the ES master re-promoting a shard
+copy once it responds again, so re-admission after :meth:`ClusterEngine.
+heal` (or a transient fault clearing) no longer requires a manual
+``mark_up`` or a poisoned-request rollback.  Operator-DRAINED groups
+(``mark_down(g, drain=True)``, the ClusterEngine operator hook) are
+exempt: a drain is intent, not a fault, and the prober must not undo it
+behind the operator's back.  A canary that fails leaves the group down
+and is not recorded as a failure (down is its steady state).
+``probe_once()`` is the deterministic entry point.
+
+``poll_once()`` exposes one deterministic compaction sweep for tests;
+``start()`` runs poll + probe on a daemon thread every ``interval_s``.
 """
 
 from __future__ import annotations
 
 import threading
 from typing import List, Optional, Sequence
+
+import numpy as np
 
 __all__ = ["MaintenanceDaemon"]
 
@@ -50,17 +73,35 @@ class MaintenanceDaemon:
         threshold: float = 0.2,
         interval_s: float = 0.05,
         health=None,                      # Optional[HealthMap]
+        store=None,                       # Optional[repro.store.Store]
+        probe: bool = False,
+        probe_timeout_s: float = 5.0,
+        probe_interval_s: Optional[float] = None,
     ):
         if not 0.0 < threshold:
             raise ValueError(f"threshold must be positive, got {threshold}")
+        if probe and health is None:
+            raise ValueError("probe=True needs a HealthMap to mark_up into")
         self._batchers = list(batchers)
         self.threshold = threshold
         self.interval_s = interval_s
         self._health = health
+        self._store = store
+        self.probe = probe
+        self.probe_timeout_s = probe_timeout_s
+        # probing runs on its own cadence (default: every compaction tick);
+        # the two loops share the thread but not the clock, so a fast
+        # compaction interval does not turn into a canary storm and vice
+        # versa
+        self.probe_interval_s = (interval_s if probe_interval_s is None
+                                 else probe_interval_s)
+        self._probes: dict = {}           # group -> in-flight canary Future
         self._stop_evt = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.events: List[dict] = []      # one entry per applied compaction
         self.failures: List[dict] = []    # one entry per failed rebuild
+        self.probe_events: List[dict] = []  # one entry per re-admission
+        self.commits: int = 0             # commit points rolled post-compact
         self._quarantine: dict = {}       # group -> snapshot whose rebuild
         #                                   failed; skipped until it changes
 
@@ -120,10 +161,92 @@ class MaintenanceDaemon:
                     "tombstone_ratio": ratio,
                     "n_ids": snapshot.n_ids,
                 })
+                self._commit(g, compacted)
             # CAS miss: an ingest/delete raced the rebuild -- the next
             # sweep re-evaluates the fresh index
         return applied
 
+    def _commit(self, g: int, compacted) -> None:
+        """Roll a commit point for the state that won the CAS (the ES
+        flush after a merge).  ``compacted`` is OUR reference to the
+        swapped-in index, so its (state, translog_seq) pair stays
+        consistent even if a racing ingest has already moved the engine
+        past it -- the racer's ops sit after ``translog_seq`` in the log
+        and replay on top of this commit."""
+        seq = getattr(compacted, "translog_seq", None)
+        if self._store is None or seq is None:
+            return
+        try:
+            self._store.commit(compacted, seq)
+            self.commits += 1
+        except Exception as exc:  # noqa: BLE001 - disk faults not fatal
+            self.failures.append({"group": g, "commit_seq": seq,
+                                  "error": repr(exc)})
+
+    def probe_once(self) -> int:
+        """Canary-probe every FAULTED group; readmit the ones that
+        answer.  Returns groups re-admitted.  The canary goes through the
+        group's real batcher (the honest path -- a group is healthy when
+        it can serve, not when a side channel says so); routing never
+        sees it because routing already avoids down groups.
+
+        Canaries are tracked as in-flight futures: a FRESH canary gets a
+        bounded ``probe_timeout_s`` window (so the deterministic
+        ``probe_once()`` re-admits a responsive group in one call), but a
+        canary that is still pending after that is left in flight and
+        merely polled on later ticks -- a HUNG group costs its window
+        once, not per tick, and can never starve the compaction sweeps
+        sharing this thread.  Re-admission goes through
+        ``HealthMap.readmit`` (atomic mark-up-unless-drained), so an
+        operator drain recorded while the canary was in flight survives
+        its success."""
+        if self._health is None:
+            return 0
+        is_drained = getattr(self._health, "is_drained", lambda g: False)
+        readmit = getattr(self._health, "readmit", self._health.mark_up)
+        readmitted = 0
+        for g, batcher in enumerate(self._batchers):
+            if self._health.is_up(g) or is_drained(g):
+                self._probes.pop(g, None)   # stale canary: nobody to admit
+                continue
+            fut = self._probes.get(g)
+            if fut is None:
+                try:
+                    canary = np.ones((batcher.index.n_features,),
+                                     np.float32)
+                    fut = batcher.submit(canary)
+                except Exception:  # noqa: BLE001 - closed/broken batcher
+                    continue
+                self._probes[g] = fut
+                try:
+                    fut.result(timeout=self.probe_timeout_s)
+                except Exception:  # noqa: BLE001 - timeout OR canary error
+                    pass
+            if not fut.done():
+                continue                    # hung: poll again next tick
+            self._probes.pop(g, None)
+            try:
+                if fut.exception() is not None:
+                    continue                # still faulty: steady state
+            except BaseException:           # noqa: BLE001 - cancelled
+                continue
+            if readmit(g):
+                readmitted += 1
+                self.probe_events.append({"group": g})
+        return readmitted
+
     def _run(self) -> None:
-        while not self._stop_evt.wait(self.interval_s):
-            self.poll_once()
+        import time
+
+        tick = self.interval_s
+        if self.probe:
+            tick = min(tick, self.probe_interval_s)
+        poll_at = probe_at = 0.0
+        while not self._stop_evt.wait(tick):
+            now = time.monotonic()
+            if now >= poll_at:
+                self.poll_once()
+                poll_at = time.monotonic() + self.interval_s
+            if self.probe and now >= probe_at:
+                self.probe_once()
+                probe_at = time.monotonic() + self.probe_interval_s

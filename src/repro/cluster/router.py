@@ -41,6 +41,23 @@ ingest routing guarantees every copy assigns identical gids.
 :class:`~repro.cluster.maintenance.MaintenanceDaemon` that watches every
 group's tombstone ratio and compacts in the background (hot CAS swap, no
 dropped queries).
+
+**Durability** (``store=``, :class:`repro.store.durable.Store`): group 0
+is the *primary* -- its index wraps in a write-through
+:class:`~repro.store.durable.DurableIndex`, so every cluster
+``add_documents``/``delete`` hits the translog (group 0, first in the
+fan-out, applies and logs before any replica group applies and before
+the cluster acks), the ES primary-owns-the-translog arrangement; replica
+groups apply without re-logging because every copy computes the
+identical state.  :meth:`restore_group` is then the
+recovery story PR 4 lacked: a replica group whose memory is gone is
+rebuilt from commit point + translog replay onto its own device column
+and re-admitted -- instead of staying down forever or leeching a sibling
+copy's RAM.  Control-plane writes and restores serialize on one lock so
+a restore can never miss a racing ingest.  ``probe_s=<seconds>`` runs
+the background canary prober (see
+:meth:`~repro.cluster.maintenance.MaintenanceDaemon.probe_once`) so
+healed groups re-admit without a manual ``mark_up``.
 """
 
 from __future__ import annotations
@@ -119,12 +136,19 @@ class ClusterEngine:
         max_stream_pins: int = 4096,
         auto_compact: Optional[float] = None,
         compact_interval_s: float = 0.05,
+        store=None,
+        probe_s: Optional[float] = None,
     ):
         """``index`` is a ShardedVectorIndex (its R replica groups become
         the cluster's groups) or an explicit list of group indexes (full
         serving copies -- how tests run a multi-group cluster on one
         device).  ``auto_compact`` is a tombstone-ratio threshold; set, it
-        starts the background maintenance daemon."""
+        starts the background maintenance daemon.  ``store`` attaches a
+        durability directory (group 0 becomes the write-through primary,
+        a baseline commit is written if none exists, and
+        :meth:`restore_group` re-admits downed groups from disk).
+        ``probe_s`` runs the background canary prober at that interval so
+        healed groups re-admit automatically."""
         if isinstance(index, (list, tuple)):
             groups = list(index)
         else:
@@ -132,6 +156,12 @@ class ClusterEngine:
                       for g in range(index.n_replicas)]
         if not groups:
             raise ValueError("need at least one replica group")
+        self.store = store
+        if store is not None:
+            from repro.store.durable import DurableIndex
+
+            if not isinstance(groups[0], DurableIndex):
+                groups[0] = store.open_index(groups[0])
         self._failpoints = [_FailpointIndex(g) for g in groups]
         self.health = HealthMap(len(groups))
         self._batchers: List[BatchedSearchEngine] = [
@@ -149,12 +179,24 @@ class ClusterEngine:
         self.max_stream_pins = max(1, max_stream_pins)
         self._streams: OrderedDict = OrderedDict()
         self._lock = threading.Lock()
+        # serializes control-plane writes (ingest/delete) against
+        # restore_group's recover-then-swap, so a restore can never miss
+        # an op that landed between its disk read and its swap
+        self._ctl_lock = threading.Lock()
         self._closed = False
         self.maintenance: Optional[MaintenanceDaemon] = None
-        if auto_compact is not None:
+        if auto_compact is not None or probe_s is not None:
+            # compaction sweeps and canary probes keep independent
+            # cadences (the daemon thread ticks at the faster of the two)
             self.maintenance = MaintenanceDaemon(
-                self._batchers, threshold=auto_compact,
-                interval_s=compact_interval_s, health=self.health).start()
+                self._batchers,
+                threshold=(auto_compact if auto_compact is not None
+                           else float("inf")),
+                interval_s=(compact_interval_s if auto_compact is not None
+                            else probe_s),
+                probe_interval_s=probe_s,
+                health=self.health, store=store,
+                probe=probe_s is not None).start()
 
     # ------------------------------------------------------------ topology
     @property
@@ -216,9 +258,11 @@ class ClusterEngine:
                     # the cluster, is the likely fault (a genuinely dead
                     # copy fails while its siblings answer) -- undo this
                     # request's mark_downs so one poisoned query cannot
-                    # black-hole the whole cluster, and surface the error
+                    # black-hole the whole cluster, and surface the error.
+                    # readmit, not mark_up: an operator drain recorded
+                    # while this request was in flight must survive
                     for m in marked:
-                        self.health.mark_up(m)
+                        self.health.readmit(m)
                 if not outer.done():
                     outer.set_exception(prev_exc or exc)
                 return
@@ -260,22 +304,66 @@ class ClusterEngine:
         """Hot-add documents to EVERY replica group (down groups included:
         a copy must stay consistent to be markable up again).  Returns the
         first assigned global id -- identical in every group because
-        ingest routing is deterministic."""
-        firsts = {b.add_documents(vectors) for b in self._batchers}
+        ingest routing is deterministic.  With a store attached, group 0
+        (first in the fan-out) write-throughs the translog, so the op is
+        durable before any group acks."""
+        with self._ctl_lock:
+            firsts = {b.add_documents(vectors) for b in self._batchers}
         if len(firsts) != 1:              # pragma: no cover - invariant
             raise RuntimeError(f"replica groups diverged: first ids {firsts}")
         return firsts.pop()
 
     def delete(self, ids) -> None:
         """Hot-tombstone documents in every replica group."""
-        for b in self._batchers:
-            b.delete(ids)
+        with self._ctl_lock:
+            for b in self._batchers:
+                b.delete(ids)
+
+    def restore_group(self, group: int, mesh=None) -> int:
+        """Re-admit replica group ``group`` from DISK: crash-recover the
+        index (latest commit point + translog replay) onto the group's
+        own device column, swap it behind the group's batcher, clear any
+        injected fault, and mark the group up.  Returns the recovered
+        translog seqno.
+
+        This is the path PR 4 could not express: a group whose in-memory
+        copy is lost (not merely unrouted) comes back from durable state
+        instead of staying down.  Runs under the control-plane write lock,
+        so every op acked before the restore is in the recovered state and
+        every op after it applies to the swapped index -- the restored
+        copy is bit-identical to its surviving siblings (pinned by
+        tests/test_store.py on the 4x2 mesh)."""
+        if self.store is None:
+            raise RuntimeError(
+                "no store attached; construct ClusterEngine(store=...)")
+        if not 0 <= group < self.n_groups:
+            raise ValueError(
+                f"group must be in [0, {self.n_groups}), got {group}")
+        from repro.store.durable import DurableIndex
+
+        with self._ctl_lock:
+            if mesh is None:
+                mesh = self._batchers[group].index.mesh
+            index, seq = self.store.recover_index(mesh)
+            if group == 0:                # the primary keeps write-through
+                index = DurableIndex(index, self.store, seq=seq)
+            fp = _FailpointIndex(index, self._failpoints[group]._cell)
+            fp.fail = None                # restoring clears the fault
+            self._failpoints[group] = fp
+            self._batchers[group].swap_index(fp)
+        self.health.mark_up(group)
+        return seq
 
     # ------------------------------------------------------------- health
     def mark_down(self, group: int) -> bool:
         """Operator/drain hook: stop routing NEW work to ``group``.
-        Requests already queued on its batcher drain normally."""
-        return self.health.mark_down(group)
+        Requests already queued on its batcher drain normally.  Recorded
+        as a DRAIN (operator intent), so the background canary prober
+        will not re-admit the group behind the operator's back -- only
+        :meth:`mark_up` (or :meth:`restore_group`) brings it back.  The
+        failover path marks downs through ``health.mark_down`` directly
+        (a fault, probe-eligible)."""
+        return self.health.mark_down(group, drain=True)
 
     def mark_up(self, group: int) -> bool:
         return self.health.mark_up(group)

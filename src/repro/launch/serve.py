@@ -27,6 +27,17 @@ T`` starts the background maintenance daemon with tombstone-ratio
 threshold T, deletes enough docs to trip it, waits for the background
 compaction, and re-serves to show quality is preserved.  (The pod-scale
 index layouts are exercised by repro.launch.dryrun's vectordb-wiki cells.)
+
+Durability (:mod:`repro.store`): ``--store DIR`` attaches a translog +
+commit-point store -- every hot ingest/delete is fsync'd to the
+write-ahead log before it acks (``--durability async`` relaxes to
+buffered writes), and a baseline commit point is written at startup.
+``--kill-and-recover`` then runs the acceptance scenario end to end:
+after all serving passes it discards every in-memory index ("kill"),
+crash-recovers from the store directory alone (latest commit + translog
+replay, torn tails truncated), asserts the recovered index returns
+BIT-IDENTICAL search results to the pre-kill live index, and re-serves
+the query load through a fresh engine on the recovered state.
 """
 
 from __future__ import annotations
@@ -86,6 +97,17 @@ def main():
                     help="run the background maintenance daemon with "
                          "tombstone-ratio threshold T and demo an "
                          "auto-compaction (needs --cluster)")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="attach a durability store (write-ahead translog "
+                         "+ commit points) under DIR (needs --shards)")
+    ap.add_argument("--durability", default="request",
+                    choices=["request", "async"],
+                    help="translog fsync policy (request = fsync before "
+                         "every ingest ack, the ES default)")
+    ap.add_argument("--kill-and-recover", action="store_true",
+                    help="after serving, discard the in-memory index, "
+                         "crash-recover from --store alone, and assert "
+                         "bit-identical search results")
     args = ap.parse_args()
     if args.replicas > 1 and args.shards < 1:
         ap.error("--replicas needs --shards >= 1")
@@ -107,6 +129,14 @@ def main():
     if args.auto_compact is not None and not (args.cluster
                                               and 0 < args.auto_compact < 1):
         ap.error("--auto-compact needs --cluster and a threshold in (0, 1)")
+    if args.store and args.shards < 1:
+        ap.error("--store needs --shards >= 1 (durability serializes the "
+                 "sharded index's canonical flat form)")
+    if args.durability != "request" and not args.store:
+        ap.error("--durability needs --store (there is no translog to "
+                 "apply the policy to)")
+    if args.kill_and_recover and not args.store:
+        ap.error("--kill-and-recover needs --store")
 
     print(f"building corpus ({args.docs} docs) + LSA-{args.features} ...")
     corpus = make_corpus(n_docs=args.docs, vocab_size=max(args.docs, 8000),
@@ -125,6 +155,7 @@ def main():
     queries = np.asarray(pipe.doc_vectors[qids])
     unit_vecs = normalize(jnp.asarray(pipe.doc_vectors, jnp.float32))
     gold_ids, _ = brute_force_topk(unit_vecs, unit_vecs[qids], 10)
+    gold_ref = gold_ids            # rebound to the live gold after deletes
 
     if args.shards > 0:
         from repro.dist.shard_index import ShardedVectorIndex
@@ -139,6 +170,19 @@ def main():
     else:
         index = VectorIndex.build(pipe.doc_vectors, encoder)
 
+    store = None
+    if args.store:
+        from repro.store import Store, latest_commit
+
+        if latest_commit(args.store, validate=False) is not None:
+            ap.error(f"--store {args.store} already holds a commit point; "
+                     "this launcher always builds a fresh corpus, so point "
+                     "it at a fresh directory")
+        store = Store(args.store, durability=args.durability)
+        print(f"durability store at {args.store} "
+              f"(translog durability={args.durability}, "
+              f"seqno={store.seqno})")
+
     common = dict(batch_size=args.batch_size, k=10, page=args.page,
                   trim=TrimFilter(args.trim) if args.trim else None,
                   engine=args.engine, merge=args.merge)
@@ -146,12 +190,14 @@ def main():
         from repro.cluster import ClusterEngine
 
         engine = ClusterEngine(index, auto_compact=args.auto_compact,
-                               **common)
+                               store=store, **common)
         n_streams = 4 * engine.n_groups
         submit = lambda i, q: engine.submit(q, stream=i % n_streams)
         print(f"cluster control plane: {engine.n_groups} replica-group "
               f"batcher(s), {n_streams} request streams")
     else:
+        if store is not None:
+            index = store.open_index(index)
         engine = BatchedSearchEngine(index, **common)
         submit = lambda i, q: engine.submit(q)
     try:
@@ -218,6 +264,7 @@ def main():
             live_vecs[victims] = 0.0
             gold_live, _ = brute_force_topk(jnp.asarray(live_vecs),
                                             unit_vecs[qids], 10)
+            gold_ref = gold_live
             futs = [submit(i, q) for i, q in enumerate(queries)]
             ids2 = jnp.asarray(
                 np.stack([f.result(timeout=120)[0] for f in futs]))
@@ -226,8 +273,54 @@ def main():
                   f"{args.auto_compact}), background daemon compacted "
                   f"{n_compact} group(s); post-compact P@10 vs live gold: "
                   f"{p10_live:.3f}")
+
+        if args.kill_and_recover:
+            from repro.launch.mesh import make_shard_mesh
+            from repro.store import recover
+
+            # pre-kill reference on the live index, computed directly (no
+            # batcher timing in the comparison); the recovered index is
+            # rebuilt on the same mesh SHAPE, so parity is bit-exact at
+            # any page, not only page >= n_docs
+            live = (engine.group_index(0) if args.cluster
+                    else engine.index)
+            ref_ids, ref_scores = live.search(
+                jnp.asarray(queries), k=10, page=args.page, engine=args.engine)
+            ref_ids, ref_scores = np.asarray(ref_ids), np.asarray(ref_scores)
+            n_ids_before = live.n_ids
+            engine.close()
+            del live, index                         # "kill": drop the RAM copy
+            t0 = time.time()
+            mesh = (make_shard_mesh(args.shards) if args.cluster
+                    else make_shard_mesh(args.shards, args.replicas))
+            recovered, seq = recover(args.store, mesh)
+            dt = time.time() - t0
+            assert recovered.n_ids == n_ids_before, \
+                (recovered.n_ids, n_ids_before)
+            got_ids, got_scores = recovered.search(
+                jnp.asarray(queries), k=10, page=args.page, engine=args.engine)
+            assert np.array_equal(np.asarray(got_ids), ref_ids), \
+                "recovered ids diverged from the pre-kill live index"
+            assert np.array_equal(np.asarray(got_scores), ref_scores), \
+                "recovered scores diverged from the pre-kill live index"
+            print(f"kill-and-recover: crash-recovered {recovered.n_ids} "
+                  f"docs from {args.store} (commit + translog replay to "
+                  f"seq {seq}) in {dt:.2f}s -- search results BIT-IDENTICAL "
+                  f"to the pre-kill live index")
+            # and the recovered state serves: a fresh engine over it
+            engine = BatchedSearchEngine(recovered, **common)
+            t0 = time.time()
+            futs = [engine.submit(q) for q in queries]
+            ids3 = jnp.asarray(
+                np.stack([f.result(timeout=120)[0] for f in futs]))
+            dt = time.time() - t0
+            p10_rec = float(precision_at_k(ids3, gold_ref).mean())
+            print(f"re-served {args.queries} queries on the recovered "
+                  f"index in {dt:.2f}s (P@10 {p10_rec:.3f})")
     finally:
         engine.close()
+        if store is not None:
+            store.close()
 
 
 if __name__ == "__main__":

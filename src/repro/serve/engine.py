@@ -46,7 +46,11 @@ compacts through: the rebuild runs OUTSIDE the lock against a snapshot,
 the swap takes the lock only for the pointer flip, and a concurrent
 ``add_documents``/``delete`` (which changes ``self.index``) makes the CAS
 return False so the daemon retries against the fresh snapshot -- no
-in-flight query is ever dropped and no ingest is ever lost.
+in-flight query is ever dropped and no ingest is ever lost.  The CAS also
+carries the durability commit metadata: a
+:class:`repro.store.durable.DurableIndex` rides through the swap with its
+``translog_seq`` intact, so whoever wins the CAS hands the daemon a
+consistent (state, translog position) pair to roll a commit point from.
 
 ``pending`` (queued + in-flight request count) is the router's load
 signal for least-loaded spill across replica-group batchers

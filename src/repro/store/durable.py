@@ -1,0 +1,184 @@
+"""Store façade + the write-through index wrapper.
+
+:class:`Store` owns one durability directory (translog generations +
+commit points) -- the per-index analogue of an ES data path.
+:class:`DurableIndex` is the write-through discipline: it wraps a
+:class:`ShardedVectorIndex` so that every ``add_documents``/``delete``
+hits the translog (fsync per the store's durability policy) BEFORE the
+caller is acked -- exactly ES ``index.translog.durability=request``
+semantics, and in ES's order: the op applies to the in-memory index
+FIRST and is logged only once it succeeded, so a malformed op that
+raises (wrong feature count, out-of-range id) is never logged and can
+never poison a later recovery replay.  A crash between apply and log
+loses only an unacked op -- the recovered state is exactly the acked
+history.
+
+``DurableIndex`` follows the repo's immutable-index idiom (every mutator
+returns a new wrapper sharing the store), and carries ``translog_seq`` --
+the seqno of the last op folded into this state.  That attribute is the
+*commit metadata* that rides through ``BatchedSearchEngine.swap_index``:
+the maintenance daemon's compact-and-CAS produces a new wrapper whose
+``translog_seq`` still names the exact translog position its state
+covers, so the daemon can roll a commit point for the swapped index
+without any engine-level bookkeeping -- a racing ingest simply produces
+a later state with a later seqno, and whichever (state, seq) pair wins
+the CAS is the consistent pair that gets committed.
+
+``compact()`` intentionally does NOT log: compaction changes no acked
+content (ids and df are preserved), so recovery replaying the same ops
+over the pre-compact commit reaches the same search state.  Commit right
+after compaction (the daemon does) to re-anchor recovery on the compact
+form and let the replayed translog trim.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Optional, Tuple
+
+import numpy as np
+from jax.sharding import Mesh
+
+from .recovery import recover
+from .snapshot import latest_commit, write_commit
+from .translog import Translog
+
+__all__ = ["Store", "DurableIndex"]
+
+
+class Store:
+    """One durability directory: translog writer + commit points.
+
+    ``commit`` and ``recover``/``recover_index`` serialize on an internal
+    lock: a commit's translog trim unlinks generation files, which must
+    never race a recovery scan that just listed them (the maintenance
+    daemon commits from its own thread while ``ClusterEngine.
+    restore_group`` recovers under the cluster's control-plane lock --
+    two locks, one store, hence the store owns the mutual exclusion).
+    """
+
+    def __init__(self, path: str, durability: str = "request"):
+        os.makedirs(path, exist_ok=True)
+        self.path = path
+        self.translog = Translog(path, durability=durability)
+        self._lock = threading.Lock()
+
+    @property
+    def seqno(self) -> int:
+        return self.translog.seqno
+
+    @property
+    def durability(self) -> str:
+        return self.translog.durability
+
+    def commit(self, index, seq: Optional[int] = None) -> int:
+        """Write a commit point for ``index`` (covering ``seq``, default
+        the index's own ``translog_seq``), then roll the translog onto a
+        fresh generation and trim generations the commit covers."""
+        if seq is None:
+            seq = getattr(index, "translog_seq", None)
+            if seq is None:
+                raise ValueError(
+                    "index carries no translog_seq; pass seq= explicitly")
+        with self._lock:
+            # seq-only lookup: no point CRC-validating the fallback's data
+            # here -- a corrupt fallback only makes the trim retain more
+            prev = latest_commit(self.path, validate=False)
+            gen = write_commit(self.path, index, seq)
+            self.translog.roll()
+            # retain translog back to the FALLBACK commit (the previous
+            # one): if this commit's data file tears later, recovery falls
+            # back to `prev` and still needs the ops between the two
+            # commit points
+            self.translog.trim(prev.seq if prev is not None else 0)
+        return gen
+
+    def has_commit(self) -> bool:
+        # existence check only -- no point streaming a full-corpus CRC
+        return latest_commit(self.path, validate=False) is not None
+
+    def recover_index(self, mesh: Mesh):
+        """Crash-recover onto ``mesh`` -> (raw index, seqno), serialized
+        against concurrent commits (whose translog trim would otherwise
+        unlink generation files out from under the replay scan)."""
+        with self._lock:
+            return recover(self.path, mesh)
+
+    def recover(self, mesh: Mesh) -> "Tuple[DurableIndex, int]":
+        """Crash-recover onto ``mesh`` -> (write-through wrapped index,
+        seqno).  The wrapper's ``translog_seq`` resumes at the recovered
+        position, so the next ingest logs at the right offset."""
+        index, seq = self.recover_index(mesh)
+        return DurableIndex(index, self, seq=seq), seq
+
+    def open_index(self, index, *, allow_existing: bool = False,
+                   ) -> "DurableIndex":
+        """Wrap a freshly built ``index`` for serving through this store
+        and write its baseline commit point (a translog is only
+        replayable on top of a commit).
+
+        A store that ALREADY holds history refuses (``ValueError``):
+        silently pairing a new index with an old commit would make every
+        later recovery/restore_group replay a different corpus than the
+        one being served.  Restarting on existing state is
+        :meth:`recover`'s job -- its result is already wrapped and needs
+        no ``open_index``.  ``allow_existing=True`` opts out for callers
+        that KNOW the index equals the stored state (a fresh baseline
+        commit is then written on top, which is always consistent)."""
+        if not allow_existing and (self.has_commit() or self.seqno):
+            raise ValueError(
+                f"store {self.path!r} already holds history (commit or "
+                "translog ops); recover(mesh) instead of open_index, or "
+                "pass allow_existing=True if this index provably equals "
+                "the stored state")
+        wrapped = DurableIndex(index, self, seq=self.seqno)
+        self.commit(wrapped)
+        return wrapped
+
+    def close(self) -> None:
+        self.translog.close()
+
+
+class DurableIndex:
+    """Write-through wrapper: translog first, memory second.
+
+    Transparent for reads (attribute access proxies to the wrapped index,
+    so engines/benches/daemons see ``search``/``n_ids``/
+    ``tombstone_ratio``/... unchanged); the three mutators return a new
+    wrapper sharing the store, with ``translog_seq`` advanced past the
+    logged op.
+    """
+
+    def __init__(self, inner, store: Store, seq: Optional[int] = None):
+        self.inner = inner
+        self.store = store
+        self.translog_seq = store.seqno if seq is None else seq
+
+    def add_documents(self, vectors) -> "DurableIndex":
+        # apply first (validation lives there), then log the exact float32
+        # array that was applied -- replay re-runs the identical
+        # normalize/encode for bit-exact recovery, and an op that raised
+        # is never logged (it must not resurface at recovery)
+        v = np.asarray(vectors, np.float32)
+        new = self.inner.add_documents(v)
+        seq = self.store.translog.add(v)
+        return DurableIndex(new, self.store, seq)
+
+    def delete(self, ids) -> "DurableIndex":
+        arr = np.atleast_1d(np.asarray(ids, np.int64))
+        new = self.inner.delete(arr)
+        seq = self.store.translog.delete(arr)
+        return DurableIndex(new, self.store, seq)
+
+    def compact(self) -> "DurableIndex":
+        # not logged: content-preserving (see module docstring)
+        return DurableIndex(self.inner.compact(), self.store,
+                            self.translog_seq)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"DurableIndex(seq={self.translog_seq}, "
+                f"store={self.store.path!r}, inner={self.inner!r})")

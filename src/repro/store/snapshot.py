@@ -1,0 +1,352 @@
+"""Commit points: immutable on-disk snapshots of the sharded index.
+
+The Lucene side of durability.  A *commit point* is what ES calls the
+``segments_N`` file a Lucene commit writes: an immutable, checksummed
+snapshot of every live segment plus a generation-numbered manifest whose
+atomic rename IS the commit -- a crash mid-write leaves no manifest, so
+the previous commit point stays authoritative and recovery never sees a
+half-written index.  Here:
+
+* ``segments-<gen>.npz`` -- the index state in *canonical flat form*
+  (base vectors/codes/live over ``[0, n_docs)`` in global-id order, and
+  the append segments flattened to append order), NOT the per-device
+  leaves.  The flat form is mesh-shape-free, which is what lets
+  :func:`restore` rebuild the index on a mesh with a different shard or
+  replica count than the writer's (ES snapshot/restore into a differently
+  sized cluster).  Written to a temp file, fsync'd, then renamed.
+* ``commit-<gen>.json`` -- the manifest: translog seqno the snapshot
+  covers, geometry, encoder parameters, a crc32 of the data file.
+  Written last via fsync'd temp file + ``os.replace`` (the atomic
+  rename); :func:`latest_commit` walks generations newest-first and
+  returns the first one whose manifest AND data checksum verify, so a
+  corrupt newest commit falls back to the previous one instead of
+  failing recovery.
+
+:func:`restore` rebuilds a device-resident :class:`ShardedVectorIndex`:
+
+* the flat arrays are padded/partitioned for the TARGET mesh geometry
+  entirely in host numpy and placed with ONE ``device_put`` per leaf --
+  **scatter-free by construction**.  This matters on a ``(data,
+  replica)`` mesh: building a device table with scatter (``.at[].set``)
+  from replica-replicated operands makes GSPMD reassemble the scatter
+  with a cross-replica sum that double-counts rows (the
+  ``_merge_select_seg`` gotcha, see ROADMAP) -- host-side assembly +
+  device_put has no device scatter to mis-partition, on any mesh shape.
+* per-shard posting lists are rebuilt with the same one-program SPMD
+  argsort (``_postings_program``) that ``build``/``delete`` use, so the
+  restored postings are bit-identical to the live index's on the same
+  mesh shape -- and searches are bit-identical on ANY mesh shape at
+  ``page >= n_docs`` (the repo-wide mesh-parity invariant).
+* append segments re-place by the same round-robin routing formula
+  ingest used (slot ``j // S`` of shard ``j % S`` for the ``j``-th doc
+  appended since the last compaction) -- deterministic routing is what
+  makes the flat form sufficient.
+
+``shard_tombstones`` is exact on a same-shard-count restore; restoring to
+a different shard count redistributes the writer's TOTAL round-robin
+(per-shard deletion history is advisory maintenance pressure, not search
+state -- the live masks and sentinel codes in the snapshot are the search
+truth and restore exactly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import re
+import zlib
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.encoding import (CombinedEncoder, Encoder, IntervalEncoder,
+                                 RoundingEncoder)
+from repro.core.search import _SENTINEL
+from repro.dist.shard_index import (ShardedVectorIndex, _postings_program,
+                                    _put, _ROW, _VEC)
+from repro.dist.sharding import DATA_AXIS
+
+__all__ = ["CommitPoint", "write_commit", "latest_commit", "restore",
+           "encoder_meta", "encoder_from_meta"]
+
+_FORMAT_VERSION = 1
+_MANIFEST_RE = re.compile(r"^commit-(\d{8})\.json$")
+
+
+# --------------------------------------------------------- encoder (de)ser
+def encoder_meta(enc: Encoder) -> dict:
+    if isinstance(enc, RoundingEncoder):
+        return {"type": "rounding", "precision": enc.precision}
+    if isinstance(enc, IntervalEncoder):
+        return {"type": "interval", "width": enc.width}
+    if isinstance(enc, CombinedEncoder):
+        return {"type": "combined", "rounding": encoder_meta(enc.rounding),
+                "interval": encoder_meta(enc.interval)}
+    raise TypeError(f"cannot serialize encoder {type(enc).__name__}")
+
+
+def encoder_from_meta(meta: dict) -> Encoder:
+    kind = meta.get("type")
+    if kind == "rounding":
+        return RoundingEncoder(int(meta["precision"]))
+    if kind == "interval":
+        return IntervalEncoder(float(meta["width"]))
+    if kind == "combined":
+        return CombinedEncoder(encoder_from_meta(meta["rounding"]),
+                               encoder_from_meta(meta["interval"]))
+    raise ValueError(f"unknown encoder meta {meta!r}")
+
+
+# ------------------------------------------------------------ fs plumbing
+from .translog import _fsync_dir  # noqa: E402 - one dirent-durability impl
+
+
+def _write_atomic(path: str, data: bytes) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(path))
+
+
+def _crc32_file(path: str, chunk: int = 1 << 20) -> int:
+    """Streaming crc32 -- the snapshot can be the whole corpus, so never
+    pull it into memory just to checksum it."""
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(chunk)
+            if not block:
+                return crc
+            crc = zlib.crc32(block, crc)
+
+
+def _manifest_path(store_dir: str, gen: int) -> str:
+    return os.path.join(store_dir, f"commit-{gen:08d}.json")
+
+
+def _data_name(gen: int) -> str:
+    return f"segments-{gen:08d}.npz"
+
+
+def _list_commits(store_dir: str):
+    gens = []
+    for name in os.listdir(store_dir):
+        m = _MANIFEST_RE.match(name)
+        if m:
+            gens.append(int(m.group(1)))
+    return sorted(gens)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommitPoint:
+    """One verified commit: manifest dict + the path of its data file."""
+
+    generation: int
+    seq: int
+    meta: dict
+    data_path: str
+
+
+# ----------------------------------------------------------------- commit
+def write_commit(store_dir: str, index: ShardedVectorIndex, seq: int) -> int:
+    """Snapshot ``index`` as the next commit generation covering translog
+    seqno ``seq``; returns the generation number.
+
+    The data file lands (fsync'd) before the manifest, and the manifest
+    rename is the commit -- interrupted writes are invisible to
+    :func:`latest_commit`.  The snapshot stores canonical flat arrays
+    (see module docstring), so any live index whose search state is equal
+    produces an equal snapshot regardless of its mesh shape.
+    """
+    os.makedirs(store_dir, exist_ok=True)
+    ns, dp = index.n_shards, index.docs_per_shard
+    nf, n_docs = index.n_features, index.n_docs
+    n_app = index.n_appended
+    arrays = {
+        "base_vectors": np.asarray(index.vectors).reshape(ns * dp, nf)
+        [:n_docs],
+        "base_codes": np.asarray(index.codes).reshape(
+            ns * dp, -1)[:n_docs],
+        "base_live": np.asarray(index.live).reshape(ns * dp)[:n_docs],
+    }
+    if n_app:
+        j = np.arange(n_app)
+        s, g = j % ns, j // ns
+        sg = np.asarray(index.seg_gids)
+        if not np.array_equal(sg[s, g], n_docs + j):
+            raise ValueError(
+                "segment gids violate round-robin routing -- refusing to "
+                "write a snapshot that would not restore bit-identically")
+        arrays["seg_vectors"] = np.asarray(index.seg_vectors)[s, g]
+        arrays["seg_codes"] = np.asarray(index.seg_codes)[s, g]
+        arrays["seg_live"] = np.asarray(index.seg_live)[s, g]
+
+    gens = _list_commits(store_dir)
+    gen = (gens[-1] + 1) if gens else 1
+    data_path = os.path.join(store_dir, _data_name(gen))
+    tmp = data_path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, data_path)
+    _fsync_dir(store_dir)
+
+    # one sequential re-read of the bytes just written (page-cache hot);
+    # checksumming DURING the write does not compose with np.savez --
+    # zipfile seeks back to patch member headers on seekable files, which
+    # invalidates any crc accumulated over the write stream
+    crc = _crc32_file(data_path)
+    manifest = {
+        "format_version": _FORMAT_VERSION,
+        "generation": gen,
+        "seq": int(seq),
+        "n_docs": n_docs,
+        "n_appended": n_app,
+        "n_features": nf,
+        "code_columns": int(index.codes.shape[-1]),
+        "writer_shards": ns,
+        "seg_capacity": index.seg_capacity,
+        "shard_tombstones": [int(t) for t in (index.shard_tombstones
+                                              or (0,) * ns)],
+        "index_best": index.index_best,
+        "encoder": encoder_meta(index.encoder),
+        "data_file": _data_name(gen),
+        "data_crc32": crc,
+    }
+    _write_atomic(_manifest_path(store_dir, gen),
+                  json.dumps(manifest, indent=1).encode())
+    # deletion policy: keep this commit plus one fallback (the ES default
+    # keeps only the latest; we keep two so a torn newest data file can
+    # still recover), prune older generations
+    for old in _list_commits(store_dir)[:-2]:
+        for path in (_manifest_path(store_dir, old),
+                     os.path.join(store_dir, _data_name(old))):
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+    return gen
+
+
+def latest_commit(store_dir: str, *,
+                  validate: bool = True) -> Optional[CommitPoint]:
+    """Newest commit whose manifest parses AND (with ``validate``, the
+    default) whose data file matches its checksum; earlier generations
+    are the fallback (ES keeps the previous ``segments_N`` for exactly
+    this reason).  None if no valid commit.  ``validate=False`` skips the
+    streaming data-file CRC -- for seq-only lookups (e.g. the commit
+    retention bookkeeping) where a full-corpus read per call would be
+    pure waste."""
+    if not os.path.isdir(store_dir):
+        return None
+    for gen in reversed(_list_commits(store_dir)):
+        try:
+            with open(_manifest_path(store_dir, gen)) as f:
+                meta = json.load(f)
+            data_path = os.path.join(store_dir, meta["data_file"])
+            if validate and _crc32_file(data_path) != meta["data_crc32"]:
+                continue
+            if not validate and not os.path.exists(data_path):
+                continue
+        except (OSError, ValueError, KeyError):
+            continue
+        return CommitPoint(generation=gen, seq=int(meta["seq"]), meta=meta,
+                           data_path=data_path)
+    return None
+
+
+# ---------------------------------------------------------------- restore
+def restore(commit: CommitPoint, mesh: Mesh) -> ShardedVectorIndex:
+    """Rebuild a device-resident index from ``commit`` on ``mesh``.
+
+    The target mesh may have a different shard/replica count than the
+    writer's: leaves are re-partitioned host-side from the canonical flat
+    arrays and placed with one ``device_put`` each (scatter-free -- see
+    module docstring for the replica-mesh GSPMD gotcha), and postings are
+    rebuilt by the same SPMD argsort the live build uses.  On the
+    writer's own mesh shape every leaf is bit-identical to the index that
+    was committed; on any shape, search results match at
+    ``page >= n_docs``.
+    """
+    meta = commit.meta
+    with np.load(commit.data_path) as z:
+        base_vectors = z["base_vectors"]
+        base_codes = z["base_codes"]
+        base_live = z["base_live"]
+        seg = "seg_vectors" in z.files
+        if seg:
+            seg_vectors, seg_codes = z["seg_vectors"], z["seg_codes"]
+            seg_live = z["seg_live"]
+
+    n_docs, n_app = int(meta["n_docs"]), int(meta["n_appended"])
+    nf, C = int(meta["n_features"]), int(meta["code_columns"])
+    encoder = encoder_from_meta(meta["encoder"])
+    sentinel = _SENTINEL[jnp.dtype(base_codes.dtype)]
+    ns, dp, pad = ShardedVectorIndex._partition_geometry(mesh, n_docs)
+
+    vec = np.zeros((ns * dp, nf), np.float32)
+    vec[:n_docs] = base_vectors
+    codes = np.full((ns * dp, C), sentinel, base_codes.dtype)
+    codes[:n_docs] = base_codes
+    live = np.zeros((ns * dp,), bool)
+    live[:n_docs] = base_live
+
+    vectors = _put(mesh, vec.reshape(ns, dp, nf), _ROW)
+    codes = _put(mesh, codes.reshape(ns, dp, C), _ROW)
+    live = _put(mesh, live.reshape(ns, dp), _VEC)
+    pdocs, pcodes = _postings_program(codes, mesh=mesh)
+
+    if n_app and ns == int(meta["writer_shards"]):
+        cap = int(meta["seg_capacity"])     # leaf-level bit-identity
+    elif n_app:
+        # a fresh geometric ladder, as one add_documents from empty would
+        # allocate; spare slots are sentinel-coded and invisible
+        cap = max(math.ceil(n_app / ns), 8)
+    else:
+        cap = 0
+    sv = np.zeros((ns, cap, nf), np.float32)
+    sc = np.full((ns, cap, C), sentinel, base_codes.dtype)
+    sg = np.full((ns, cap), -1, np.int32)
+    sl = np.zeros((ns, cap), bool)
+    if n_app:
+        j = np.arange(n_app)
+        s, g = j % ns, j // ns
+        sv[s, g] = seg_vectors
+        sc[s, g] = seg_codes
+        sg[s, g] = (n_docs + j).astype(np.int32)
+        sl[s, g] = seg_live
+
+    stones = [int(t) for t in meta["shard_tombstones"]]
+    if ns != int(meta["writer_shards"]):
+        total = sum(stones)                 # advisory: exact total, even
+        stones = [total // ns + (i < total % ns) for i in range(ns)]
+    if not any(stones):
+        stones = []                         # the fresh-index spelling
+
+    return ShardedVectorIndex(
+        vectors=vectors,
+        codes=codes,
+        post_docs=pdocs,
+        post_codes=pcodes,
+        offsets=_put(mesh, ShardedVectorIndex._offsets(ns, dp),
+                     P(DATA_AXIS)),
+        live=live,
+        seg_vectors=_put(mesh, sv, _ROW),
+        seg_codes=_put(mesh, sc, _ROW),
+        seg_gids=_put(mesh, sg, _VEC),
+        seg_live=_put(mesh, sl, _VEC),
+        encoder=encoder,
+        mesh=mesh,
+        n_docs=n_docs,
+        index_best=meta["index_best"],
+        n_appended=n_app,
+        shard_tombstones=tuple(stones),
+    )
