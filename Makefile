@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke-shard smoke-replica smoke-build smoke-cluster smoke-store bench bench-full
+.PHONY: test smoke-shard smoke-replica smoke-build smoke-cluster smoke-store smoke-obs bench bench-full
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -55,6 +55,21 @@ smoke-store:
 	  --shards 4 --ingest 200 --store artifacts/store_smoke \
 	  --kill-and-recover
 	rm -rf artifacts/store_smoke
+
+# observability smoke under 4 virtual devices (2 doc-shards x 2 replica
+# groups): --stats-interval prints periodic _cat-style stats lines and a
+# final stats + trace dump, and the launcher asserts the reconciliation
+# contract -- submitted == completed == queries issued == sum of per-group
+# completions.  The second run injects a group failure and additionally
+# asserts exactly ONE health down transition (the one failover event) with
+# at least one failover resubmit.
+smoke-obs:
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" $(PY) -m \
+	  repro.launch.serve --docs 2000 --features 32 --queries 32 \
+	  --shards 2 --replicas 2 --cluster --stats-interval 0.5
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" $(PY) -m \
+	  repro.launch.serve --docs 2000 --features 32 --queries 32 \
+	  --shards 2 --replicas 2 --cluster --fail-shard 0 --stats-interval 0.5
 
 bench:
 	$(PY) -m benchmarks.run

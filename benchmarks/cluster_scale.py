@@ -75,13 +75,24 @@ import numpy as np
 
 def _drive(cluster, queries, n_streams, timeout=300.0):
     """N client threads, each a pinned stream of queries -> (wall_s, results
-    keyed (stream, i))."""
+    keyed (stream, i), per-query latencies).  Latency is submit-to-done per
+    future (a done-callback stamps the clock in the completing worker), so
+    it includes queue wait under real contention -- the same quantity the
+    engine's queue-wait + dispatch histograms decompose."""
     results = {}
+    latencies = []
     errors = []
 
     def client(sid):
         try:
-            futs = [cluster.submit(q, stream=sid) for q in queries]
+            futs = []
+            for q in queries:
+                t_sub = time.perf_counter()
+                f = cluster.submit(q, stream=sid)
+                f.add_done_callback(
+                    lambda _f, t_sub=t_sub: latencies.append(
+                        time.perf_counter() - t_sub))
+                futs.append(f)
             for i, f in enumerate(futs):
                 results[(sid, i)] = f.result(timeout=timeout)
         except Exception as exc:  # noqa: BLE001 - surfaced to the caller
@@ -97,7 +108,13 @@ def _drive(cluster, queries, n_streams, timeout=300.0):
     wall = time.perf_counter() - t0
     if errors:
         raise errors[0]
-    return wall, results
+    # done-callbacks run in the completing worker AFTER result() unblocks;
+    # settle so the sample set is complete before percentiles are taken
+    deadline = time.perf_counter() + 5.0
+    while (len(latencies) < n_streams * len(queries)
+           and time.perf_counter() < deadline):
+        time.sleep(0.001)
+    return wall, results, latencies
 
 
 def run(cells, stream_counts=(1, 4), n_docs=20000, n_features=64,
@@ -147,12 +164,15 @@ def run(cells, stream_counts=(1, 4), n_docs=20000, n_features=64,
                 for n_streams in stream_counts:
                     _drive(cluster, queries[: min(4, n_queries)],
                            n_streams)                 # compile + warm
-                    best, res = np.inf, None
+                    best, res, lat = np.inf, None, []
                     for _ in range(repeats):
-                        wall, got = _drive(cluster, queries, n_streams)
+                        wall, got, lats = _drive(cluster, queries, n_streams)
                         if wall < best:
-                            best, res = wall, got
+                            best, res, lat = wall, got, lats
                     total_q = n_streams * n_queries
+                    from benchmarks.common import latency_percentiles
+
+                    tails = latency_percentiles(lat)
                     ids = jnp.asarray(
                         np.stack([res[(0, i)][0] for i in range(n_queries)]))
                     p10 = float(np.asarray(
@@ -174,6 +194,7 @@ def run(cells, stream_counts=(1, 4), n_docs=20000, n_features=64,
                         "n_streams": n_streams,
                         "qps": total_q / best,
                         "per_query_s": best / total_q,
+                        "latency": tails,
                         "p10": p10,
                         "engine": engine,
                         "batch_size": batch_size,
@@ -184,7 +205,9 @@ def run(cells, stream_counts=(1, 4), n_docs=20000, n_features=64,
                     print(f"cluster_scale,shards={s}x{r},"
                           f"{best / total_q * 1e6:.0f},"
                           f"scenario={scenario};streams={n_streams};"
-                          f"qps={total_q / best:.1f};p10={p10:.4f}")
+                          f"qps={total_q / best:.1f};p10={p10:.4f};"
+                          f"p50_ms={tails['p50_ms']:.2f};"
+                          f"p99_ms={tails['p99_ms']:.2f}")
                 if down is not None:
                     cluster.mark_up(down)
         finally:

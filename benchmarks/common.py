@@ -75,6 +75,25 @@ def fixture(**kw) -> Fixture:
     return _FIXTURE
 
 
+def latency_percentiles(samples_s, keep_samples=False):
+    """Per-query (or per-op) latency samples in seconds -> the tail block
+    every BENCH_*.json row carries alongside its QPS keys: sample count +
+    p50/p90/p99 in milliseconds (np.percentile, linear interpolation).
+    ``keep_samples=True`` additionally embeds the raw samples (ms, in
+    measurement order) for offline re-bucketing."""
+    samples = np.asarray(list(samples_s), np.float64)
+    out = {"n_samples": int(samples.size)}
+    if samples.size == 0:
+        out.update(p50_ms=None, p90_ms=None, p99_ms=None)
+        return out
+    p50, p90, p99 = np.percentile(samples, [50, 90, 99])
+    out.update(p50_ms=float(p50 * 1e3), p90_ms=float(p90 * 1e3),
+               p99_ms=float(p99 * 1e3))
+    if keep_samples:
+        out["samples_ms"] = [float(s * 1e3) for s in samples]
+    return out
+
+
 def timed(fn, *args, repeats=3, **kw):
     """-> (result, best seconds) with block_until_ready."""
     import jax

@@ -111,12 +111,27 @@ def run(cells, merges=("gather", "stream"), n_docs=20000, n_features=64,
                 jax.block_until_ready((ids, _scores))
                 best = min(best, time.perf_counter() - t0)
             p10 = float(np.asarray(precision_at_k(ids, gold_ids)).mean())
+            # per-query tails from batch-1 singles (benchmarks/shard_scale.py
+            # rationale: batched timing is throughput, singles are latency)
+            from benchmarks.common import latency_percentiles
+
+            single = lambda q: sidx.search(jnp.asarray(q[None]), k=10,
+                                           page=page, engine=engine,
+                                           merge=merge)
+            jax.block_until_ready(single(queries[0]))         # batch-1 compile
+            lat = []
+            for q in queries:
+                t0 = time.perf_counter()
+                jax.block_until_ready(single(q))
+                lat.append(time.perf_counter() - t0)
+            tails = latency_percentiles(lat)
             rows.append({
                 "shards": s,
                 "replicas": r,
                 "merge": merge,
                 "qps": n_queries / best,
                 "per_query_s": best / n_queries,
+                "latency": tails,
                 "p10": p10,
                 "engine": engine,
                 "n_docs": n_docs,
@@ -125,7 +140,8 @@ def run(cells, merges=("gather", "stream"), n_docs=20000, n_features=64,
             })
             print(f"replica_scale,shards={s}x{r},"
                   f"{best / n_queries * 1e6:.0f},"
-                  f"merge={merge};qps={n_queries / best:.1f};p10={p10:.4f}")
+                  f"merge={merge};qps={n_queries / best:.1f};p10={p10:.4f};"
+                  f"p50_ms={tails['p50_ms']:.2f};p99_ms={tails['p99_ms']:.2f}")
     return rows
 
 

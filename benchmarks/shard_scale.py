@@ -98,10 +98,25 @@ def run(shard_counts, n_docs=20000, n_features=64, n_queries=64, page=320,
             jax.block_until_ready((ids, _scores))
             best = min(best, time.perf_counter() - t0)
         p10 = float(np.asarray(precision_at_k(ids, gold_ids)).mean())
+        # per-query latency tails: the batched timing above is throughput;
+        # singles (batch-1 searches, their own compile warmed first) give
+        # the per-query distribution the stats layer reports at runtime
+        from benchmarks.common import latency_percentiles
+
+        single = lambda q: idx.search(jnp.asarray(q[None]), k=10, page=page,
+                                      engine=engine)
+        jax.block_until_ready(single(queries[0]))             # batch-1 compile
+        lat = []
+        for q in queries:
+            t0 = time.perf_counter()
+            jax.block_until_ready(single(q))
+            lat.append(time.perf_counter() - t0)
+        tails = latency_percentiles(lat)
         rows.append({
             "shards": s,
             "qps": n_queries / best,
             "per_query_s": best / n_queries,
+            "latency": tails,
             "p10": p10,
             "engine": engine,
             "n_docs": n_docs,
@@ -109,7 +124,8 @@ def run(shard_counts, n_docs=20000, n_features=64, n_queries=64, page=320,
             "page": page,
         })
         print(f"shard_scale,shards={s},{best / n_queries * 1e6:.0f},"
-              f"qps={n_queries / best:.1f};p10={p10:.4f}")
+              f"qps={n_queries / best:.1f};p10={p10:.4f};"
+              f"p50_ms={tails['p50_ms']:.2f};p99_ms={tails['p99_ms']:.2f}")
     return rows
 
 

@@ -99,7 +99,7 @@ def run(shard_counts, n_docs=20000, n_features=64, ingest_batch=64,
 
         # ---- ingest throughput vs durability policy ------------------
         for policy in ("none", "async", "request"):
-            best = np.inf
+            best, best_lat = np.inf, []
             for _ in range(repeats):
                 tmp = tempfile.mkdtemp(prefix="bench_store_")
                 try:
@@ -109,26 +109,38 @@ def run(shard_counts, n_docs=20000, n_features=64, ingest_batch=64,
                         store = Store(tmp, durability=policy)
                         idx = store.open_index(base)
                     idx.add_documents(batches[0])       # compile warm-up
+                    # per-op wall = the ack latency an ingest client sees
+                    # (durability=request pays its fsync INSIDE this window)
+                    lats = []
                     t0 = time.perf_counter()
                     run_idx = idx
                     for b in batches:
+                        t1 = time.perf_counter()
                         run_idx = run_idx.add_documents(b)
+                        lats.append(time.perf_counter() - t1)
                     jax.block_until_ready(run_idx.seg_vectors)
-                    best = min(best, time.perf_counter() - t0)
+                    wall = time.perf_counter() - t0
+                    if wall < best:
+                        best, best_lat = wall, lats
                     if policy != "none":
                         store.close()
                 finally:
                     shutil.rmtree(tmp, ignore_errors=True)
             total = n_batches * ingest_batch
+            from benchmarks.common import latency_percentiles
+
+            tails = latency_percentiles(best_lat)
             rows.append({
                 "mode": "ingest", "shards": s, "durability": policy,
-                "docs_per_s": total / best, "ingest_batch": ingest_batch,
+                "docs_per_s": total / best, "latency": tails,
+                "ingest_batch": ingest_batch,
                 "n_batches": n_batches, "n_docs": n_docs,
                 "n_features": n_features,
             })
             print(f"store_scale,shards={s},{best / total * 1e6:.0f},"
                   f"mode=ingest;durability={policy};"
-                  f"docs_per_s={total / best:.0f}")
+                  f"docs_per_s={total / best:.0f};"
+                  f"p50_ms={tails['p50_ms']:.2f};p99_ms={tails['p99_ms']:.2f}")
 
         # ---- recovery time vs translog length ------------------------
         tmp = tempfile.mkdtemp(prefix="bench_store_")
@@ -139,16 +151,20 @@ def run(shard_counts, n_docs=20000, n_features=64, ingest_batch=64,
                 if n_ops:
                     idx = idx.add_documents(batches[n_ops - 1])
                     store.translog.sync()
-                best = np.inf
+                best, samples = np.inf, []
                 for _ in range(repeats):
                     t0 = time.perf_counter()
                     rec, seq = recover(tmp, make_shard_mesh(s))
                     jax.block_until_ready(rec.vectors)
-                    best = min(best, time.perf_counter() - t0)
+                    samples.append(time.perf_counter() - t0)
+                    best = min(best, samples[-1])
                 assert seq == n_ops and rec.n_ids == idx.n_ids
+                from benchmarks.common import latency_percentiles
                 rows.append({
                     "mode": "recover", "shards": s, "translog_ops": n_ops,
-                    "recover_s": best, "n_ids": int(idx.n_ids),
+                    "recover_s": best,
+                    "latency": latency_percentiles(samples),
+                    "n_ids": int(idx.n_ids),
                     "n_docs": n_docs, "n_features": n_features,
                 })
                 print(f"store_scale,shards={s},{best * 1e6:.0f},"
@@ -156,15 +172,17 @@ def run(shard_counts, n_docs=20000, n_features=64, ingest_batch=64,
                       f"recover_s={best:.4f}")
             # the commit-restore floor: fresh commit, zero replay
             store.commit(idx)
-            best = np.inf
+            best, samples = np.inf, []
             for _ in range(repeats):
                 t0 = time.perf_counter()
                 rec, _ = recover(tmp, make_shard_mesh(s))
                 jax.block_until_ready(rec.vectors)
-                best = min(best, time.perf_counter() - t0)
+                samples.append(time.perf_counter() - t0)
+                best = min(best, samples[-1])
             rows.append({
                 "mode": "recover", "shards": s, "translog_ops": 0,
                 "post_commit": True, "recover_s": best,
+                "latency": latency_percentiles(samples),
                 "n_ids": int(idx.n_ids), "n_docs": n_docs,
                 "n_features": n_features,
             })

@@ -24,6 +24,12 @@ canaries look, until an explicit ``mark_up``.  ``mark_up`` clears both.
 
 Thread-safe; every mutation bumps ``generation`` (ES cluster-state
 version) so pollers can cheaply detect change.
+
+Health *transitions* are the cluster's availability ledger, so they are
+metered (:mod:`repro.obs.metrics`): ``health.down_transitions`` /
+``health.mark_ups`` / ``health.readmits`` count per-group state CHANGES
+(a re-mark of an already-down group counts nothing), which is what lets
+the stats layer assert "one injected failure == one down/readmit pair".
 """
 
 from __future__ import annotations
@@ -31,14 +37,17 @@ from __future__ import annotations
 import threading
 from typing import Tuple
 
+from repro.obs.metrics import default_registry
+
 __all__ = ["HealthMap"]
 
 
 class HealthMap:
-    def __init__(self, n_groups: int):
+    def __init__(self, n_groups: int, metrics=None):
         if n_groups < 1:
             raise ValueError(f"need at least one replica group, got {n_groups}")
         self.n_groups = n_groups
+        self.metrics = metrics if metrics is not None else default_registry()
         self._down: set = set()
         self._drained: set = set()
         self._lock = threading.Lock()
@@ -59,15 +68,18 @@ class HealthMap:
         self._check(group)
         with self._lock:
             changed = False
+            went_down = False
             if drain and group not in self._drained:
                 self._drained.add(group)
                 changed = True
             if group not in self._down:
                 self._down.add(group)
-                changed = True
+                changed = went_down = True
             if changed:
                 self._generation += 1
-            return changed
+        if went_down:
+            self.metrics.counter("health.down_transitions", group=group).inc()
+        return changed
 
     def mark_up(self, group: int) -> bool:
         """Restore routing to ``group``, clearing any drain intent (this
@@ -78,10 +90,11 @@ class HealthMap:
             if group in self._drained or group in self._down:
                 self._generation += 1
             self._drained.discard(group)
-            if group not in self._down:
-                return False
+            came_up = group in self._down
             self._down.discard(group)
-            return True
+        if came_up:
+            self.metrics.counter("health.mark_ups", group=group).inc()
+        return came_up
 
     def readmit(self, group: int) -> bool:
         """``mark_up`` UNLESS an operator drain is in force -- atomic, so
@@ -94,7 +107,8 @@ class HealthMap:
                 return False
             self._down.discard(group)
             self._generation += 1
-            return True
+        self.metrics.counter("health.readmits", group=group).inc()
+        return True
 
     def is_drained(self, group: int) -> bool:
         """True while an operator drain (``mark_down(g, drain=True)``)

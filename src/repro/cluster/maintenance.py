@@ -59,9 +59,12 @@ and is not recorded as a failure (down is its steady state).
 from __future__ import annotations
 
 import threading
+import time
 from typing import List, Optional, Sequence
 
 import numpy as np
+
+from repro.obs.metrics import default_registry
 
 __all__ = ["MaintenanceDaemon"]
 
@@ -77,12 +80,16 @@ class MaintenanceDaemon:
         probe: bool = False,
         probe_timeout_s: float = 5.0,
         probe_interval_s: Optional[float] = None,
+        metrics=None,
     ):
         if not 0.0 < threshold:
             raise ValueError(f"threshold must be positive, got {threshold}")
         if probe and health is None:
             raise ValueError("probe=True needs a HealthMap to mark_up into")
         self._batchers = list(batchers)
+        # compaction/commit wall times feed the stats layer (the ES merge
+        # stats); timestamps are host-side around the rebuild dispatch
+        self.metrics = metrics if metrics is not None else default_registry()
         self.threshold = threshold
         self.interval_s = interval_s
         self._health = health
@@ -138,6 +145,7 @@ class MaintenanceDaemon:
                 continue    # this exact state already failed to rebuild --
                 #             don't hot-loop the failure; any ingest/delete
                 #             produces a new snapshot and re-arms the group
+            t0 = time.monotonic()
             try:
                 compacted = snapshot.compact()        # outside the lock
             except Exception as exc:  # noqa: BLE001 - recorded, not fatal
@@ -148,7 +156,9 @@ class MaintenanceDaemon:
                 self._quarantine[g] = snapshot
                 self.failures.append({"group": g, "tombstone_ratio": ratio,
                                       "error": repr(exc)})
+                self.metrics.counter("maintenance.failures", group=g).inc()
                 continue
+            duration = time.monotonic() - t0
             try:
                 swapped = batcher.swap_index(compacted, expected=snapshot)
             except RuntimeError:
@@ -160,7 +170,12 @@ class MaintenanceDaemon:
                     "group": g,
                     "tombstone_ratio": ratio,
                     "n_ids": snapshot.n_ids,
+                    "duration_s": duration,
                 })
+                self.metrics.counter("maintenance.compactions",
+                                     group=g).inc()
+                self.metrics.histogram(
+                    "maintenance.compact.duration_s").observe(duration)
                 self._commit(g, compacted)
             # CAS miss: an ingest/delete raced the rebuild -- the next
             # sweep re-evaluates the fresh index
@@ -233,11 +248,11 @@ class MaintenanceDaemon:
             if readmit(g):
                 readmitted += 1
                 self.probe_events.append({"group": g})
+                self.metrics.counter("maintenance.probe.readmits",
+                                     group=g).inc()
         return readmitted
 
     def _run(self) -> None:
-        import time
-
         tick = self.interval_s
         if self.probe:
             tick = min(tick, self.probe_interval_s)

@@ -70,6 +70,8 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core import TrimFilter
+from repro.obs.metrics import default_registry
+from repro.obs.tracing import NULL_TRACE
 from repro.serve.engine import BatchedSearchEngine
 
 from .health import HealthMap
@@ -138,6 +140,8 @@ class ClusterEngine:
         compact_interval_s: float = 0.05,
         store=None,
         probe_s: Optional[float] = None,
+        metrics=None,
+        tracer=None,
     ):
         """``index`` is a ShardedVectorIndex (its R replica groups become
         the cluster's groups) or an explicit list of group indexes (full
@@ -148,7 +152,12 @@ class ClusterEngine:
         a baseline commit is written if none exists, and
         :meth:`restore_group` re-admits downed groups from disk).
         ``probe_s`` runs the background canary prober at that interval so
-        healed groups re-admit automatically."""
+        healed groups re-admit automatically.  ``metrics``/``tracer``
+        inject the observability plane (:mod:`repro.obs`): the registry
+        is shared with every per-group batcher (series labelled
+        ``group=g``) and the health map; the tracer samples per-request
+        span traces that follow a query through routing, queue wait,
+        and dispatch, with spill / failover-resubmit events attached."""
         if isinstance(index, (list, tuple)):
             groups = list(index)
         else:
@@ -156,21 +165,37 @@ class ClusterEngine:
                       for g in range(index.n_replicas)]
         if not groups:
             raise ValueError("need at least one replica group")
+        self.metrics = metrics if metrics is not None else default_registry()
+        self.tracer = tracer
         self.store = store
         if store is not None:
             from repro.store.durable import DurableIndex
 
+            # an explicitly injected store registry wins; a store on the
+            # process default joins the cluster's registry so one
+            # stats() rollup sees everything -- joined BEFORE open_index,
+            # whose baseline commit must land in the cluster's counters
+            if store.metrics is default_registry():
+                store.metrics = self.metrics
             if not isinstance(groups[0], DurableIndex):
                 groups[0] = store.open_index(groups[0])
         self._failpoints = [_FailpointIndex(g) for g in groups]
-        self.health = HealthMap(len(groups))
+        self.health = HealthMap(len(groups), metrics=self.metrics)
         self._batchers: List[BatchedSearchEngine] = [
             BatchedSearchEngine(
                 fp, batch_size=batch_size, max_wait_s=max_wait_s, k=k,
                 page=page, trim=trim, engine=engine, merge=merge,
-                max_postings=max_postings)
-            for fp in self._failpoints
+                max_postings=max_postings, metrics=self.metrics, group=g)
+            for g, fp in enumerate(self._failpoints)
         ]
+        self._c_submitted = self.metrics.counter("cluster.requests.submitted")
+        self._c_completed = self.metrics.counter("cluster.requests.completed")
+        self._c_failed = self.metrics.counter("cluster.requests.failed")
+        self._c_spills = self.metrics.counter("cluster.routing.spills")
+        self._c_resubmits = self.metrics.counter("cluster.failover.resubmits")
+        self._c_group_completed = [
+            self.metrics.counter("cluster.requests.group_completed", group=g)
+            for g in range(len(groups))]
         self.spill_threshold = max(1, int(spill_factor * batch_size))
         # LRU-capped pin map: stream ids are caller-supplied (sessions,
         # connections), so an uncapped map is an unbounded leak in a
@@ -196,7 +221,8 @@ class ClusterEngine:
                             else probe_s),
                 probe_interval_s=probe_s,
                 health=self.health, store=store,
-                probe=probe_s is not None).start()
+                probe=probe_s is not None,
+                metrics=self.metrics).start()
 
     # ------------------------------------------------------------ topology
     @property
@@ -216,8 +242,19 @@ class ClusterEngine:
         """(pending per group) -- the router's own routing signal."""
         return tuple(b.pending for b in self._batchers)
 
+    def stats(self) -> dict:
+        """ES ``_cluster/stats`` + ``_cat/shards``-style rollup: per-group
+        batcher stats + health state, routing counters (spills, failover
+        resubmits, per-group completions -- their sum reconciles exactly
+        with queries issued), health-transition counters, and the
+        maintenance/store sections when wired (see
+        :func:`repro.obs.stats.cluster_stats`)."""
+        from repro.obs.stats import cluster_stats
+
+        return cluster_stats(self)
+
     # ------------------------------------------------------------- routing
-    def _pick(self, stream, exclude=()) -> int:
+    def _pick(self, stream, exclude=(), trace=NULL_TRACE) -> int:
         up = [g for g in self.health.up_groups() if g not in exclude]
         if not up:
             raise RuntimeError("no healthy replica group available")
@@ -233,6 +270,12 @@ class ClusterEngine:
                 self._streams.popitem(last=False)
         if pinned in up and self._batchers[pinned].pending <= self.spill_threshold:
             return pinned
+        if pinned in up and least != pinned:
+            # the pinned group is healthy but over the spill threshold:
+            # this request overflows to the least-loaded copy (adaptive
+            # replica selection) -- a routing event worth metering
+            self._c_spills.inc()
+            trace.event("spill", from_group=pinned, to_group=least)
         return least                      # spill; the pin itself persists
 
     def submit(self, query_vec: np.ndarray, stream=None) -> Future:
@@ -248,10 +291,13 @@ class ClusterEngine:
         q = np.asarray(query_vec, np.float32)
         tried: set = set()
         marked: list = []                 # groups THIS request marked down
+        trace = (self.tracer.start("query", stream=stream)
+                 if self.tracer is not None else NULL_TRACE)
+        self._c_submitted.inc()
 
         def attempt(prev_exc=None):
             try:
-                g = self._pick(stream, exclude=tried)
+                g = self._pick(stream, exclude=tried, trace=trace)
             except RuntimeError as exc:
                 if prev_exc is not None:
                     # every copy failed the SAME request: the request, not
@@ -263,26 +309,41 @@ class ClusterEngine:
                     # while this request was in flight must survive
                     for m in marked:
                         self.health.readmit(m)
+                        trace.event("rollback_readmit", group=m)
+                self._c_failed.inc()
+                err = prev_exc or exc
+                trace.finish(error=repr(err))
                 if not outer.done():
-                    outer.set_exception(prev_exc or exc)
+                    outer.set_exception(err)
                 return
             tried.add(g)
             try:
-                inner = self._batchers[g].submit(q)
+                inner = self._batchers[g].submit(q, trace=trace)
             except RuntimeError as exc:   # batcher closed under us
+                self._c_failed.inc()
+                err = prev_exc or exc
+                trace.finish(error=repr(err))
                 if not outer.done():
-                    outer.set_exception(prev_exc or exc)
+                    outer.set_exception(err)
                 return
+            if prev_exc is not None:      # this attempt IS the resubmit
+                self._c_resubmits.inc()
+                trace.event("failover_resubmit", group=g,
+                            error=repr(prev_exc))
             inner.add_done_callback(lambda f: _finish(f, g))
 
         def _finish(inner: Future, g: int):
             if outer.cancelled():
+                trace.finish(error="cancelled")
                 return
             try:
                 exc = inner.exception()
             except CancelledError as cancel:
                 exc = cancel
             if exc is None:
+                self._c_completed.inc()
+                self._c_group_completed[g].inc()
+                trace.finish()
                 if not outer.done():
                     outer.set_result(inner.result())
                 return
@@ -290,6 +351,7 @@ class ClusterEngine:
             # replay the request on the next healthy copy
             if self.health.mark_down(g):
                 marked.append(g)
+                trace.event("group_down", group=g)
             attempt(prev_exc=exc)
 
         attempt()

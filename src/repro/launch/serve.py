@@ -38,6 +38,16 @@ crash-recovers from the store directory alone (latest commit + translog
 replay, torn tails truncated), asserts the recovered index returns
 BIT-IDENTICAL search results to the pre-kill live index, and re-serves
 the query load through a fresh engine on the recovered state.
+
+Observability (:mod:`repro.obs`): ``--stats-interval S`` samples every
+request into a :class:`~repro.obs.tracing.Tracer`, prints an ES
+``_cat``-style stats line every S seconds while serving, and ends with a
+final stats + trace dump.  The run then asserts the reconciliation
+contract: submitted == completed == queries issued (== the sum of
+per-group completions under ``--cluster``), zero failures surfaced to
+callers, and -- under ``--fail-shard`` -- exactly one health down
+transition with at least one failover resubmit.  ``make smoke-obs``
+drives both the healthy and the fail-shard variant.
 """
 
 from __future__ import annotations
@@ -108,6 +118,13 @@ def main():
                     help="after serving, discard the in-memory index, "
                          "crash-recover from --store alone, and assert "
                          "bit-identical search results")
+    ap.add_argument("--stats-interval", type=float, default=None,
+                    metavar="S",
+                    help="print an ES _cat-style stats line every S seconds "
+                         "plus a final stats + trace dump; the run then "
+                         "asserts the counters reconcile exactly with the "
+                         "queries issued (and that --fail-shard recorded "
+                         "exactly one down transition)")
     args = ap.parse_args()
     if args.replicas > 1 and args.shards < 1:
         ap.error("--replicas needs --shards >= 1")
@@ -137,6 +154,8 @@ def main():
                  "apply the policy to)")
     if args.kill_and_recover and not args.store:
         ap.error("--kill-and-recover needs --store")
+    if args.stats_interval is not None and args.stats_interval <= 0:
+        ap.error("--stats-interval must be positive")
 
     print(f"building corpus ({args.docs} docs) + LSA-{args.features} ...")
     corpus = make_corpus(n_docs=args.docs, vocab_size=max(args.docs, 8000),
@@ -186,6 +205,14 @@ def main():
     common = dict(batch_size=args.batch_size, k=10, page=args.page,
                   trim=TrimFilter(args.trim) if args.trim else None,
                   engine=args.engine, merge=args.merge)
+    tracer = None
+    if args.stats_interval:
+        from repro.obs import Tracer
+
+        # sample every request: this launcher is a demo/acceptance run,
+        # not a steady-state service, so full traces beat low overhead
+        tracer = Tracer(capacity=64, sample=1.0)
+        common["tracer"] = tracer
     if args.cluster:
         from repro.cluster import ClusterEngine
 
@@ -200,6 +227,68 @@ def main():
             index = store.open_index(index)
         engine = BatchedSearchEngine(index, **common)
         submit = lambda i, q: engine.submit(q)
+
+    n_issued = 0
+    stats_stop = None
+    obs_final = lambda: None
+    if args.stats_interval:
+        import threading
+
+        from repro.obs import format_stats_line
+
+        stats_stop = threading.Event()
+        periodic = engine                 # the engine the printer follows
+
+        def _stats_loop():
+            while not stats_stop.wait(args.stats_interval):
+                try:
+                    print(format_stats_line(periodic.stats()), flush=True)
+                except Exception:  # noqa: BLE001 - engine mid-teardown
+                    return
+
+        threading.Thread(target=_stats_loop, daemon=True,
+                         name="stats-printer").start()
+        _obs_done = []
+
+        def obs_final():
+            """Stop the printer, dump final stats + traces, and assert
+            the reconciliation contract: every query issued is accounted
+            for exactly once, and an injected group failure shows up as
+            exactly one down transition (THE failover event) plus at
+            least one resubmit.  Runs once, BEFORE any kill/recover
+            teardown so it sees the engine that served the load."""
+            if _obs_done:
+                return
+            _obs_done.append(True)
+            stats_stop.set()
+            st = engine.stats()
+            print("final " + format_stats_line(st), flush=True)
+            req = st["requests"]
+            assert req["submitted"] == n_issued, (req, n_issued)
+            assert req["completed"] == n_issued, (req, n_issued)
+            assert req["failed"] == 0, req
+            if args.cluster:
+                per_group = req["group_completed"]
+                assert sum(per_group.values()) == n_issued, \
+                    (per_group, n_issued)
+                if args.fail_shard is not None:
+                    h, r = st["health"], st["routing"]
+                    assert h["down_transitions"] == 1, h
+                    assert r["failover_resubmits"] >= 1, r
+                    assert h["mark_ups"] + h["readmits"] >= 1, h
+            ts = tracer.stats()
+            print(f"traces: {ts['retained']} retained "
+                  f"({ts['sampled']}/{ts['seen']} sampled)", flush=True)
+            dump = tracer.dump()
+            if dump:
+                last = dump[-1]
+                phases = ", ".join(
+                    f"{s['name']}={s['duration_s'] * 1e3:.2f}ms"
+                    for s in last["spans"] if s["duration_s"] is not None)
+                print(f"last trace: {phases}", flush=True)
+            print("stats: counters reconcile with the "
+                  f"{n_issued} queries issued", flush=True)
+
     try:
         if args.ingest:
             t0 = time.time()
@@ -210,6 +299,7 @@ def main():
                   f"({args.ingest/dt:.0f} docs/s)")
         t0 = time.time()
         futs = [submit(i, q) for i, q in enumerate(queries)]
+        n_issued += len(futs)
         results = [f.result(timeout=120) for f in futs]
         dt = time.time() - t0
 
@@ -225,6 +315,7 @@ def main():
             engine.inject_failure(args.fail_shard)
             t0 = time.time()
             futs = [submit(i, q) for i, q in enumerate(queries)]
+            n_issued += len(futs)
             down = [f.result(timeout=120) for f in futs]
             dt = time.time() - t0
             same = all(np.array_equal(a[0], b[0])
@@ -266,6 +357,7 @@ def main():
                                             unit_vecs[qids], 10)
             gold_ref = gold_live
             futs = [submit(i, q) for i, q in enumerate(queries)]
+            n_issued += len(futs)
             ids2 = jnp.asarray(
                 np.stack([f.result(timeout=120)[0] for f in futs]))
             p10_live = float(precision_at_k(ids2, gold_live).mean())
@@ -288,6 +380,8 @@ def main():
                 jnp.asarray(queries), k=10, page=args.page, engine=args.engine)
             ref_ids, ref_scores = np.asarray(ref_ids), np.asarray(ref_scores)
             n_ids_before = live.n_ids
+            obs_final()                # before the kill: the counters and
+            #                            traces belong to the dying engine
             engine.close()
             del live, index                         # "kill": drop the RAM copy
             t0 = time.time()
@@ -317,7 +411,10 @@ def main():
             p10_rec = float(precision_at_k(ids3, gold_ref).mean())
             print(f"re-served {args.queries} queries on the recovered "
                   f"index in {dt:.2f}s (P@10 {p10_rec:.3f})")
+        obs_final()
     finally:
+        if stats_stop is not None:
+            stats_stop.set()
         engine.close()
         if store is not None:
             store.close()

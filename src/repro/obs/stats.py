@@ -1,0 +1,227 @@
+"""ES ``_stats``/``_cat``-style snapshot assembly.
+
+One function per serving layer, each returning a plain nested dict (JSON-
+ready, the shape ES returns from ``GET <index>/_stats`` / ``_cat``
+endpoints).  The layer classes expose them as methods --
+``BatchedSearchEngine.stats()``, ``ClusterEngine.stats()``,
+``Store.stats()`` -- but the assembly lives here so the serving classes
+carry no formatting code and the obs package owns the schema.
+
+What maps where:
+
+* :func:`index_stats` -- ES ``_stats/docs,segments``: doc counts,
+  append-segment occupancy, per-shard tombstones, tombstone ratio (the
+  auto-compaction trigger).
+* :func:`engine_stats` -- ES ``_cat/thread_pool`` + node stats for one
+  replica-group batcher: queue depth, in-flight, batch occupancy,
+  queue-wait and dispatch-latency histograms, request counters.
+* :func:`cluster_stats` -- the cluster-level rollup (``_cluster/stats``
+  + ``_cat/shards``): per-group engine stats + health state, routing
+  counters (spills, failover resubmits, per-group completions),
+  health-transition counters, maintenance + store sections when wired.
+* :func:`store_stats` -- ES ``_stats/translog`` + commit metadata:
+  translog seqno/generation/bytes, newest commit generation/seq,
+  commit + recovery counters and timings.
+
+Counter reconciliation is part of the schema contract (pinned by
+tests/test_obs.py and the ``make smoke-obs`` run): queries issued ==
+``cluster.requests.completed`` == sum over groups of
+``cluster.requests.group_completed``; one injected group failure ==
+one ``failover.resubmits`` increment (sequential traffic) == one
+``health.down_transitions`` + one readmit once healed.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from typing import Optional
+
+__all__ = ["index_stats", "engine_stats", "cluster_stats", "store_stats",
+           "format_stats_line"]
+
+
+def _hist(registry, name: str, **labels) -> dict:
+    return registry.histogram(name, **labels).snapshot()
+
+
+def index_stats(index) -> dict:
+    """Docs/segments section for any served index (plain VectorIndex
+    reports what it has; sharded/durable indexes report the full ES
+    segment story).  Attribute-guarded: works through _FailpointIndex
+    and DurableIndex wrappers via their attribute proxying."""
+    out = {"n_ids": int(getattr(index, "n_ids", getattr(index, "n_docs", 0)))}
+    for name in ("n_docs", "n_shards", "n_replicas", "n_appended",
+                 "seg_capacity"):
+        v = getattr(index, name, None)
+        if v is not None:
+            out[name] = int(v)
+    tombs = getattr(index, "shard_tombstones", None)
+    if tombs is not None:
+        out["shard_tombstones"] = tuple(int(t) for t in tombs)
+        out["n_tombstones"] = int(getattr(index, "n_tombstones", sum(tombs)))
+        out["tombstone_ratio"] = float(getattr(index, "tombstone_ratio", 0.0))
+    seq = getattr(index, "translog_seq", None)
+    if seq is not None:
+        out["translog_seq"] = int(seq)
+    return out
+
+
+def engine_stats(engine) -> dict:
+    """One batcher's thread-pool view: queue/in-flight depths, request
+    counters, occupancy + latency histograms, the served index's doc
+    stats."""
+    reg, labels = engine.metrics, engine._metric_labels
+    with engine._lock:
+        queue_depth = len(engine._queue)
+        inflight = engine._inflight
+        index = engine.index
+    return {
+        "queue_depth": queue_depth,
+        "in_flight": inflight,
+        "pending": queue_depth + inflight,
+        "batch_size": engine.batch_size,
+        "max_wait_s": engine.max_wait_s,
+        "requests": {
+            "submitted": reg.value("engine.requests.submitted", **labels),
+            "completed": reg.value("engine.requests.completed", **labels),
+            "failed": reg.value("engine.requests.failed", **labels),
+        },
+        "batches": _hist(reg, "engine.batch.occupancy", **labels),
+        "queue_wait_s": _hist(reg, "engine.queue.wait_s", **labels),
+        "dispatch_latency_s": _hist(reg, "engine.dispatch.latency_s",
+                                    **labels),
+        "ingest": {
+            "added_docs": reg.value("engine.ingest.added_docs", **labels),
+            "delete_ops": reg.value("engine.ingest.delete_ops", **labels),
+            "swaps": reg.value("engine.swaps", **labels),
+        },
+        "index": index_stats(index),
+    }
+
+
+def _maintenance_stats(daemon) -> dict:
+    return {
+        "compactions": daemon.compactions,
+        "commits": daemon.commits,
+        "failures": len(daemon.failures),
+        "probe_readmits": len(daemon.probe_events),
+        "compact_duration_s": _hist(daemon.metrics,
+                                    "maintenance.compact.duration_s"),
+    }
+
+
+def cluster_stats(cluster) -> dict:
+    """The cluster rollup.  ``groups`` is keyed by group id and carries
+    each batcher's engine stats plus its health state (``up`` /
+    ``down`` / ``drained`` -- ES STARTED/UNASSIGNED/excluded)."""
+    reg = cluster.metrics
+    health = cluster.health.snapshot()
+    down, drained = set(health["down"]), set(health["drained"])
+    groups = {}
+    for g, b in enumerate(cluster.batchers):
+        state = ("drained" if g in drained
+                 else "down" if g in down else "up")
+        groups[g] = {"health": state, **engine_stats(b)}
+    out = {
+        "n_groups": cluster.n_groups,
+        "groups": groups,
+        "requests": {
+            "submitted": reg.value("cluster.requests.submitted"),
+            "completed": reg.value("cluster.requests.completed"),
+            "failed": reg.value("cluster.requests.failed"),
+            "group_completed": {
+                g: reg.value("cluster.requests.group_completed", group=g)
+                for g in range(cluster.n_groups)},
+        },
+        "routing": {
+            "spills": reg.value("cluster.routing.spills"),
+            "failover_resubmits": reg.value("cluster.failover.resubmits"),
+        },
+        "health": {
+            **health,
+            "down_transitions": reg.total("health.down_transitions"),
+            "readmits": reg.total("health.readmits"),
+            "mark_ups": reg.total("health.mark_ups"),
+        },
+    }
+    if cluster.maintenance is not None:
+        out["maintenance"] = _maintenance_stats(cluster.maintenance)
+    if cluster.store is not None:
+        out["store"] = store_stats(cluster.store)
+    return out
+
+
+def store_stats(store) -> dict:
+    """Translog + commit section (ES ``_stats/translog``).  Bytes are
+    the on-disk sum over retained generation files -- what a trim
+    reclaims."""
+    from repro.store.snapshot import latest_commit
+
+    reg = store.metrics
+    tl = store.translog
+    tl_bytes = 0
+    n_gens = 0
+    try:
+        for fn in os.listdir(store.path):
+            if fn.startswith("translog-") and fn.endswith(".log"):
+                n_gens += 1
+                tl_bytes += os.path.getsize(os.path.join(store.path, fn))
+    except OSError:  # pragma: no cover - dir raced away
+        pass
+    commit = latest_commit(store.path, validate=False)
+    return {
+        "path": store.path,
+        "durability": store.durability,
+        "translog": {
+            "seqno": tl.seqno,
+            "generation": tl.generation,
+            "n_generations": n_gens,
+            "bytes": tl_bytes,
+        },
+        "commit": (None if commit is None
+                   else {"generation": commit.generation,
+                         "seq": commit.seq}),
+        "commits": reg.value("store.commits"),
+        "recoveries": reg.value("store.recoveries"),
+        "commit_duration_s": _hist(reg, "store.commit.duration_s"),
+        "recovery_duration_s": _hist(reg, "store.recovery.duration_s"),
+    }
+
+
+def _ms(v: Optional[float]) -> str:
+    if v is None or (isinstance(v, float) and math.isnan(v)):
+        return "-"
+    if math.isinf(v):
+        return "inf"
+    return f"{v * 1e3:.1f}ms"
+
+
+def format_stats_line(stats: dict) -> str:
+    """One compact ``_cat``-style line from a cluster OR engine stats
+    dict (the ``--stats-interval`` periodic printer)."""
+    if "groups" in stats:                      # cluster rollup
+        req = stats["requests"]
+        waits = [g["queue_wait_s"] for g in stats["groups"].values()]
+        disp = [g["dispatch_latency_s"] for g in stats["groups"].values()]
+        pend = sum(g["pending"] for g in stats["groups"].values())
+        up = sum(1 for g in stats["groups"].values()
+                 if g["health"] == "up")
+        p99s = [h["p99"] for h in disp if h["p99"] is not None]
+        w50s = [h["p50"] for h in waits if h["p50"] is not None]
+        return (f"stats groups={up}/{stats['n_groups']}up "
+                f"pending={pend} "
+                f"done={req['completed']}/{req['submitted']} "
+                f"failed={req['failed']} "
+                f"spills={stats['routing']['spills']} "
+                f"resubmits={stats['routing']['failover_resubmits']} "
+                f"wait_p50={_ms(max(w50s) if w50s else None)} "
+                f"dispatch_p99={_ms(max(p99s) if p99s else None)}")
+    req = stats["requests"]                    # single engine
+    occ = stats["batches"]["p50"]
+    return (f"stats pending={stats['pending']} "
+            f"done={req['completed']}/{req['submitted']} "
+            f"failed={req['failed']} "
+            f"occupancy_p50={'-' if occ is None else format(occ, '.2f')} "
+            f"wait_p50={_ms(stats['queue_wait_s']['p50'])} "
+            f"dispatch_p99={_ms(stats['dispatch_latency_s']['p99'])}")

@@ -55,6 +55,17 @@ consistent (state, translog position) pair to roll a commit point from.
 ``pending`` (queued + in-flight request count) is the router's load
 signal for least-loaded spill across replica-group batchers
 (:mod:`repro.cluster.router`).
+
+**Observability** (:mod:`repro.obs`): the batcher records request
+counters, batch occupancy, measured queue wait, and dispatch latency
+into a :class:`~repro.obs.metrics.MetricsRegistry` (labelled ``group=g``
+when fronting one replica group), and appends per-request spans --
+queue wait, batch formation, device dispatch -- to any
+:class:`~repro.obs.tracing.Trace` riding the submit.  All timestamps
+are host-side, taken around the jitted program dispatch; the batch
+deadline and the queue-wait spans share ONE clock read per dequeue, so
+the batcher's accounting and the trace always agree on a wait.
+``stats()`` is the ES ``_cat/thread_pool`` view of this batcher.
 """
 
 from __future__ import annotations
@@ -62,12 +73,14 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import Future
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import TrimFilter, VectorIndex
+from repro.obs.metrics import default_registry
+from repro.obs.tracing import NULL_TRACE, annotation
 
 __all__ = ["BatchedSearchEngine"]
 
@@ -84,6 +97,9 @@ class BatchedSearchEngine:
         engine: str = "codes",
         merge: Optional[str] = None,
         max_postings: "Optional[int | str]" = None,
+        metrics=None,
+        tracer=None,
+        group: Optional[int] = None,
     ):
         self.index = index
         self.batch_size = batch_size
@@ -94,21 +110,58 @@ class BatchedSearchEngine:
         # None omits the kwarg so plain VectorIndex keeps serving unchanged
         self.merge = merge
         self.max_postings = max_postings
+        # observability: metrics series carry the replica-group label when
+        # this batcher fronts one group of a cluster; instruments are
+        # cached here so the worker pays one lock-op per record, not a
+        # registry lookup
+        self.metrics = metrics if metrics is not None else default_registry()
+        self.tracer = tracer
+        self.group = group
+        self._metric_labels = {} if group is None else {"group": group}
+        lb = self._metric_labels
+        self._c_submitted = self.metrics.counter(
+            "engine.requests.submitted", **lb)
+        self._c_completed = self.metrics.counter(
+            "engine.requests.completed", **lb)
+        self._c_failed = self.metrics.counter("engine.requests.failed", **lb)
+        self._h_occupancy = self.metrics.histogram(
+            "engine.batch.occupancy", **lb)
+        self._h_wait = self.metrics.histogram("engine.queue.wait_s", **lb)
+        self._h_dispatch = self.metrics.histogram(
+            "engine.dispatch.latency_s", **lb)
         self._lock = threading.Condition()
-        self._queue: List[Tuple[np.ndarray, Future]] = []
+        # queue items: (query, future, enqueue timestamp, trace)
+        self._queue: List[tuple] = []
         self._stop = False
         self._inflight = 0
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
 
     # ------------------------------------------------------------------ API
-    def submit(self, query_vec: np.ndarray) -> Future:
+    def submit(self, query_vec: np.ndarray, trace=None) -> Future:
+        """Queue one query -> Future of (ids, scores).  ``trace`` is an
+        optional :class:`~repro.obs.Trace` the worker appends its spans
+        to (the cluster router passes one down); without it, an engine
+        constructed with a ``tracer`` samples its own."""
         fut: Future = Future()
+        if trace is None:
+            if self.tracer is not None:
+                trace = self.tracer.start("query")
+                if trace:
+                    t = trace
+                    fut.add_done_callback(
+                        lambda f: t.finish(
+                            error=None if f.cancelled() or f.exception()
+                            is None else repr(f.exception())))
+            else:
+                trace = NULL_TRACE
         with self._lock:
             if self._stop:
                 raise RuntimeError("engine closed")
-            self._queue.append((np.asarray(query_vec, np.float32), fut))
+            self._queue.append((np.asarray(query_vec, np.float32), fut,
+                                time.monotonic(), trace))
             self._lock.notify()
+        self._c_submitted.inc()
         return fut
 
     def search(self, query_vec: np.ndarray, timeout: float = 10.0):
@@ -140,7 +193,10 @@ class BatchedSearchEngine:
                     "incremental ingest; serve a ShardedVectorIndex")
             first_id = self.index.n_ids
             self.index = add(vectors)
-            return first_id
+        self.metrics.counter("engine.ingest.added_docs",
+                             **self._metric_labels).inc(
+            int(np.asarray(vectors).shape[0]))
+        return first_id
 
     def delete(self, ids) -> None:
         """Hot-tombstone documents by global id: the pruned index swaps in
@@ -157,6 +213,8 @@ class BatchedSearchEngine:
                     f"{type(self.index).__name__} does not support "
                     "deletes; serve a ShardedVectorIndex")
             self.index = delete(ids)
+        self.metrics.counter("engine.ingest.delete_ops",
+                             **self._metric_labels).inc()
 
     def swap_index(self, new_index, expected=None) -> bool:
         """Atomically replace the served index (hot swap, no queries
@@ -171,7 +229,17 @@ class BatchedSearchEngine:
             if expected is not None and self.index is not expected:
                 return False
             self.index = new_index
-            return True
+        self.metrics.counter("engine.swaps", **self._metric_labels).inc()
+        return True
+
+    def stats(self) -> dict:
+        """ES ``_cat/thread_pool``-style snapshot of this batcher: queue
+        depth, in-flight count, request counters, occupancy + queue-wait
+        + dispatch-latency histograms, and the served index's doc/segment
+        stats (see :func:`repro.obs.stats.engine_stats`)."""
+        from repro.obs.stats import engine_stats
+
+        return engine_stats(self)
 
     def close(self):
         with self._lock:
@@ -183,12 +251,26 @@ class BatchedSearchEngine:
     def _run(self):
         while True:
             with self._lock:
-                deadline = time.monotonic() + self.max_wait_s
-                while (len(self._queue) < self.batch_size and not self._stop
-                       and (not self._queue or time.monotonic() < deadline)):
-                    self._lock.wait(timeout=self.max_wait_s)
+                # the batch deadline anchors to the OLDEST queued request's
+                # enqueue time (a request waits at most max_wait_s before
+                # dispatch), and each wake-up reads the clock ONCE -- the
+                # old loop re-read time.monotonic() on every predicate
+                # evaluation and anchored the deadline to worker wake-up,
+                # so a request arriving into an idle worker could dispatch
+                # immediately (deadline already stale) and the measured
+                # wait was unknowable
+                while len(self._queue) < self.batch_size and not self._stop:
+                    now = time.monotonic()
+                    if self._queue:
+                        deadline = self._queue[0][2] + self.max_wait_s
+                        if now >= deadline:
+                            break
+                        self._lock.wait(timeout=deadline - now)
+                    else:
+                        self._lock.wait(timeout=self.max_wait_s)
                 if self._stop and not self._queue:
                     return
+                t_deq = time.monotonic()
                 batch = self._queue[: self.batch_size]
                 del self._queue[: len(batch)]
                 # snapshot under the lock: a hot swap after this point
@@ -197,12 +279,20 @@ class BatchedSearchEngine:
                 self._inflight = len(batch)
             if not batch:
                 continue
+            # one t_deq for the whole batch: the queue-wait each metric
+            # and trace span reports is (t_deq - enqueue), same clock read;
+            # one lock acquisition for the whole batch's waits
+            self._h_wait.observe_many(
+                [t_deq - t_enq for _, _, t_enq, _ in batch])
+            self._h_occupancy.observe(len(batch) / self.batch_size)
             # a failing search must not kill the worker: every queued and
             # in-flight future would strand (resolve only by caller
             # timeout) -- fail this batch's futures, serve the next batch
             try:
+                error = None
+                t_dispatch = t_deq    # overwritten once the batch is built
                 try:
-                    qs = np.stack([q for q, _ in batch])
+                    qs = np.stack([q for q, _, _, _ in batch])
                     pad = self.batch_size - qs.shape[0]
                     if pad:
                         qs = np.concatenate(
@@ -210,18 +300,39 @@ class BatchedSearchEngine:
                     kwargs = {"merge": self.merge} if self.merge else {}
                     if self.max_postings is not None:
                         kwargs["max_postings"] = self.max_postings
-                    ids, scores = index.search(
-                        jnp.asarray(qs), k=self.k, page=self.page,
-                        trim=self.trim, engine=self.engine, **kwargs,
-                    )
-                    ids, scores = np.asarray(ids), np.asarray(scores)
+                    t_dispatch = time.monotonic()
+                    with annotation("repro.engine.dispatch",
+                                    self.tracer is not None
+                                    and self.tracer.annotate):
+                        ids, scores = index.search(
+                            jnp.asarray(qs), k=self.k, page=self.page,
+                            trim=self.trim, engine=self.engine, **kwargs,
+                        )
+                        ids, scores = np.asarray(ids), np.asarray(scores)
                 except Exception as exc:  # noqa: BLE001 - fwd to futures
-                    for _, fut in batch:
+                    t_done = time.monotonic()
+                    error = exc
+                    for _, fut, _, _ in batch:
                         if not fut.done():
                             fut.set_exception(exc)
-                    continue
-                for i, (_, fut) in enumerate(batch):
-                    if not fut.done():      # caller may have cancelled
-                        fut.set_result((ids[i], scores[i]))
+                    self._c_failed.inc(len(batch))
+                else:
+                    t_done = time.monotonic()
+                    for i, (_, fut, _, _) in enumerate(batch):
+                        if not fut.done():  # caller may have cancelled
+                            fut.set_result((ids[i], scores[i]))
+                    self._c_completed.inc(len(batch))
+                self._h_dispatch.observe(t_done - t_dispatch)
+                for _, _, t_enq, tr in batch:
+                    if not tr:          # NULL_TRACE: skip the kwargs builds
+                        continue
+                    tr.span("queue_wait", t0=t_enq, t1=t_deq,
+                            group=self.group)
+                    tr.span("batch_form", t0=t_deq, t1=t_dispatch,
+                            batch_size=len(batch), group=self.group)
+                    tr.span("dispatch", t0=t_dispatch, t1=t_done,
+                            group=self.group, batch_size=len(batch),
+                            **({} if error is None
+                               else {"error": repr(error)}))
             finally:
                 self._inflight = 0

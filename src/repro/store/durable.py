@@ -35,10 +35,13 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from typing import Optional, Tuple
 
 import numpy as np
 from jax.sharding import Mesh
+
+from repro.obs.metrics import default_registry
 
 from .recovery import recover
 from .snapshot import latest_commit, write_commit
@@ -56,12 +59,20 @@ class Store:
     daemon commits from its own thread while ``ClusterEngine.
     restore_group`` recovers under the cluster's control-plane lock --
     two locks, one store, hence the store owns the mutual exclusion).
+
+    **Observability**: commit and recovery wall times + counts record
+    into ``metrics`` (a cluster the store attaches to shares its
+    registry in), and :meth:`stats` is the ES ``_stats/translog`` view --
+    translog seqno/generation/on-disk bytes, newest commit
+    generation/seq, commit + recovery timings.
     """
 
-    def __init__(self, path: str, durability: str = "request"):
+    def __init__(self, path: str, durability: str = "request",
+                 metrics=None):
         os.makedirs(path, exist_ok=True)
         self.path = path
         self.translog = Translog(path, durability=durability)
+        self.metrics = metrics if metrics is not None else default_registry()
         self._lock = threading.Lock()
 
     @property
@@ -81,6 +92,7 @@ class Store:
             if seq is None:
                 raise ValueError(
                     "index carries no translog_seq; pass seq= explicitly")
+        t0 = time.monotonic()
         with self._lock:
             # seq-only lookup: no point CRC-validating the fallback's data
             # here -- a corrupt fallback only makes the trim retain more
@@ -92,6 +104,9 @@ class Store:
             # back to `prev` and still needs the ops between the two
             # commit points
             self.translog.trim(prev.seq if prev is not None else 0)
+        self.metrics.counter("store.commits").inc()
+        self.metrics.histogram("store.commit.duration_s").observe(
+            time.monotonic() - t0)
         return gen
 
     def has_commit(self) -> bool:
@@ -102,8 +117,13 @@ class Store:
         """Crash-recover onto ``mesh`` -> (raw index, seqno), serialized
         against concurrent commits (whose translog trim would otherwise
         unlink generation files out from under the replay scan)."""
+        t0 = time.monotonic()
         with self._lock:
-            return recover(self.path, mesh)
+            out = recover(self.path, mesh)
+        self.metrics.counter("store.recoveries").inc()
+        self.metrics.histogram("store.recovery.duration_s").observe(
+            time.monotonic() - t0)
+        return out
 
     def recover(self, mesh: Mesh) -> "Tuple[DurableIndex, int]":
         """Crash-recover onto ``mesh`` -> (write-through wrapped index,
@@ -135,6 +155,15 @@ class Store:
         wrapped = DurableIndex(index, self, seq=self.seqno)
         self.commit(wrapped)
         return wrapped
+
+    def stats(self) -> dict:
+        """ES ``_stats/translog``-style snapshot: translog seqno /
+        generation / retained on-disk bytes, newest commit
+        generation/seq, commit + recovery counts and wall-time
+        histograms (see :func:`repro.obs.stats.store_stats`)."""
+        from repro.obs.stats import store_stats
+
+        return store_stats(self)
 
     def close(self) -> None:
         self.translog.close()

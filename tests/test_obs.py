@@ -1,0 +1,412 @@
+"""Observability plane (repro/obs): metrics pins, traces, reconciliation.
+
+The pinned invariants:
+
+* histogram bucket math is EXACT -- quantiles report the upper bound of
+  the bucket holding the rank-``max(1, ceil(q*n))`` sample, where the
+  bucket mapping is ``Histogram.bucket_le`` (so tests compute expected
+  quantiles independently, no tolerance);
+* instrumentation is invisible to the data plane -- results served with
+  metrics + full tracing enabled are bit-identical to an uninstrumented
+  engine (all host-side timestamps, nothing inside jitted programs);
+* counters reconcile exactly through a full cluster lifecycle (ingest,
+  injected failure + failover, readmit, background compaction, restore
+  from disk): queries issued == cluster completed == sum of per-group
+  completions, and ONE injected failure == ONE down transition;
+* traces are complete for the interesting paths -- a spilled query
+  carries its spill event and serving group, a failed-over query carries
+  group_down + failover_resubmit plus dispatch spans from BOTH groups;
+* totals stay exact under concurrent submitters (the registry's lock
+  discipline is not best-effort).
+"""
+
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterEngine
+from repro.dist.shard_index import ShardedVectorIndex
+from repro.launch.mesh import make_shard_mesh
+from repro.obs import (Histogram, MetricsRegistry, Tracer, NULL_TRACE,
+                       format_stats_line)
+from repro.serve.engine import BatchedSearchEngine
+from repro.store.durable import Store
+
+N_DOCS, N_FEAT = 60, 16
+
+
+@pytest.fixture(scope="module")
+def sidx():
+    rng = np.random.default_rng(0)
+    return ShardedVectorIndex.build_sharded(
+        rng.normal(size=(N_DOCS, N_FEAT)).astype(np.float32),
+        make_shard_mesh(1))
+
+
+@pytest.fixture()
+def queries():
+    return np.random.default_rng(1).normal(
+        size=(9, N_FEAT)).astype(np.float32)
+
+
+class _Gated:
+    """Group index that parks every search until released (deterministic
+    in-flight state -- same helper as tests/test_cluster.py)."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.entered = threading.Event()
+        self.release = threading.Event()
+
+    def search(self, q, **kw):
+        self.entered.set()
+        assert self.release.wait(timeout=60), "gate never released"
+        return self.inner.search(q, **kw)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+# ------------------------------------------------------------- histograms
+def test_histogram_bucket_pins():
+    """Quantiles == bucket_le of the rank-selected sample, computed
+    independently from the documented rank rule -- no tolerances."""
+    reg = MetricsRegistry()
+    h = reg.histogram("t.lat")
+    samples = [1.5e-6, 3.0e-6, 1.0e-3, 0.25, 2.0]
+    for s in samples:
+        h.observe(s)
+    assert h.count == len(samples)
+    assert h.sum == pytest.approx(sum(samples))
+    snap = h.snapshot()
+    assert snap["min"] == min(samples) and snap["max"] == max(samples)
+    ordered = sorted(samples)
+    for q in (0.0, 0.5, 0.9, 0.99, 1.0):
+        rank = max(1, math.ceil(q * len(samples)))
+        assert h.quantile(q) == Histogram.bucket_le(ordered[rank - 1]), q
+    # a sample is never reported smaller than it was (le semantics)
+    for s in samples:
+        assert Histogram.bucket_le(s) >= s
+
+
+def test_histogram_edge_buckets():
+    reg = MetricsRegistry()
+    h = reg.histogram("t.edge")
+    assert math.isnan(h.quantile(0.5))            # empty
+    assert h.snapshot()["p50"] is None
+    h.observe(0.0)                                # below the first bound
+    assert h.quantile(0.0) == Histogram.bucket_le(0.0) == 1e-6
+    h.observe(500.0)                              # past the last bound
+    assert Histogram.bucket_le(500.0) == math.inf
+    assert h.quantile(1.0) == math.inf
+    assert h.snapshot()["max"] == 500.0           # min/max stay exact
+    with pytest.raises(ValueError, match="quantile"):
+        h.quantile(1.5)
+
+
+def test_observe_many_matches_observe():
+    reg = MetricsRegistry()
+    a, b = reg.histogram("t.a"), reg.histogram("t.b")
+    xs = list(np.random.default_rng(2).exponential(0.01, size=40))
+    for x in xs:
+        a.observe(x)
+    b.observe_many(xs)
+    b.observe_many([])                            # no-op, not an error
+    assert a.snapshot() == b.snapshot()
+
+
+def test_disabled_registry_records_nothing():
+    reg = MetricsRegistry(enabled=False)
+    c, g, h = reg.counter("t.c"), reg.gauge("t.g"), reg.histogram("t.h")
+    c.inc()
+    g.set(3.0)
+    h.observe(0.5)
+    h.observe_many([0.1, 0.2])
+    assert c.value == 0 and g.value == 0.0 and h.count == 0
+    reg.enabled = True                            # flips ON without rewiring
+    c.inc()
+    assert c.value == 1
+
+
+def test_registry_series_and_totals():
+    reg = MetricsRegistry()
+    reg.counter("t.done", group=0).inc(3)
+    reg.counter("t.done", group=1).inc(4)
+    assert reg.counter("t.done", group=0) is reg.counter("t.done", group=0)
+    assert reg.value("t.done", group=0) == 3
+    assert reg.value("t.done", group=2, default=0) == 0   # never created
+    assert reg.total("t.done") == 7
+    assert reg.total("t.missing", default=-1) == -1
+    snap = reg.snapshot()
+    assert snap["counters"]["t.done"] == {"group=0": 3, "group=1": 4}
+
+
+# ---------------------------------------------------------------- tracing
+def test_tracer_sampling_deterministic():
+    tr = Tracer(sample=0.25)
+    kept = [bool(tr.start("q")) for _ in range(8)]
+    assert kept == [True, False, False, False, True, False, False, False]
+    st = tr.stats()
+    assert st["seen"] == 8 and st["sampled"] == 2
+    assert not NULL_TRACE                          # falsy, methods no-op
+    assert NULL_TRACE.span("x").end() is NULL_TRACE
+    with pytest.raises(ValueError, match="sample"):
+        Tracer(sample=0.0)
+    with pytest.raises(ValueError, match="capacity"):
+        Tracer(capacity=0)
+
+
+def test_trace_ring_retention():
+    tr = Tracer(capacity=2, sample=1.0)
+    for i in range(5):
+        t = tr.start("q")
+        t.span("work").end()
+        t.finish()
+        t.finish()                                 # idempotent
+    dump = tr.dump()
+    assert [d["trace_id"] for d in dump] == [4, 5]  # oldest first, capped
+    assert tr.dump(clear=True) and tr.dump() == []
+
+
+# ----------------------------------------------- instrumented single engine
+def test_instrumented_results_bit_identical(sidx, queries):
+    """Bit-parity with instrumentation enabled: the acceptance pin that
+    metrics + full tracing never touch the jitted data plane."""
+    bare = BatchedSearchEngine(sidx, batch_size=4, k=5, page=N_DOCS,
+                               trim=None, engine="codes",
+                               metrics=MetricsRegistry(enabled=False))
+    reg = MetricsRegistry()
+    inst = BatchedSearchEngine(sidx, batch_size=4, k=5, page=N_DOCS,
+                               trim=None, engine="codes", metrics=reg,
+                               tracer=Tracer(sample=1.0))
+    try:
+        for q in queries:
+            bi, bs = bare.search(q, timeout=60)
+            ii, iscore = inst.search(q, timeout=60)
+            assert np.array_equal(bi, ii)
+            assert np.array_equal(bs, iscore)
+        n = len(queries)
+        assert reg.value("engine.requests.submitted") == n
+        assert reg.value("engine.requests.completed") == n
+        assert reg.value("engine.requests.failed") == 0
+        assert reg.histogram("engine.queue.wait_s").count == n
+        st = inst.stats()
+        assert st["requests"] == {"submitted": n, "completed": n,
+                                  "failed": 0}
+        assert st["index"]["n_ids"] == N_DOCS
+        assert st["dispatch_latency_s"]["count"] >= 1
+        line = format_stats_line(st)
+        assert f"done={n}/{n}" in line and "failed=0" in line
+    finally:
+        bare.close()
+        inst.close()
+
+
+def test_trace_spans_complete_for_plain_query(sidx, queries):
+    tr = Tracer(sample=1.0)
+    eng = BatchedSearchEngine(sidx, batch_size=4, k=5, page=N_DOCS,
+                              trim=None, engine="codes",
+                              metrics=MetricsRegistry(), tracer=tr)
+    try:
+        eng.search(queries[0], timeout=60)
+    finally:
+        eng.close()
+    (trace,) = tr.dump()
+    assert trace["t1"] is not None and "error" not in trace["attrs"]
+    spans = {s["name"]: s for s in trace["spans"]}
+    assert {"queue_wait", "batch_form", "dispatch"} <= set(spans)
+    # contiguous phases from shared clock reads: wait ends where batch
+    # formation starts, which ends where dispatch starts
+    assert spans["queue_wait"]["t1"] == spans["batch_form"]["t0"]
+    assert spans["batch_form"]["t1"] == spans["dispatch"]["t0"]
+    for s in spans.values():
+        assert s["duration_s"] >= 0.0
+
+
+# -------------------------------------------------------- cluster tracing
+def test_trace_records_spill_event(sidx, queries):
+    """A spilled query's trace names both groups: the spill event (from
+    the pinned group) and dispatch spans on the group that served it."""
+    gated = _Gated(sidx)
+    reg = MetricsRegistry()
+    tr = Tracer(sample=1.0)
+    cl = ClusterEngine([gated, sidx], batch_size=1, k=5, page=N_DOCS,
+                       trim=None, engine="codes", spill_factor=2.0,
+                       metrics=reg, tracer=tr)
+    try:
+        futs = [cl.submit(queries[0], stream="s")]     # pin to group 0
+        assert gated.entered.wait(timeout=60)
+        futs += [cl.submit(q, stream="s") for q in queries[1:3]]
+        spilled = cl.submit(queries[3], stream="s")    # over the threshold
+        spilled.result(timeout=60)
+        assert reg.value("cluster.routing.spills") == 1
+        # only the spilled query has finished, so it is the whole dump
+        (trace,) = tr.dump()
+        events = [(e["name"], e["attrs"]) for s in trace["spans"]
+                  for e in s["events"]]
+        assert ("spill", {"from_group": 0, "to_group": 1}) in events
+        dispatch = [s for s in trace["spans"] if s["name"] == "dispatch"]
+        assert [s["attrs"]["group"] for s in dispatch] == [1]
+        gated.release.set()
+        for f in futs:
+            f.result(timeout=60)
+    finally:
+        gated.release.set()
+        cl.close()
+
+
+def test_trace_records_failover_resubmit(sidx, queries):
+    """A failed-over query's ONE trace tells the whole story: a dispatch
+    span with the error on the poisoned group, group_down +
+    failover_resubmit events, then clean spans from the surviving copy."""
+    reg = MetricsRegistry()
+    tr = Tracer(sample=1.0)
+    cl = ClusterEngine([sidx, sidx], batch_size=4, k=5, page=N_DOCS,
+                       trim=None, engine="codes", metrics=reg, tracer=tr)
+    try:
+        cl.search(queries[0], stream="s", timeout=60)  # pin to group 0
+        cl.inject_failure(0)
+        cl.search(queries[1], stream="s", timeout=60)  # fails over
+        assert reg.value("cluster.failover.resubmits") == 1
+        assert reg.total("health.down_transitions") == 1
+        trace = tr.dump()[-1]
+        assert trace["t1"] is not None and "error" not in trace["attrs"]
+        events = {e["name"] for s in trace["spans"] for e in s["events"]}
+        assert {"group_down", "failover_resubmit"} <= events
+        dispatch = [s for s in trace["spans"] if s["name"] == "dispatch"]
+        assert sorted(s["attrs"]["group"] for s in dispatch) == [0, 1]
+        by_group = {s["attrs"]["group"]: s for s in dispatch}
+        assert "error" in by_group[0]["attrs"]
+        assert "error" not in by_group[1]["attrs"]
+        cl.heal(0)
+        assert cl.health.readmit(0)
+        assert reg.total("health.readmits") == 1
+    finally:
+        cl.close()
+
+
+# -------------------------------------------------- lifecycle reconciliation
+def test_lifecycle_stats_reconcile_exactly(sidx, queries, tmp_path):
+    """THE reconciliation pin, through a full lifecycle -- serve, hot
+    ingest, injected failure + failover, readmit, background compaction
+    (with durability commits), restore-from-disk -- every query issued is
+    counted exactly once at cluster level and exactly once in some
+    group's completions; one injected failure is one down transition."""
+    import time
+
+    rng = np.random.default_rng(7)
+    W = rng.normal(size=(12, N_FEAT)).astype(np.float32)
+    reg = MetricsRegistry()
+    tr = Tracer(sample=1.0)
+    store = Store(str(tmp_path))
+    cl = ClusterEngine([sidx, sidx], batch_size=4, k=5, page=10_000,
+                       trim=None, engine="codes", metrics=reg, tracer=tr,
+                       store=store, auto_compact=0.2,
+                       compact_interval_s=0.01)
+    n_issued = 0
+    try:
+        assert store.metrics is reg                # one registry everywhere
+        for i, q in enumerate(queries[:4]):        # healthy serving
+            cl.search(q, stream=i % 2, timeout=60)
+            n_issued += 1
+
+        first = cl.add_documents(W)                # hot ingest, all groups
+        assert first == N_DOCS
+        assert store.seqno == 1                    # one logged op so far
+
+        cl.search(W[0], stream=0, timeout=60)      # stream 0's group fails
+        n_issued += 1
+        cl.inject_failure(0)
+        cl.search(W[1], stream=None, timeout=60)   # may route anywhere
+        n_issued += 1
+        cl.search(queries[4], stream=0, timeout=60)
+        n_issued += 1
+        cl.heal(0)
+        assert cl.health.readmit(0)
+
+        victims = list(range(0, 14)) + [N_DOCS + 1]
+        cl.delete(victims)                         # past the 0.2 threshold
+        assert store.seqno == 2
+        deadline = time.monotonic() + 60
+        while cl.maintenance.compactions < 2:      # background compaction
+            assert time.monotonic() < deadline, "daemon never compacted"
+            cl.search(queries[5], stream=1, timeout=60)
+            n_issued += 1
+
+        seq = cl.restore_group(1)                  # re-admit from disk
+        assert seq == 2
+        a = cl.search(W[2], stream=0, timeout=60)
+        b = cl.search(W[2], stream=1, timeout=60)  # restored copy serves
+        n_issued += 2
+        assert np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+
+        st = cl.stats()
+        req = st["requests"]
+        assert req["submitted"] == n_issued
+        assert req["completed"] == n_issued
+        assert req["failed"] == 0
+        assert sum(req["group_completed"].values()) == n_issued
+        assert st["health"]["down_transitions"] == 1   # ONE injected fault
+        assert st["health"]["readmits"] == 1
+        assert st["routing"]["failover_resubmits"] >= 1
+        assert all(g["health"] == "up" for g in st["groups"].values())
+        # per-group engine counters cover the cluster total (resubmits
+        # mean group-level submits can exceed it, never undercount)
+        assert sum(g["requests"]["completed"]
+                   for g in st["groups"].values()) >= n_issued
+        assert st["maintenance"]["compactions"] >= 2
+        assert st["store"]["recoveries"] == 1
+        assert st["store"]["commits"] >= 2         # baseline + maintenance
+        assert st["store"]["translog"]["seqno"] == 2
+        assert "groups=2/2up" in format_stats_line(st)
+        # trace completeness: every issued query left ONE finished trace
+        ts = tr.stats()
+        assert ts["seen"] == ts["sampled"] == n_issued
+        assert all(d["t1"] is not None for d in tr.dump())
+    finally:
+        cl.close()
+        store.close()
+
+
+# ------------------------------------------------------------- concurrency
+def test_concurrent_submitters_exact_totals(sidx):
+    """Counter/histogram/tracer totals are exact -- not approximate --
+    under concurrent submitters."""
+    n_threads, per_thread = 4, 12
+    total = n_threads * per_thread
+    rng = np.random.default_rng(3)
+    Q = rng.normal(size=(total, N_FEAT)).astype(np.float32)
+    reg = MetricsRegistry()
+    tr = Tracer(capacity=total, sample=1.0)
+    eng = BatchedSearchEngine(sidx, batch_size=8, k=5, page=N_DOCS,
+                              trim=None, engine="codes", metrics=reg,
+                              tracer=tr)
+    errors = []
+
+    def drive(t):
+        try:
+            for i in range(per_thread):
+                ids, _ = eng.search(Q[t * per_thread + i], timeout=60)
+                assert ids.shape == (5,)
+        except Exception as exc:  # noqa: BLE001 - surfaced below
+            errors.append(exc)
+
+    try:
+        threads = [threading.Thread(target=drive, args=(t,))
+                   for t in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert not errors
+        assert reg.value("engine.requests.submitted") == total
+        assert reg.value("engine.requests.completed") == total
+        assert reg.value("engine.requests.failed") == 0
+        assert reg.histogram("engine.queue.wait_s").count == total
+        ts = tr.stats()
+        assert ts["seen"] == ts["sampled"] == ts["retained"] == total
+        assert all(d["t1"] is not None for d in tr.dump())
+    finally:
+        eng.close()
