@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke-shard smoke-replica smoke-build smoke-cluster smoke-store smoke-obs bench bench-full
+.PHONY: test smoke-shard smoke-replica smoke-build smoke-cluster smoke-store smoke-obs smoke-segments bench bench-full
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -70,6 +70,19 @@ smoke-obs:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" $(PY) -m \
 	  repro.launch.serve --docs 2000 --features 32 --queries 32 \
 	  --shards 2 --replicas 2 --cluster --fail-shard 0 --stats-interval 0.5
+
+# segment-lifecycle smoke under 4 virtual devices: sealed-generation
+# ingest (flat vs seal vs seal+merge latency traces -- the no-stall
+# evidence), per-generation commit bytes through a durable store (the
+# O(changed) incremental-commit curve), ending in a kill -> recover ->
+# bit-parity assert (the _quick artifact name keeps it out of the
+# accumulating BENCH_segment_scale.json trajectory)
+smoke-segments:
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" $(PY) -m \
+	  benchmarks.segment_scale --shards 4 --docs 2000 --features 32 \
+	  --ingest-batch 32 --batches 8 --seal-threshold 64 --queries 16 \
+	  --search-calls 8 --repeats 1 \
+	  --json artifacts/BENCH_segment_scale_quick.json
 
 bench:
 	$(PY) -m benchmarks.run

@@ -89,6 +89,7 @@ def main() -> None:
     _run_device_bench("cluster_scale", ["--grid", "1x1,2x2,4x2",
                                         "--streams", "1,4"], full)
     _run_device_bench("store_scale", ["--shards", "1,4"], full)
+    _run_device_bench("segment_scale", ["--shards", "1,4"], full)
     _run_device_bench("obs_overhead", [], full)
 
     t0 = time.perf_counter()

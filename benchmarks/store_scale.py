@@ -20,7 +20,10 @@ Two questions the store subsystem (repro/store) makes measurable:
    commit, plus once more after a fresh commit (zero replay -- the
    commit-restore floor).  The gap between the floor and the replay
    curve is the argument for the maintenance daemon's post-compaction
-   commits trimming the log.
+   commits trimming the log.  The fresh commit also logs its honest
+   cost -- ``bytes_written`` vs ``bytes_total`` -- so the
+   content-addressed O(changed) claim rides in this artifact too
+   (benchmarks/segment_scale.py has the full bytes-vs-generation curve).
 
 Rows *append* to ``artifacts/BENCH_store_scale.json`` (one run entry per
 invocation) so the trajectory accumulates across PRs.  ``benchmarks/
@@ -170,8 +173,23 @@ def run(shard_counts, n_docs=20000, n_features=64, ingest_batch=64,
                 print(f"store_scale,shards={s},{best * 1e6:.0f},"
                       f"mode=recover;translog_ops={n_ops};"
                       f"recover_s={best:.4f}")
-            # the commit-restore floor: fresh commit, zero replay
+            # the commit-restore floor: fresh commit, zero replay -- and
+            # the honest commit cost: bytes actually written vs bytes the
+            # commit references (content-addressed blobs re-reference
+            # unchanged parts, so written << total past generation 1)
             store.commit(idx)
+            reg = store.metrics
+            written = reg.value("store.commit.last_bytes_written")
+            total_b = reg.value("store.commit.last_bytes_total")
+            rows.append({
+                "mode": "commit", "shards": s,
+                "bytes_written": written, "bytes_total": total_b,
+                "n_ids": int(idx.n_ids), "n_docs": n_docs,
+                "n_features": n_features,
+            })
+            print(f"store_scale,shards={s},{written:.0f},"
+                  f"mode=commit;bytes_written={written:.0f};"
+                  f"bytes_total={total_b:.0f}")
             best, samples = np.inf, []
             for _ in range(repeats):
                 t0 = time.perf_counter()

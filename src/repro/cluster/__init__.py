@@ -30,17 +30,23 @@ failover resubmit                ES retrying a failed shard fetch on the
                                  group and results stay bit-identical,
                                  because every group computes
                                  bit-identical results.
-:class:`MaintenanceDaemon`       the background Lucene merge scheduler /
-(:mod:`~repro.cluster.           ``index.merge.policy
-maintenance`)                    .deletes_pct_allowed``: watches per-shard
-                                 tombstone ratios and rewrites (compacts)
-                                 past the threshold, hot-swapping under
-                                 the engine lock so no in-flight query is
-                                 dropped.  Given a durability store
-                                 (:mod:`repro.store`), it also rolls a
-                                 commit point after each compaction and
-                                 trims the replayed translog -- the ES
-                                 flush that follows a merge.
+:class:`MaintenanceDaemon` +     Lucene's ConcurrentMergeScheduler +
+:class:`TieredMergePolicy`       TieredMergePolicy: each sweep plans per
+(:mod:`~repro.cluster.           replica group -- first a delete-heavy
+maintenance`)                    segment rewrite (``index.merge.policy
+                                 .deletes_pct_allowed``, consulting
+                                 PER-SEGMENT deleted ratios), else a fold
+                                 of ``merge_factor`` similar-sized sealed
+                                 segments, else (only past the global
+                                 tombstone threshold) the demoted full
+                                 compact -- and applies concurrently
+                                 across groups, off the query path,
+                                 installing via the ``swap_index`` CAS so
+                                 no in-flight query is dropped.  Given a
+                                 durability store (:mod:`repro.store`),
+                                 it also rolls a commit point after each
+                                 pass and trims the replayed translog --
+                                 the ES flush that follows a merge.
 canary health probing            the master pinging an unresponsive node
 (``MaintenanceDaemon.            and re-promoting its shard copies once
 probe_once``)                    it answers: downed groups get a canary
@@ -63,7 +69,8 @@ The data-plane hooks these build on live in
 """
 
 from repro.cluster.health import HealthMap
-from repro.cluster.maintenance import MaintenanceDaemon
+from repro.cluster.maintenance import MaintenanceDaemon, TieredMergePolicy
 from repro.cluster.router import ClusterEngine
 
-__all__ = ["ClusterEngine", "HealthMap", "MaintenanceDaemon"]
+__all__ = ["ClusterEngine", "HealthMap", "MaintenanceDaemon",
+           "TieredMergePolicy"]

@@ -1,14 +1,35 @@
-"""Background auto-compaction daemon (the Lucene merge scheduler).
+"""Background tiered-merge + auto-compaction daemon (the Lucene merge
+scheduler).
 
-Elasticsearch never asks the operator to reclaim deleted docs: a
-background merge policy watches each shard's deletes ratio
-(``index.merge.policy.deletes_pct_allowed``) and rewrites segments when it
-drifts too high.  :class:`MaintenanceDaemon` is that loop for the serving
-tier: it polls every engine's ``index.tombstone_ratio`` (worst per-shard
-dead fraction, maintained host-side by ``ShardedVectorIndex.delete``) and
-past ``threshold`` (default 20%) runs ``compact()`` -- the on-device
-sharded rebuild over the live doc table -- then hot-swaps the result in
-via :meth:`BatchedSearchEngine.swap_index`.
+Elasticsearch never asks the operator to reclaim deleted docs or fold
+segments: a background merge policy (Lucene ``TieredMergePolicy``) picks a
+few similar-sized segments per pass, merges them off the query path, and
+keeps the per-index segment count bounded while deletes are reclaimed
+incrementally.  :class:`MaintenanceDaemon` is that loop for the serving
+tier, and :class:`TieredMergePolicy` is its planner:
+
+1. **Delete-pressure rewrite** -- any sealed segment whose per-segment
+   ``deleted_ratio`` exceeds ``segment_deletes`` (ES
+   ``deletes_pct_allowed``) is rewritten alone, reclaiming its tombstones
+   without touching its neighbours.  This is what fixes the whole-index
+   vs per-shard accounting drift: the daemon used to threshold only on
+   the global ``tombstone_ratio``, which cannot see *which generation*
+   the deletes hit.
+2. **Tiered fold** -- a contiguous run of ``merge_factor`` similar-sized
+   segments (max <= merge_factor * min rows, Lucene's tier criterion)
+   merges into one, so N ingest-sealed generations fold into
+   O(log_mf N) tiers instead of accumulating.
+3. **Full compact, demoted** -- only when neither applies and the global
+   ``tombstone_ratio`` (worst per-shard dead fraction -- now dominated by
+   BASE deletes, since segment deletes are reclaimed by 1) still exceeds
+   ``threshold`` does the old all-or-nothing ``compact()`` run: the final
+   fold of the last tier.
+
+Merge passes run CONCURRENTLY across replica groups (they are
+independent copies; each pass touches only its own group's device column
+and its own CAS), on short-lived worker threads only when more than one
+group has work -- an idle tick spawns nothing.  Every applied pass
+hot-swaps via :meth:`BatchedSearchEngine.swap_index`.
 
 The swap discipline is what makes this safe under live traffic:
 
@@ -60,13 +81,55 @@ from __future__ import annotations
 
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.obs.metrics import default_registry
 
-__all__ = ["MaintenanceDaemon"]
+__all__ = ["MaintenanceDaemon", "TieredMergePolicy"]
+
+
+class TieredMergePolicy:
+    """Lucene-``TieredMergePolicy``-style merge planner.
+
+    ``select(index)`` inspects the index's sealed :class:`Segment`
+    generations and returns one merge plan (a dict with ``start``/
+    ``count``/``reason``) or ``None``.  Selection order: a segment past
+    the per-segment ``segment_deletes`` ratio is rewritten alone
+    (``count=1`` -- Lucene's singleton merge that exists purely to reclaim
+    deletes); otherwise the first contiguous run of ``merge_factor``
+    similar-sized segments (largest <= merge_factor * smallest, by rows)
+    folds into one.  Indexes without segments (flat, or plain
+    ``VectorIndex``) always yield ``None`` -- the daemon then falls back
+    to the global compact threshold.
+    """
+
+    def __init__(self, merge_factor: int = 4, segment_deletes: float = 0.2):
+        if merge_factor < 2:
+            raise ValueError(f"merge_factor must be >= 2, got {merge_factor}")
+        if not 0.0 < segment_deletes:
+            raise ValueError(
+                f"segment_deletes must be positive, got {segment_deletes}")
+        self.merge_factor = merge_factor
+        self.segment_deletes = segment_deletes
+
+    def select(self, index) -> Optional[dict]:
+        segs = getattr(index, "segments", ())
+        if not segs:
+            return None
+        for i, s in enumerate(segs):
+            if s.deleted_ratio > self.segment_deletes:
+                return {"start": i, "count": 1, "reason": "deletes",
+                        "deleted_ratio": s.deleted_ratio}
+        mf = self.merge_factor
+        if len(segs) >= mf:
+            for i in range(len(segs) - mf + 1):
+                rows = [max(s.n_rows, 1) for s in segs[i:i + mf]]
+                if max(rows) <= mf * min(rows):
+                    return {"start": i, "count": mf, "reason": "tier"}
+        return None
 
 
 class MaintenanceDaemon:
@@ -81,6 +144,7 @@ class MaintenanceDaemon:
         probe_timeout_s: float = 5.0,
         probe_interval_s: Optional[float] = None,
         metrics=None,
+        merge_policy="auto",              # "auto" | None | TieredMergePolicy
     ):
         if not 0.0 < threshold:
             raise ValueError(f"threshold must be positive, got {threshold}")
@@ -103,12 +167,15 @@ class MaintenanceDaemon:
         self.probe_interval_s = (interval_s if probe_interval_s is None
                                  else probe_interval_s)
         self._probes: dict = {}           # group -> in-flight canary Future
+        self.merge_policy = (TieredMergePolicy() if merge_policy == "auto"
+                             else merge_policy)
         self._stop_evt = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.events: List[dict] = []      # one entry per applied compaction
+        self.merge_events: List[dict] = []  # one entry per applied merge
         self.failures: List[dict] = []    # one entry per failed rebuild
         self.probe_events: List[dict] = []  # one entry per re-admission
-        self.commits: int = 0             # commit points rolled post-compact
+        self.commits: int = 0             # commit points rolled post-pass
         self._quarantine: dict = {}       # group -> snapshot whose rebuild
         #                                   failed; skipped until it changes
 
@@ -129,57 +196,113 @@ class MaintenanceDaemon:
     def compactions(self) -> int:
         return len(self.events)
 
+    @property
+    def merges(self) -> int:
+        return len(self.merge_events)
+
     # ----------------------------------------------------------------- work
     def poll_once(self) -> int:
-        """One maintenance sweep over every group; returns compactions
-        applied.  Deterministic entry point for tests and operators."""
-        applied = 0
+        """One maintenance sweep over every group; returns passes applied
+        (merges + compactions).  Deterministic entry point for tests and
+        operators.
+
+        Plan/apply split: a cheap host-side planning pass first decides
+        per group whether a merge (the policy's pick) or a full compact
+        (global tombstone pressure, the demoted last resort) is due; only
+        groups WITH work get an apply pass, and when several have work the
+        passes run concurrently -- replica groups are independent copies,
+        each apply touches only its own device column, its own CAS, and
+        the thread-safe store/metrics."""
+        plans = []
         for g, batcher in enumerate(self._batchers):
             if self._health is not None and not self._health.is_up(g):
                 continue
             snapshot = batcher.index
-            ratio = getattr(snapshot, "tombstone_ratio", 0.0)
-            if ratio <= self.threshold:
-                continue
             if self._quarantine.get(g) is snapshot:
                 continue    # this exact state already failed to rebuild --
                 #             don't hot-loop the failure; any ingest/delete
                 #             produces a new snapshot and re-arms the group
-            t0 = time.monotonic()
-            try:
-                compacted = snapshot.compact()        # outside the lock
-            except Exception as exc:  # noqa: BLE001 - recorded, not fatal
-                # a failing on-device rebuild (OOM, compile error) must not
-                # kill maintenance for the healthy groups -- log it and
-                # quarantine the snapshot instead of silently retrying the
-                # same expensive failure every tick
-                self._quarantine[g] = snapshot
-                self.failures.append({"group": g, "tombstone_ratio": ratio,
-                                      "error": repr(exc)})
-                self.metrics.counter("maintenance.failures", group=g).inc()
-                continue
-            duration = time.monotonic() - t0
-            try:
-                swapped = batcher.swap_index(compacted, expected=snapshot)
-            except RuntimeError:
-                continue                              # engine closed mid-sweep
-            if swapped:
-                self._quarantine.pop(g, None)
-                applied += 1
-                self.events.append({
-                    "group": g,
-                    "tombstone_ratio": ratio,
-                    "n_ids": snapshot.n_ids,
-                    "duration_s": duration,
-                })
-                self.metrics.counter("maintenance.compactions",
-                                     group=g).inc()
-                self.metrics.histogram(
-                    "maintenance.compact.duration_s").observe(duration)
-                self._commit(g, compacted)
+            plan = None
+            if self.merge_policy is not None:
+                sel = self.merge_policy.select(snapshot)
+                if sel is not None:
+                    plan = {"kind": "merge", **sel}
+            if plan is None:
+                ratio = getattr(snapshot, "tombstone_ratio", 0.0)
+                if ratio > self.threshold:
+                    plan = {"kind": "compact", "tombstone_ratio": ratio}
+            if plan is not None:
+                plans.append((g, batcher, snapshot, plan))
+        if not plans:
+            return 0
+        if len(plans) == 1:
+            return self._apply(*plans[0])
+        with ThreadPoolExecutor(max_workers=len(plans)) as ex:
+            return sum(ex.map(lambda p: self._apply(*p), plans))
+
+    def _apply(self, g: int, batcher, snapshot, plan: dict) -> int:
+        """Run one planned pass: rebuild outside the engine lock, install
+        via CAS, record, commit.  Returns 1 if the pass was applied."""
+        kind = plan["kind"]
+        t0 = time.monotonic()
+        try:
+            if kind == "merge":
+                rebuilt = snapshot.merge_segments(plan["start"],
+                                                  plan["count"])
+            else:
+                rebuilt = snapshot.compact()          # outside the lock
+        except Exception as exc:  # noqa: BLE001 - recorded, not fatal
+            # a failing on-device rebuild (OOM, compile error) must not
+            # kill maintenance for the healthy groups -- log it and
+            # quarantine the snapshot instead of silently retrying the
+            # same expensive failure every tick
+            self._quarantine[g] = snapshot
+            entry = {"group": g, "kind": kind, "error": repr(exc)}
+            if kind == "compact":
+                entry["tombstone_ratio"] = plan["tombstone_ratio"]
+            self.failures.append(entry)
+            self.metrics.counter("maintenance.failures", group=g).inc()
+            return 0
+        duration = time.monotonic() - t0
+        try:
+            swapped = batcher.swap_index(rebuilt, expected=snapshot)
+        except RuntimeError:
+            return 0                                  # engine closed mid-sweep
+        if not swapped:
             # CAS miss: an ingest/delete raced the rebuild -- the next
             # sweep re-evaluates the fresh index
-        return applied
+            return 0
+        self._quarantine.pop(g, None)
+        if kind == "merge":
+            run = snapshot.segments[plan["start"]:plan["start"]
+                                    + plan["count"]]
+            reclaimed = sum(s.tombstones for s in run)
+            self.merge_events.append({
+                "group": g,
+                "start": plan["start"],
+                "count": plan["count"],
+                "reason": plan["reason"],
+                "reclaimed": reclaimed,
+                "n_segments": len(rebuilt.segments),
+                "duration_s": duration,
+            })
+            self.metrics.counter("maintenance.merges", group=g).inc()
+            self.metrics.counter("maintenance.merge.reclaimed",
+                                 group=g).inc(reclaimed)
+            self.metrics.histogram(
+                "maintenance.merge.duration_s").observe(duration)
+        else:
+            self.events.append({
+                "group": g,
+                "tombstone_ratio": plan["tombstone_ratio"],
+                "n_ids": snapshot.n_ids,
+                "duration_s": duration,
+            })
+            self.metrics.counter("maintenance.compactions", group=g).inc()
+            self.metrics.histogram(
+                "maintenance.compact.duration_s").observe(duration)
+        self._commit(g, rebuilt)
+        return 1
 
     def _commit(self, g: int, compacted) -> None:
         """Roll a commit point for the state that won the CAS (the ES

@@ -118,6 +118,10 @@ class _FailpointIndex:
     def compact(self):
         return _FailpointIndex(self.inner.compact(), self._cell)
 
+    def merge_segments(self, start: int = 0, count=None):
+        return _FailpointIndex(self.inner.merge_segments(start, count),
+                               self._cell)
+
     def __getattr__(self, name):
         return getattr(self.inner, name)
 
@@ -222,6 +226,9 @@ class ClusterEngine:
                 probe_interval_s=probe_s,
                 health=self.health, store=store,
                 probe=probe_s is not None,
+                # probe-only daemons (auto_compact=None) must not start
+                # background merges either -- maintenance work is opt-in
+                merge_policy=("auto" if auto_compact is not None else None),
                 metrics=self.metrics).start()
 
     # ------------------------------------------------------------ topology

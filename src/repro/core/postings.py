@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["Postings", "build_postings", "lookup", "idf_weights",
-           "score_postings", "code_df"]
+           "score_postings", "code_df", "df_lookup"]
 
 
 class Postings(NamedTuple):
@@ -80,6 +80,21 @@ def code_df(codes: jnp.ndarray, qcodes: jnp.ndarray) -> jnp.ndarray:
     """
     return jnp.sum(qcodes[:, None, :] == codes[None, :, :], axis=1,
                    dtype=jnp.int32)
+
+
+def df_lookup(postings: Postings, qcodes: jnp.ndarray) -> jnp.ndarray:
+    """Batched document frequencies straight off the posting lists.
+
+    qcodes: (Q, C) -> (Q, C) int32; per token the count is ``hi - lo`` of
+    :func:`lookup`'s range.  Integer-exact and therefore bit-identical to
+    :func:`code_df` over the same code matrix (tombstones and padding carry
+    the sentinel, which sorts past every legal range), but O(log d) per
+    token instead of O(d) -- the df path sealed append segments switch to
+    once they carry their own mini posting tables
+    (:class:`repro.dist.shard_index.Segment`).
+    """
+    lo, hi = jax.vmap(lambda c: lookup(postings, c))(qcodes)
+    return (hi - lo).astype(jnp.int32)
 
 
 def idf_weights(df: jnp.ndarray, n_docs: int) -> jnp.ndarray:

@@ -59,14 +59,27 @@ like search does.  :meth:`from_index` (partitioning an existing
 single-device index) likewise rebuilds the per-shard posting lists in one
 SPMD program; neither path loops over shards on the host.
 
-**Incremental ingest** (ES segment semantics):
+**Incremental ingest** (the full Lucene segment story):
 
-* :meth:`add_documents` appends new docs to per-shard *append segments*
-  (round-robin shard routing, monotonically growing global ids starting at
-  ``n_docs``).  Segments carry codes but no posting lists; their phase-1
-  scores come from a direct per-column bucket-equality match (the same
-  score every engine computes) and their df joins the global psum through
-  :func:`repro.core.postings.code_df`.
+* :meth:`add_documents` appends new docs to a per-shard *active append
+  buffer* (round-robin shard routing, monotonically growing global ids
+  starting at ``n_docs``).  The buffer carries codes but no posting lists;
+  its phase-1 scores come from a direct per-column bucket-equality match
+  (the same score every engine computes) and its df joins the global psum
+  through :func:`repro.core.postings.code_df`.
+* Once the buffer reaches ``seal_threshold`` rows it SEALS into an
+  immutable :class:`Segment` (a Lucene segment/generation): truncated to
+  its exact width, with its own mini posting table for O(log G) df
+  lookups, and a fresh active buffer opens.  Search scores base + N sealed
+  generations + the active buffer under ONE jitted SPMD program with
+  per-generation live masks -- candidate order is append order per shard,
+  which keeps results bit-identical to the flat single-buffer path at
+  every (k, page).
+* :meth:`merge_segments` is the Lucene background merge: a contiguous run
+  of sealed generations re-packs into one (tombstoned rows dropped and
+  reclaimed, ids and vector bits preserved) -- the operation the cluster
+  tier's ``TieredMergePolicy`` schedules off the query path, demoting full
+  :meth:`compact` to a delete-pressure last resort.
 * :meth:`delete` marks docs dead: the per-doc ``live`` mask goes False,
   the doc's codes become the sentinel, and the affected shards' posting
   lists are rebuilt in the same one-program SPMD argsort the build uses --
@@ -125,13 +138,13 @@ from repro.core.encoding import Encoder, RoundingEncoder
 from repro.core.filtering import (BestFilter, TrimFilter, expand_mask,
                                   feature_mask, index_best_codes)
 from repro.core.postings import (Postings, build_postings, code_df,
-                                 idf_weights, lookup)
+                                 df_lookup, idf_weights)
 from repro.core.rerank import normalize
 from repro.core.search import _SENTINEL, VectorIndex, phase1_engine_scores
 
 from .sharding import DATA_AXIS, REPLICA_AXIS
 
-__all__ = ["ShardedVectorIndex"]
+__all__ = ["ShardedVectorIndex", "Segment", "DEFAULT_SEAL_THRESHOLD"]
 
 
 def _put(mesh: Mesh, x, spec: P):
@@ -140,6 +153,66 @@ def _put(mesh: Mesh, x, spec: P):
 
 _ROW = P(DATA_AXIS, None, None)
 _VEC = P(DATA_AXIS, None)
+
+# Active append buffers seal into an immutable Segment once they reach this
+# many rows.  Below it a direct per-column bucket match over the buffer is
+# cheaper than maintaining posting lists; past it the segment gets its own
+# mini posting table for O(log G) df lookups.  None disables sealing (the
+# pre-generational flat behaviour, which the parity tests pin against).
+DEFAULT_SEAL_THRESHOLD = 256
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Segment:
+    """One immutable sealed generation of appended docs (a Lucene segment).
+
+    Sealed off the active append buffer once it outgrows the direct-match
+    threshold: rows are truncated to their exact round-robin width and the
+    segment gets its own mini posting table (the same one-program SPMD
+    argsort the base build uses), so its document frequencies come from
+    O(log G) posting-range lookups instead of an O(G * C) dense count.
+    Phase-1 *scores* stay the direct bucket-equality match -- the identity
+    every engine lowers to -- which is what keeps segmented search
+    bit-identical to the flat append path at every (k, page).
+
+    Segments are immutable in the Lucene sense: the only mutations are
+    tombstoning through :meth:`ShardedVectorIndex.delete` (live -> False,
+    sentinel codes, mini postings rebuilt so df stays exact) and wholesale
+    replacement by :meth:`ShardedVectorIndex.merge_segments`.  ``n_rows``
+    and ``tombstones`` are host-side ints (never cross jit) feeding the
+    tiered merge policy's per-segment deleted-doc ratios.
+    """
+
+    vectors: jnp.ndarray     # (S, G, n) f32 unit rows; zero rows pad
+    codes: jnp.ndarray       # (S, G, C) int; sentinel = dead/padding
+    gids: jnp.ndarray        # (S, G) int32 global ids; -1 = padding
+    live: jnp.ndarray        # (S, G) bool
+    post_docs: jnp.ndarray   # (S, C, G) int32 mini posting order
+    post_codes: jnp.ndarray  # (S, C, G) sorted codes per shard
+    n_rows: int              # rows holding a doc (live or tombstoned)
+    tombstones: int          # dead rows among n_rows
+
+    def tree_flatten(self):
+        children = (self.vectors, self.codes, self.gids, self.live,
+                    self.post_docs, self.post_codes)
+        return children, (self.n_rows, self.tombstones)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def width(self) -> int:
+        """Per-shard slot width (= ceil(n_rows / n_shards) at seal/merge)."""
+        return self.vectors.shape[1]
+
+    @property
+    def deleted_ratio(self) -> float:
+        """Dead fraction of this segment's rows -- the per-segment signal
+        the tiered merge policy consults (the whole-index
+        ``tombstone_ratio`` can't see which generation the deletes hit)."""
+        return self.tombstones / max(self.n_rows, 1)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -161,26 +234,31 @@ class ShardedVectorIndex:
     post_codes: jnp.ndarray   # (S, C, dp) sorted codes per shard
     offsets: jnp.ndarray      # (S,) int32 global id of each shard's doc 0
     live: jnp.ndarray         # (S, dp) bool -- False = pad or tombstone
-    seg_vectors: jnp.ndarray  # (S, G, n) f32 append-segment vectors
+    seg_vectors: jnp.ndarray  # (S, G, n) f32 ACTIVE append-buffer vectors
     seg_codes: jnp.ndarray    # (S, G, C) int; sentinel = empty/tombstone
     seg_gids: jnp.ndarray     # (S, G) int32 global ids; -1 = never used
     seg_live: jnp.ndarray     # (S, G) bool
+    segments: Tuple[Segment, ...]  # sealed generations, oldest first
     encoder: Encoder
     mesh: Mesh
     n_docs: int               # base id-space size (compaction folds segs in)
     index_best: Optional[int]
     n_appended: int = 0       # docs ever appended since the last compact
     shard_tombstones: Tuple[int, ...] = ()  # per-shard uncompacted deletes
+    seal_threshold: Optional[int] = DEFAULT_SEAL_THRESHOLD
+    seg_base: int = 0         # append counter at the active buffer's start
+    active_tombstones: int = 0  # dead rows in the active buffer
 
     # -- pytree plumbing (mesh/encoder/sizes are static metadata) ----------
     def tree_flatten(self):
         children = (self.vectors, self.codes, self.post_docs,
                     self.post_codes, self.offsets, self.live,
                     self.seg_vectors, self.seg_codes, self.seg_gids,
-                    self.seg_live)
+                    self.seg_live, self.segments)
         return children, (self.encoder, self.mesh, self.n_docs,
                           self.index_best, self.n_appended,
-                          self.shard_tombstones)
+                          self.shard_tombstones, self.seal_threshold,
+                          self.seg_base, self.active_tombstones)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -207,7 +285,7 @@ class ShardedVectorIndex:
 
     @property
     def seg_capacity(self) -> int:
-        """Append-segment slots per shard (0 = no ingest since build)."""
+        """ACTIVE append-buffer slots per shard (0 = no open buffer)."""
         return self.seg_vectors.shape[1]
 
     @property
@@ -219,6 +297,27 @@ class ShardedVectorIndex:
     def n_tombstones(self) -> int:
         """Docs deleted since the last compaction (whole index)."""
         return sum(self.shard_tombstones)
+
+    @property
+    def n_segments(self) -> int:
+        """Sealed generations currently serving alongside the base."""
+        return len(self.segments)
+
+    @property
+    def n_active(self) -> int:
+        """Docs in the active (unsealed) append buffer."""
+        return self.n_appended - self.seg_base
+
+    @property
+    def segment_rows(self) -> int:
+        """Rows held by sealed segments (tombstoned rows included)."""
+        return sum(s.n_rows for s in self.segments)
+
+    @property
+    def n_reclaimed(self) -> int:
+        """Appended rows dropped by segment merges since the last compact
+        (they no longer occupy slots anywhere; their ids stay retired)."""
+        return self.n_appended - self.n_active - self.segment_rows
 
     @staticmethod
     def _seg_slots_used(n_appended: int, ns: int) -> np.ndarray:
@@ -236,7 +335,13 @@ class ShardedVectorIndex:
         routing, so no device readback."""
         ns, dp = self.n_shards, self.docs_per_shard
         base = np.clip(self.n_docs - np.arange(ns) * dp, 0, dp)
-        return base + self._seg_slots_used(self.n_appended, ns)
+        app = self._seg_slots_used(self.n_active, ns)
+        for s in self.segments:
+            # each generation is round-robin within itself (sealed buffers
+            # by construction, merged segments by re-packing), so the same
+            # occupancy formula applies per segment
+            app = app + self._seg_slots_used(s.n_rows, ns)
+        return base + app
 
     @property
     def tombstone_ratio(self) -> float:
@@ -296,6 +401,12 @@ class ShardedVectorIndex:
             seg_codes=put(self.seg_codes, _ROW),
             seg_gids=put(self.seg_gids, _VEC),
             seg_live=put(self.seg_live, _VEC),
+            segments=tuple(
+                Segment(put(s.vectors, _ROW), put(s.codes, _ROW),
+                        put(s.gids, _VEC), put(s.live, _VEC),
+                        put(s.post_docs, _ROW), put(s.post_codes, _ROW),
+                        s.n_rows, s.tombstones)
+                for s in self.segments),
         )
 
     # -------------------------------------------------------- introspection
@@ -310,9 +421,10 @@ class ShardedVectorIndex:
         q = normalize(jnp.atleast_2d(jnp.asarray(queries, jnp.float32)))
         qcodes = self.encoder.encode(q)
         seg = self.seg_capacity > 0
+        sealed = tuple((s.post_docs, s.post_codes) for s in self.segments)
         return _token_df_program(
             self.post_docs, self.post_codes,
-            self.seg_codes if seg else None, qcodes, mesh=self.mesh)
+            self.seg_codes if seg else None, sealed, qcodes, mesh=self.mesh)
 
     # ----------------------------------------------------------------- build
     @classmethod
@@ -349,6 +461,7 @@ class ShardedVectorIndex:
         index_best: Optional[int] = None,
         *,
         live=None,
+        seal_threshold: Optional[int] = DEFAULT_SEAL_THRESHOLD,
     ) -> "ShardedVectorIndex":
         """Build the index ON the mesh: one compiled SPMD program runs
         normalize -> encode -> ``index_best`` masking -> ``build_postings``
@@ -391,6 +504,7 @@ class ShardedVectorIndex:
             mesh=mesh,
             n_docs=n,
             index_best=index_best,
+            seal_threshold=seal_threshold,
             **cls._segments_kw(mesh, ns, n_feat, codes),
         )
 
@@ -399,10 +513,12 @@ class ShardedVectorIndex:
         sv, sc, sg, sl = cls._empty_segments(mesh, ns, n_feat,
                                              codes.shape[-1], codes.dtype)
         return {"seg_vectors": sv, "seg_codes": sc, "seg_gids": sg,
-                "seg_live": sl}
+                "seg_live": sl, "segments": ()}
 
     @classmethod
-    def from_index(cls, index: VectorIndex, mesh: Mesh) -> "ShardedVectorIndex":
+    def from_index(cls, index: VectorIndex, mesh: Mesh, *,
+                   seal_threshold: Optional[int] = DEFAULT_SEAL_THRESHOLD,
+                   ) -> "ShardedVectorIndex":
         """Partition an existing single-device index across ``mesh``'s
         ``data`` axis (contiguous ranges, ES-style doc-sharding).  The
         per-shard posting lists are rebuilt in ONE compiled SPMD program
@@ -446,6 +562,7 @@ class ShardedVectorIndex:
             mesh=mesh,
             n_docs=n,
             index_best=index.index_best,
+            seal_threshold=seal_threshold,
             **cls._segments_kw(mesh, ns, n_feat, codes),
         )
 
@@ -487,11 +604,14 @@ class ShardedVectorIndex:
             codes = index_best_codes(v, codes, self.index_best, sentinel)
 
         ns, G = self.n_shards, self.seg_capacity
-        # routing is strictly round-robin on the global append counter, so
-        # per-shard slot usage is a pure function of n_appended (tombstones
-        # keep their slot) -- no device readback on the hot ingest path
-        used = self._seg_slots_used(self.n_appended, ns)
-        shard_of = (self.n_appended + np.arange(m)) % ns
+        # routing is strictly round-robin on the ACTIVE buffer's local
+        # counter (n_appended - seg_base), so per-shard slot usage is a
+        # pure function of the append history (tombstones keep their slot)
+        # -- no device readback on the hot ingest path.  With no sealed
+        # generations (seg_base == 0) this is the original global formula.
+        n_act = self.n_active
+        used = self._seg_slots_used(n_act, ns)
+        shard_of = (n_act + np.arange(m)) % ns
         slot_of = used[shard_of] + np.arange(m) // ns
         need = int(slot_of.max()) + 1
         gids = (self.n_ids + np.arange(m)).astype(np.int32)
@@ -515,7 +635,7 @@ class ShardedVectorIndex:
             sliv = jnp.concatenate(
                 [sliv, jnp.zeros((ns, grow), bool)], axis=1)
         sh, sl = jnp.asarray(shard_of), jnp.asarray(slot_of)
-        return dataclasses.replace(
+        out = dataclasses.replace(
             self,
             seg_vectors=_put(self.mesh, svec.at[sh, sl].set(v), _ROW),
             seg_codes=_put(self.mesh,
@@ -526,6 +646,40 @@ class ShardedVectorIndex:
             seg_live=_put(self.mesh, sliv.at[sh, sl].set(True), _VEC),
             n_appended=self.n_appended + m,
         )
+        if (out.seal_threshold is not None
+                and out.n_active >= out.seal_threshold):
+            out = out._seal_active()
+        return out
+
+    def _seal_active(self) -> "ShardedVectorIndex":
+        """Seal the active append buffer into an immutable :class:`Segment`.
+
+        The buffer is truncated to its exact round-robin width, gets its
+        own mini posting table (the same one-program SPMD argsort the base
+        build and :meth:`delete` use), and joins ``segments``; the next
+        :meth:`add_documents` opens a fresh active buffer whose geometric
+        growth ladder restarts from empty.  A pure function of the op
+        history, so translog replay re-seals at identical boundaries.
+        """
+        ns = self.n_shards
+        n_act = self.n_active
+        if n_act == 0:
+            return self
+        w = int(self._seg_slots_used(n_act, ns).max())
+        svec = _put(self.mesh, self.seg_vectors[:, :w], _ROW)
+        scod = _put(self.mesh, self.seg_codes[:, :w], _ROW)
+        sgid = _put(self.mesh, self.seg_gids[:, :w], _VEC)
+        sliv = _put(self.mesh, self.seg_live[:, :w], _VEC)
+        pdocs, pcodes = _postings_program(scod, mesh=self.mesh)
+        seg = Segment(svec, scod, sgid, sliv, pdocs, pcodes,
+                      n_rows=n_act, tombstones=self.active_tombstones)
+        ev, ec, eg, el = self._empty_segments(
+            self.mesh, ns, self.n_features, self.codes.shape[-1],
+            self.codes.dtype)
+        return dataclasses.replace(
+            self, segments=self.segments + (seg,),
+            seg_vectors=ev, seg_codes=ec, seg_gids=eg, seg_live=el,
+            seg_base=self.n_appended, active_tombstones=0)
 
     def delete(self, ids) -> "ShardedVectorIndex":
         """Tombstone documents by global id -> a new index.
@@ -567,15 +721,40 @@ class ShardedVectorIndex:
             new["post_docs"], new["post_codes"] = pdocs, pcodes
         app = ids[ids >= self.n_docs]
         if app.size:
+            segs = list(self.segments)
+            seg_changed = False
+            for i, seg in enumerate(segs):
+                s, g = np.nonzero(np.isin(np.asarray(seg.gids), app))
+                if s.size == 0:
+                    continue
+                was_live = np.asarray(seg.live)[s, g]
+                np.add.at(dead, s[was_live], 1)
+                n_new = int(was_live.sum())
+                s, g = jnp.asarray(s), jnp.asarray(g)
+                codes2 = _put(self.mesh,
+                              seg.codes.at[s, g].set(sentinel), _ROW)
+                live2 = _put(self.mesh, seg.live.at[s, g].set(False), _VEC)
+                # exact df under tombstones, per generation: rebuild the
+                # segment's mini posting table so the sentinel sorts its
+                # dead rows past every legal lookup range
+                pdocs, pcodes = _postings_program(codes2, mesh=self.mesh)
+                segs[i] = Segment(seg.vectors, codes2, seg.gids, live2,
+                                  pdocs, pcodes, seg.n_rows,
+                                  seg.tombstones + n_new)
+                seg_changed = True
+            if seg_changed:
+                new["segments"] = tuple(segs)
             s, g = np.nonzero(np.isin(np.asarray(self.seg_gids), app))
-            was_live = np.asarray(self.seg_live)[s, g]
-            np.add.at(dead, s[was_live], 1)
-            s, g = jnp.asarray(s), jnp.asarray(g)
-            new["seg_live"] = _put(self.mesh,
-                                   self.seg_live.at[s, g].set(False), _VEC)
-            new["seg_codes"] = _put(self.mesh,
-                                    self.seg_codes.at[s, g].set(sentinel),
-                                    _ROW)
+            if s.size:
+                was_live = np.asarray(self.seg_live)[s, g]
+                np.add.at(dead, s[was_live], 1)
+                new["active_tombstones"] = (self.active_tombstones
+                                            + int(was_live.sum()))
+                s, g = jnp.asarray(s), jnp.asarray(g)
+                new["seg_live"] = _put(
+                    self.mesh, self.seg_live.at[s, g].set(False), _VEC)
+                new["seg_codes"] = _put(
+                    self.mesh, self.seg_codes.at[s, g].set(sentinel), _ROW)
         old = (np.asarray(self.shard_tombstones, np.int64)
                if self.shard_tombstones else np.zeros(self.n_shards, np.int64))
         new["shard_tombstones"] = tuple(int(x) for x in old + dead)
@@ -598,17 +777,109 @@ class ShardedVectorIndex:
                 [flat_v, jnp.zeros((self.n_appended, n_feat), jnp.float32)])
             table_l = jnp.concatenate(
                 [flat_l, jnp.zeros((self.n_appended,), bool)])
-            sg = self.seg_gids.reshape(-1)
-            idx = jnp.where(sg >= 0, sg, self.n_ids)     # never-used -> OOB
-            table_v = table_v.at[idx].set(
-                self.seg_vectors.reshape(-1, n_feat), mode="drop")
-            table_l = table_l.at[idx].set(
-                self.seg_live.reshape(-1), mode="drop")
+            parts = [(s.gids, s.vectors, s.live) for s in self.segments]
+            if self.seg_capacity:
+                parts.append(
+                    (self.seg_gids, self.seg_vectors, self.seg_live))
+            # gids are unique across generations; rows merged away stay
+            # unset (live False) -- their ids were already retired
+            for sgid, svec, sliv in parts:
+                sg = sgid.reshape(-1)
+                idx = jnp.where(sg >= 0, sg, self.n_ids)  # never-used -> OOB
+                table_v = table_v.at[idx].set(
+                    svec.reshape(-1, n_feat), mode="drop")
+                table_l = table_l.at[idx].set(sliv.reshape(-1), mode="drop")
         else:
             table_v, table_l = flat_v, flat_l
         return type(self).build_sharded(
             table_v, self.mesh, encoder=self.encoder,
-            index_best=self.index_best, live=table_l)
+            index_best=self.index_best, live=table_l,
+            seal_threshold=self.seal_threshold)
+
+    def merge_segments(self, start: int = 0,
+                       count: Optional[int] = None) -> "ShardedVectorIndex":
+        """Merge a contiguous run of sealed segments into one, dropping
+        tombstoned rows (Lucene's background segment merge).
+
+        Content-preserving, not a rebuild: surviving rows keep their unit
+        vectors, codes, and global ids verbatim; they are re-packed
+        round-robin in id order and the merged segment gets a fresh mini
+        posting table.  Tombstones the run carried are RECLAIMED -- the
+        per-shard ``shard_tombstones`` counters drop by exactly the dead
+        rows merged away, so ``tombstone_ratio`` keeps meaning "deletes a
+        compact could still fold".  Search results are bit-identical
+        before and after for ``page >= n_ids``: removed rows were already
+        ``-inf`` everywhere, and surviving rows keep their relative id
+        order, so candidate tie-breaks cannot shift.
+
+        Assembly is host-side gathers + ONE ``device_put`` per leaf --
+        never a scatter from replica-replicated leaves (GSPMD reassembles
+        such scatters with a double-counting cross-replica sum).
+        """
+        nseg = len(self.segments)
+        if count is None:
+            count = nseg - start
+        if nseg == 0:
+            raise ValueError("no sealed segments to merge")
+        if not (0 <= start < nseg and count >= 1 and start + count <= nseg):
+            raise ValueError(
+                f"invalid merge range [{start}, {start + count}) "
+                f"of {nseg} segments")
+        run = self.segments[start:start + count]
+        ns, n_feat = self.n_shards, self.n_features
+        C = self.codes.shape[-1]
+        sentinel = _SENTINEL[self.codes.dtype]
+
+        keep_v, keep_c, keep_g = [], [], []
+        dead_per_shard = np.zeros(ns, np.int64)
+        for seg in run:
+            sg = np.asarray(seg.gids)
+            sl = np.asarray(seg.live)
+            used = sg >= 0
+            dead_per_shard += (used & ~sl).sum(axis=1)
+            ks, kg = np.nonzero(used & sl)
+            keep_g.append(sg[ks, kg])
+            keep_v.append(np.asarray(seg.vectors)[ks, kg])
+            keep_c.append(np.asarray(seg.codes)[ks, kg])
+        gids = np.concatenate(keep_g)
+        order = np.argsort(gids, kind="stable")   # id order = append order
+        gids = gids[order]
+        vecs = np.concatenate(keep_v)[order]
+        codes = np.concatenate(keep_c)[order]
+        n_live = int(gids.size)
+
+        old = (np.asarray(self.shard_tombstones, np.int64)
+               if self.shard_tombstones else np.zeros(ns, np.int64))
+        stones = old - dead_per_shard
+        stones_t = (tuple(int(x) for x in stones) if stones.any() else ())
+
+        before, after = self.segments[:start], self.segments[start + count:]
+        if n_live == 0:
+            # every row in the run was dead: the generations just vanish
+            return dataclasses.replace(
+                self, segments=before + after, shard_tombstones=stones_t)
+
+        w = -(-n_live // ns)
+        mv = np.zeros((ns, w, n_feat), np.float32)
+        mc = np.full((ns, w, C), sentinel, dtype=self.codes.dtype)
+        mg = np.full((ns, w), -1, np.int32)
+        ml = np.zeros((ns, w), bool)
+        r = np.arange(n_live)
+        sh, sl_ = r % ns, r // ns
+        mv[sh, sl_] = vecs
+        mc[sh, sl_] = codes
+        mg[sh, sl_] = gids.astype(np.int32)
+        ml[sh, sl_] = True
+        dvec = _put(self.mesh, mv, _ROW)
+        dcod = _put(self.mesh, mc, _ROW)
+        dgid = _put(self.mesh, mg, _VEC)
+        dliv = _put(self.mesh, ml, _VEC)
+        pdocs, pcodes = _postings_program(dcod, mesh=self.mesh)
+        merged = Segment(dvec, dcod, dgid, dliv, pdocs, pcodes,
+                         n_rows=n_live, tombstones=0)
+        return dataclasses.replace(
+            self, segments=before + (merged,) + after,
+            shard_tombstones=stones_t)
 
     # ------------------------------------------------------------------ search
     def search(
@@ -659,7 +930,8 @@ class ShardedVectorIndex:
         queries = jnp.atleast_2d(queries)
         page = min(page, self.n_ids)
         k = min(k, page)
-        page_loc = min(page, self.docs_per_shard + self.seg_capacity)
+        page_loc = min(page, self.docs_per_shard + self.seg_capacity
+                       + sum(s.width for s in self.segments))
 
         # round-robin over the LIVE replica groups: the batch splits along
         # the replica axis, so pad it to U row-blocks and place block j in
@@ -689,6 +961,9 @@ class ShardedVectorIndex:
         L = self.docs_per_shard if max_postings is None \
             else min(max_postings, self.docs_per_shard)
         seg = self.seg_capacity > 0
+        sealed = tuple(
+            (s.vectors, s.codes, s.gids, s.live, s.post_docs, s.post_codes)
+            for s in self.segments)
         gids, scores = _query_phase(
             self.vectors, self.codes, self.post_docs, self.post_codes,
             self.offsets, self.live,
@@ -696,6 +971,7 @@ class ShardedVectorIndex:
             self.seg_codes if seg else None,
             self.seg_gids if seg else None,
             self.seg_live if seg else None,
+            sealed,
             q, qcodes, mask, jnp.asarray(self.n_ids, jnp.int32),
             mesh=self.mesh, max_abs_bucket=self.encoder.max_abs_bucket,
             page_loc=page_loc, engine=engine, weighting=weighting,
@@ -777,11 +1053,15 @@ def _merge_phase(sidx, gids, scores, q, *, k):
     Result slots whose merged score is -inf (fewer than k live candidates)
     report id -1 and keep score -inf through the rescore.
     """
-    if sidx.n_appended:
+    seg_parts = tuple((s.vectors, s.gids) for s in sidx.segments)
+    if sidx.n_appended and sidx.seg_capacity:
+        seg_parts += ((sidx.seg_vectors, sidx.seg_gids),)
+    if seg_parts:
         top_ids, cvec = _merge_select_seg(
-            sidx.vectors, sidx.seg_vectors, sidx.seg_gids, gids, scores,
-            k=k, n_docs=sidx.n_docs)
+            sidx.vectors, seg_parts, gids, scores, k=k, n_docs=sidx.n_docs)
     else:
+        # no appended rows anywhere (fresh index, or every appended row was
+        # merged away dead): candidates are base gids only
         top_ids, cvec = _merge_select(sidx.vectors, gids, scores, k=k)
     dev = jax.devices()[0]
     return top_ids, _rescore(jax.device_put(cvec, dev),
@@ -800,28 +1080,36 @@ def _merge_select(vectors, gids, scores, *, k):
 
 
 @partial(jax.jit, static_argnames=("k", "n_docs"))
-def _merge_select_seg(vectors, seg_vectors, seg_gids, gids, scores, *, k,
-                      n_docs):
-    """Merge select over base + append segments.
+def _merge_select_seg(vectors, seg_parts, gids, scores, *, k, n_docs):
+    """Merge select over base + appended generations.
 
-    Pure gathers only (no scatter): base hits fetch from the flat base by
-    gid = flat row; appended hits (gid >= ``n_docs``) resolve their segment
-    slot by gid equality (gids are unique across segments) and fetch from
-    the flattened segment rows.  Scatter-built lookup tables are unsafe
-    here -- on a replicated ``(data, replica)`` layout GSPMD reassembles a
+    ``seg_parts`` is a tuple of ``(vectors (S, G, n), gids (S, G))`` pairs
+    -- the sealed segments plus the active buffer.  Pure gathers only (no
+    scatter): base hits fetch from the flat base by gid = flat row;
+    appended hits (gid >= ``n_docs``) resolve their slot by gid equality
+    within each generation (gids are unique across generations) and fold
+    in with a ``where``.  Scatter-built lookup tables are unsafe here --
+    on a replicated ``(data, replica)`` layout GSPMD reassembles a
     scattered table with a cross-replica sum that double-counts the base
-    rows; gathers have no such reduction and stay exact.
+    rows.  The fold is PER generation on purpose: concatenating two
+    generations' (data-sharded, replica-replicated) leaves and gathering
+    from the concatenation miscompiles the same way on a replica mesh
+    (the gathered row comes back as a cross-replica combination that
+    matches no source row), while single-layout gathers stay exact.
     """
     top_s, pos = jax.lax.top_k(scores, k)
     top_ids = jnp.take_along_axis(gids, pos, axis=1)
     top_ids = jnp.where(jnp.isneginf(top_s), -1, top_ids)
     n_feat = vectors.shape[-1]
     flat = vectors.reshape(-1, n_feat)              # rows [0, S*dp)
-    base = flat[jnp.clip(top_ids, 0, flat.shape[0] - 1)]
-    sg = seg_gids.reshape(-1)
-    slot = jnp.argmax(top_ids[:, :, None] == sg[None, None, :], axis=-1)
-    segv = seg_vectors.reshape(-1, n_feat)[slot]
-    cvec = jnp.where((top_ids >= n_docs)[..., None], segv, base)
+    cvec = flat[jnp.clip(top_ids, 0, flat.shape[0] - 1)]
+    for v, g in seg_parts:
+        sg = g.reshape(-1)
+        sv = v.reshape(-1, n_feat)
+        match = top_ids[:, :, None] == sg[None, None, :]
+        slot = jnp.argmax(match, axis=-1)
+        found = match.any(axis=-1)
+        cvec = jnp.where(found[..., None], sv[slot], cvec)
     return top_ids, cvec                            # (Q, k, n) hit vectors
 
 
@@ -838,7 +1126,7 @@ def _rescore(cvec, q, top_ids):
                                    "engine", "weighting", "max_postings",
                                    "k", "merge"))
 def _query_phase(vectors, codes, post_docs, post_codes, offsets, live,
-                 seg_vectors, seg_codes, seg_gids, seg_live,
+                 seg_vectors, seg_codes, seg_gids, seg_live, sealed,
                  q, qcodes, mask, n_ids, *, mesh, max_abs_bucket, page_loc,
                  engine, weighting, max_postings, k, merge):
     """Per-shard query phase under shard_map -> merge-ready candidates.
@@ -852,39 +1140,52 @@ def _query_phase(vectors, codes, post_docs, post_codes, offsets, live,
     batch additionally splits along ``replica`` (Q/R rows per group) and
     reassembles in the out-spec.
 
-    With append segments (``seg_* is not None``) each shard scores its
-    segment rows by direct per-column bucket equality -- the same score
-    every engine computes -- and folds them into the local candidate page;
-    their df joins the global psum via ``code_df``.  A fresh index
-    (no segments) compiles the exact pre-ingest program.
+    Appended docs live in generations: ``sealed`` is a tuple of
+    ``(vectors, codes, gids, live, post_docs, post_codes)`` leaf-tuples --
+    one per sealed :class:`Segment` -- and ``seg_*`` is the active append
+    buffer (``None`` when empty).  Every generation scores by direct
+    per-column bucket equality (the identity every engine lowers to, which
+    is what pins bit-parity with the flat path), but *df* comes from each
+    sealed segment's mini posting table (``df_lookup``, integer-exact and
+    equal to the dense count) while the active buffer still uses
+    ``code_df``.  Candidate order is base, then generations oldest-first,
+    then the active buffer -- per shard that is exactly append order, the
+    same tie-break order as the flat buffer, so ``top_k`` stability makes
+    the candidate pages match the pre-generational program bit for bit.
 
     Takes leaves, not the index pytree, and the id-space size ``n_ids`` as
     a TRACED scalar: repeated ingest batches that stay within the segment
     capacity then hit this jit's cache (same shapes, same treedef) instead
-    of recompiling the SPMD program per ``add_documents``.
+    of recompiling the SPMD program per ``add_documents``; seals and
+    merges change the treedef and recompile O(maintenance events) times.
     """
     from .shmap import shard_map
 
     dp = vectors.shape[1]
     G = 0 if seg_vectors is None else seg_vectors.shape[1]
     n_shards = vectors.shape[0]
+    n_sealed = len(sealed)
+    widths = tuple(t[0].shape[1] for t in sealed)
 
     def local(*args):
+        vec, codes, pdocs, pcodes, off, lv = args[:6]
+        rest = args[6:]
         if G:
-            (vec, codes, pdocs, pcodes, off, lv,
-             svec, scod, sgid, sliv, q, qcodes, mask, n_ids) = args
-            svec, scod = svec[0], scod[0]
-            sgid, sliv = sgid[0], sliv[0]
-        else:
-            (vec, codes, pdocs, pcodes, off, lv,
-             q, qcodes, mask, n_ids) = args
+            svec, scod, sgid, sliv = (x[0] for x in rest[:4])
+            rest = rest[4:]
+        segs = [tuple(x[0] for x in rest[i * 6:(i + 1) * 6])
+                for i in range(n_sealed)]
+        q, qcodes, mask, n_ids = rest[n_sealed * 6:]
         vec, codes, lv = vec[0], codes[0], lv[0]
         postings = Postings(pdocs[0], pcodes[0], dp)
         off = off[0]
 
         if weighting == "idf":
-            lo, hi = jax.vmap(lambda c: lookup(postings, c))(qcodes)
-            df = hi - lo
+            df = df_lookup(postings, qcodes)
+            for i, (_, _, _, _, spd, spc) in enumerate(segs):
+                # sealed generations answer df off their mini posting
+                # lists: integer-equal to the dense code_df count, O(log G)
+                df = df + df_lookup(Postings(spd, spc, widths[i]), qcodes)
             if G:
                 df = df + code_df(scod, qcodes)
             df = jax.lax.psum(df, DATA_AXIS)        # global df, integer-exact
@@ -895,32 +1196,45 @@ def _query_phase(vectors, codes, post_docs, post_codes, offsets, live,
             raise ValueError(f"unknown weighting {weighting!r}")
         w = jnp.where(mask, w, 0.0)
 
+        def seg_scores(sc, sl):
+            # generation phase 1: direct bucket-equality match (the
+            # identity every engine lowers); sentinel slots never match
+            # but mask them anyway -- liveness must not hinge on codes
+            eq = (qcodes[:, None, :] == sc[None, :, :]).astype(jnp.int8)
+            s_seg = jnp.einsum("qgc,qc->qg", eq, w,
+                               preferred_element_type=jnp.float32)
+            return jnp.where(sl[None, :], s_seg, -jnp.inf)
+
         s1 = phase1_engine_scores(codes, postings, qcodes, w, engine,
                                   max_postings, max_abs_bucket)
         s1 = jnp.where(lv[None, :], s1, -jnp.inf)   # pads/tombstones out
+        parts = [s1]
+        parts += [seg_scores(sc_, sl_) for _, sc_, _, sl_, _, _ in segs]
         if G:
-            # segment phase 1: direct bucket-equality match (the identity
-            # every engine lowers); sentinel slots never match but mask
-            # them anyway -- liveness must not hinge on code values
-            eq = (qcodes[:, None, :] == scod[None, :, :]).astype(jnp.int8)
-            s_seg = jnp.einsum("qgc,qc->qg", eq, w,
-                               preferred_element_type=jnp.float32)
-            s1 = jnp.concatenate(
-                [s1, jnp.where(sliv[None, :], s_seg, -jnp.inf)], axis=1)
+            parts.append(seg_scores(scod, sliv))
+        s1 = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
         _, cand = jax.lax.top_k(s1, page_loc)       # (Q, page_loc)
 
-        if G:
-            vec_all = jnp.concatenate([vec, svec], axis=0)
-            live_all = jnp.concatenate([lv, sliv])
-            gid_all = jnp.concatenate(
-                [off + jnp.arange(dp, dtype=jnp.int32), sgid])
+        if segs or G:
+            vparts = [vec] + [t[0] for t in segs]
+            lparts = [lv] + [t[3] for t in segs]
+            gparts = ([off + jnp.arange(dp, dtype=jnp.int32)]
+                      + [t[2] for t in segs])
+            if G:
+                vparts.append(svec)
+                lparts.append(sliv)
+                gparts.append(sgid)
+            vec_all = jnp.concatenate(vparts, axis=0)
+            live_all = jnp.concatenate(lparts)
+            gid_all = jnp.concatenate(gparts)
         else:
             vec_all, live_all = vec, lv
         cvec = vec_all[cand]                        # (Q, page_loc, n)
         s2 = jnp.einsum("qpn,qn->qp", cvec, q,
                         preferred_element_type=jnp.float32)
         s2 = jnp.where(live_all[cand], s2, -jnp.inf)
-        gid = gid_all[cand] if G else (cand + off).astype(jnp.int32)
+        gid = (gid_all[cand] if (segs or G)
+               else (cand + off).astype(jnp.int32))
         if merge == "gather":
             return gid, s2
         return _stream_merge_local(gid, s2, n_shards, k)
@@ -932,6 +1246,9 @@ def _query_phase(vectors, codes, post_docs, post_codes, offsets, live,
     if G:
         args += [seg_vectors, seg_codes, seg_gids, seg_live]
         specs += [_ROW, _ROW, _VEC, _VEC]
+    for sv_, sc_, sg_, sl_, spd_, spc_ in sealed:
+        args += [sv_, sc_, sg_, sl_, spd_, spc_]
+        specs += [_ROW, _ROW, _VEC, _VEC, _ROW, _ROW]
     args += [q, qcodes, mask, n_ids]
     specs += [P(qaxis, None)] * 3 + [P()]
     out = P(qaxis, DATA_AXIS) if merge == "gather" else P(qaxis, None)
@@ -1013,30 +1330,43 @@ def _max_df_program(post_codes, *, mesh, sentinel):
 
 
 @partial(jax.jit, static_argnames=("mesh",))
-def _token_df_program(post_docs, post_codes, seg_codes, qcodes, *, mesh):
+def _token_df_program(post_docs, post_codes, seg_codes, sealed, qcodes, *,
+                      mesh):
     """Global per-token df, the query phase's idf input verbatim: per-shard
-    postings range lookup plus segment code match, psum over ``data``.
-    Queries are replicated (df is identical in every replica group)."""
+    postings range lookup (base + each sealed generation's mini posting
+    table) plus the active buffer's code match, psum over ``data``.
+    ``sealed`` is a tuple of (post_docs, post_codes) pairs.  Queries are
+    replicated (df is identical in every replica group)."""
     from .shmap import shard_map
 
     dp = post_codes.shape[-1]
     G = seg_codes is not None
+    n_sealed = len(sealed)
+    widths = tuple(pc.shape[-1] for _, pc in sealed)
 
     def local(*args):
+        pd, pc = args[0], args[1]
+        rest = args[2:]
         if G:
-            pd, pc, sc, qc = args
-            sc = sc[0]
-        else:
-            pd, pc, qc = args
-        postings = Postings(pd[0], pc[0], dp)
-        lo, hi = jax.vmap(lambda c: lookup(postings, c))(qc)
-        df = hi - lo
+            sc = rest[0][0]
+            rest = rest[1:]
+        seg_posts = [(rest[2 * i][0], rest[2 * i + 1][0])
+                     for i in range(n_sealed)]
+        qc = rest[2 * n_sealed]
+        df = df_lookup(Postings(pd[0], pc[0], dp), qc)
+        for i, (spd, spc) in enumerate(seg_posts):
+            df = df + df_lookup(Postings(spd, spc, widths[i]), qc)
         if G:
             df = df + code_df(sc, qc)
         return jax.lax.psum(df, DATA_AXIS)
 
-    args = [post_docs, post_codes] + ([seg_codes] if G else []) + [qcodes]
-    specs = [_ROW, _ROW] + ([_ROW] if G else []) + [P(None, None)]
+    args = [post_docs, post_codes] + ([seg_codes] if G else [])
+    specs = [_ROW, _ROW] + ([_ROW] if G else [])
+    for spd_, spc_ in sealed:
+        args += [spd_, spc_]
+        specs += [_ROW, _ROW]
+    args += [qcodes]
+    specs += [P(None, None)]
     fn = shard_map(local, mesh=mesh, in_specs=tuple(specs),
                    out_specs=P(None, None), check=False)
     return fn(*args)

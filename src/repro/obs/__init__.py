@@ -42,13 +42,13 @@ asserts the counters reconcile.
 
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       default_registry)
-from .stats import (cluster_stats, engine_stats, format_stats_line,
-                    index_stats, store_stats)
+from .stats import (cluster_stats, engine_stats, format_segments_line,
+                    format_stats_line, index_stats, store_stats)
 from .tracing import NULL_TRACE, Span, Trace, Tracer, annotation
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "default_registry",
     "Span", "Trace", "Tracer", "NULL_TRACE", "annotation",
     "index_stats", "engine_stats", "cluster_stats", "store_stats",
-    "format_stats_line",
+    "format_stats_line", "format_segments_line",
 ]

@@ -269,6 +269,19 @@ class MetricsRegistry:
                 return inst.value
         return default
 
+    def series(self, name: str) -> dict:
+        """Every counter/gauge series recorded under ``name``, keyed by
+        its "k=v,k=v" label string ("" for the unlabelled series) -- the
+        per-group breakdown the stats snapshots render (e.g. merges
+        applied per replica group)."""
+        out = {}
+        with self._lock:
+            items = list(self._instruments.items())
+        for (kind, n, labels), inst in items:
+            if n == name and kind in ("Counter", "Gauge"):
+                out[",".join(f"{k}={v}" for k, v in labels)] = inst.value
+        return out
+
     def total(self, name: str, default=0):
         """Sum of a counter's value across ALL label series (the
         cluster-level reconciliation helper: queries issued must equal

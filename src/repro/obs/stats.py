@@ -10,8 +10,10 @@ carry no formatting code and the obs package owns the schema.
 What maps where:
 
 * :func:`index_stats` -- ES ``_stats/docs,segments``: doc counts,
-  append-segment occupancy, per-shard tombstones, tombstone ratio (the
-  auto-compaction trigger).
+  per-generation segment rows/tombstones/deleted ratios (the tiered
+  merge policy's inputs), active-buffer occupancy, per-shard tombstones,
+  tombstone ratio (the full-compact trigger).
+  :func:`format_segments_line` renders it ``_cat/segments``-style.
 * :func:`engine_stats` -- ES ``_cat/thread_pool`` + node stats for one
   replica-group batcher: queue depth, in-flight, batch occupancy,
   queue-wait and dispatch-latency histograms, request counters.
@@ -38,7 +40,7 @@ import os
 from typing import Optional
 
 __all__ = ["index_stats", "engine_stats", "cluster_stats", "store_stats",
-           "format_stats_line"]
+           "format_stats_line", "format_segments_line"]
 
 
 def _hist(registry, name: str, **labels) -> dict:
@@ -61,6 +63,23 @@ def index_stats(index) -> dict:
         out["shard_tombstones"] = tuple(int(t) for t in tombs)
         out["n_tombstones"] = int(getattr(index, "n_tombstones", sum(tombs)))
         out["tombstone_ratio"] = float(getattr(index, "tombstone_ratio", 0.0))
+    segs = getattr(index, "segments", None)
+    if segs is not None:
+        # the _cat/segments view: per-generation doc/tombstone counts --
+        # the per-segment deleted ratios are what the tiered merge policy
+        # consults (the whole-index tombstone_ratio can't see which
+        # generation the deletes hit)
+        out["n_segments"] = len(segs)
+        out["segments"] = [
+            {"rows": int(s.n_rows), "width": int(s.width),
+             "tombstones": int(s.tombstones),
+             "deleted_ratio": float(s.deleted_ratio)}
+            for s in segs]
+        for name in ("n_active", "seg_base", "active_tombstones",
+                     "n_reclaimed"):
+            v = getattr(index, name, None)
+            if v is not None:
+                out[name] = int(v)
     seq = getattr(index, "translog_seq", None)
     if seq is not None:
         out["translog_seq"] = int(seq)
@@ -103,11 +122,17 @@ def engine_stats(engine) -> dict:
 def _maintenance_stats(daemon) -> dict:
     return {
         "compactions": daemon.compactions,
+        "merges": daemon.merges,
+        "merges_by_group": daemon.metrics.series("maintenance.merges"),
+        "reclaimed_by_group": daemon.metrics.series(
+            "maintenance.merge.reclaimed"),
         "commits": daemon.commits,
         "failures": len(daemon.failures),
         "probe_readmits": len(daemon.probe_events),
         "compact_duration_s": _hist(daemon.metrics,
                                     "maintenance.compact.duration_s"),
+        "merge_duration_s": _hist(daemon.metrics,
+                                  "maintenance.merge.duration_s"),
     }
 
 
@@ -186,6 +211,13 @@ def store_stats(store) -> dict:
         "recoveries": reg.value("store.recoveries"),
         "commit_duration_s": _hist(reg, "store.commit.duration_s"),
         "recovery_duration_s": _hist(reg, "store.recovery.duration_s"),
+        # the incremental-commit evidence: last commit's changed bytes vs
+        # the bytes it references (shared blobs make written << total)
+        "commit_bytes": {
+            "written_total": reg.value("store.commit.bytes_written"),
+            "last_written": reg.value("store.commit.last_bytes_written"),
+            "last_total": reg.value("store.commit.last_bytes_total"),
+        },
     }
 
 
@@ -195,6 +227,27 @@ def _ms(v: Optional[float]) -> str:
     if math.isinf(v):
         return "inf"
     return f"{v * 1e3:.1f}ms"
+
+
+def format_segments_line(stats: dict) -> str:
+    """One ``_cat/segments``-style line from an :func:`index_stats` dict:
+    base docs, then each sealed generation as ``rows-tombstones``, then
+    the active buffer -- the operator's glanceable view of the segment
+    story (``seg`` entries read ``rows(-dead)``)."""
+    base = stats.get("n_docs", stats.get("n_ids", 0))
+    parts = [f"segments base={base}"]
+    for i, s in enumerate(stats.get("segments", ())):
+        dead = f"-{s['tombstones']}" if s["tombstones"] else ""
+        parts.append(f"seg{i}={s['rows']}{dead}")
+    if stats.get("n_active"):
+        dead = stats.get("active_tombstones", 0)
+        parts.append(f"active={stats['n_active']}"
+                     + (f"-{dead}" if dead else ""))
+    if stats.get("n_reclaimed"):
+        parts.append(f"reclaimed={stats['n_reclaimed']}")
+    if stats.get("n_tombstones"):
+        parts.append(f"tombstones={stats['n_tombstones']}")
+    return " ".join(parts)
 
 
 def format_stats_line(stats: dict) -> str:

@@ -192,7 +192,14 @@ class BatchedSearchEngine:
                     f"{type(self.index).__name__} does not support "
                     "incremental ingest; serve a ShardedVectorIndex")
             first_id = self.index.n_ids
+            t0 = time.monotonic()
             self.index = add(vectors)
+            latency = time.monotonic() - t0
+        # ingest apply latency measured inside the lock -- this is the
+        # stall submits see, the number the segment story exists to bound
+        # (seals amortise; no per-op full rebuild)
+        self.metrics.histogram("engine.ingest.latency_s",
+                               **self._metric_labels).observe(latency)
         self.metrics.counter("engine.ingest.added_docs",
                              **self._metric_labels).inc(
             int(np.asarray(vectors).shape[0]))
@@ -212,7 +219,11 @@ class BatchedSearchEngine:
                 raise TypeError(
                     f"{type(self.index).__name__} does not support "
                     "deletes; serve a ShardedVectorIndex")
+            t0 = time.monotonic()
             self.index = delete(ids)
+            latency = time.monotonic() - t0
+        self.metrics.histogram("engine.ingest.latency_s",
+                               **self._metric_labels).observe(latency)
         self.metrics.counter("engine.ingest.delete_ops",
                              **self._metric_labels).inc()
 

@@ -24,20 +24,33 @@ this package                     Elasticsearch / Lucene analogue
                                  function of the append counter, so one
                                  global op stream reproduces every shard
                                  (on any mesh shape) bit for bit.
-commit points                    a Lucene commit (``segments_N``):
-(:mod:`~repro.store.snapshot`)   immutable checksummed segment data +
-                                 a manifest whose atomic rename IS the
-                                 commit; ``latest_commit`` falls back a
-                                 generation when the newest is damaged.
-                                 Snapshots store canonical flat arrays,
-                                 so ``restore`` re-partitions onto ANY
-                                 mesh shape -- ES snapshot/restore into
-                                 a differently sized cluster --
-                                 scatter-free (host assembly + one
-                                 device_put per leaf; a device scatter
-                                 onto replica-replicated leaves hits the
-                                 GSPMD cross-replica double-count, the
-                                 ``_merge_select_seg`` gotcha).
+commit points                    a Lucene commit (``segments_N``) run
+(:mod:`~repro.store.snapshot`)   through the ES *incremental snapshot*
+                                 model: the index splits into
+                                 content-addressed blob files (base
+                                 vectors / base state / active buffer /
+                                 one per sealed segment) named by a
+                                 digest of their bytes, so a part
+                                 unchanged since the last commit is
+                                 *referenced again* instead of
+                                 rewritten -- commits and
+                                 ``restore_group`` are O(changed), not
+                                 O(index).  The manifest's atomic rename
+                                 IS the commit; ``latest_commit`` falls
+                                 back a generation when any referenced
+                                 blob is damaged; retention GC deletes
+                                 only blobs NO retained manifest
+                                 references (never the fallback's), under
+                                 the store lock so an in-progress restore
+                                 cannot lose a blob.  ``restore``
+                                 re-partitions onto ANY mesh shape -- ES
+                                 snapshot/restore into a differently
+                                 sized cluster -- scatter-free (host
+                                 assembly + one device_put per leaf; a
+                                 device scatter onto replica-replicated
+                                 leaves hits the GSPMD cross-replica
+                                 double-count, the ``_merge_select_seg``
+                                 gotcha).
 :func:`recover`                  peer-less shard recovery: open the
 (:mod:`~repro.store.recovery`)   newest commit, truncate the translog's
                                  torn tail, replay ops past the commit's

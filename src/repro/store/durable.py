@@ -24,11 +24,14 @@ without any engine-level bookkeeping -- a racing ingest simply produces
 a later state with a later seqno, and whichever (state, seq) pair wins
 the CAS is the consistent pair that gets committed.
 
-``compact()`` intentionally does NOT log: compaction changes no acked
-content (ids and df are preserved), so recovery replaying the same ops
-over the pre-compact commit reaches the same search state.  Commit right
-after compaction (the daemon does) to re-anchor recovery on the compact
-form and let the replayed translog trim.
+``compact()`` and ``merge_segments()`` intentionally do NOT log:
+maintenance changes no acked content (ids and df are preserved), so
+recovery replaying the same ops over the pre-maintenance commit reaches
+the same search state -- translog replay re-runs the identical
+``add_documents`` history, which re-seals segments at identical
+boundaries (sealing is a pure function of the op history).  Commit right
+after a maintenance pass (the daemon does) to re-anchor recovery on the
+folded form and let the replayed translog trim.
 """
 
 from __future__ import annotations
@@ -93,11 +96,15 @@ class Store:
                 raise ValueError(
                     "index carries no translog_seq; pass seq= explicitly")
         t0 = time.monotonic()
+        stats: dict = {}
         with self._lock:
             # seq-only lookup: no point CRC-validating the fallback's data
             # here -- a corrupt fallback only makes the trim retain more
             prev = latest_commit(self.path, validate=False)
-            gen = write_commit(self.path, index, seq)
+            # blob GC runs inside write_commit, under this lock -- mutually
+            # exclusive with recover_index, so a restore in progress can
+            # never have a referenced blob deleted under it
+            gen = write_commit(self.path, index, seq, stats)
             self.translog.roll()
             # retain translog back to the FALLBACK commit (the previous
             # one): if this commit's data file tears later, recovery falls
@@ -107,6 +114,14 @@ class Store:
         self.metrics.counter("store.commits").inc()
         self.metrics.histogram("store.commit.duration_s").observe(
             time.monotonic() - t0)
+        # the O(changed) evidence: bytes actually written vs the bytes the
+        # commit references (unchanged content-addressed blobs are shared)
+        self.metrics.counter("store.commit.bytes_written").inc(
+            stats["bytes_written"])
+        self.metrics.gauge("store.commit.last_bytes_written").set(
+            stats["bytes_written"])
+        self.metrics.gauge("store.commit.last_bytes_total").set(
+            stats["bytes_total"])
         return gen
 
     def has_commit(self) -> bool:
@@ -204,6 +219,13 @@ class DurableIndex:
         # not logged: content-preserving (see module docstring)
         return DurableIndex(self.inner.compact(), self.store,
                             self.translog_seq)
+
+    def merge_segments(self, start: int = 0, count=None) -> "DurableIndex":
+        # not logged, same reasoning as compact: a merge drops only
+        # already-dead rows, so replaying the acked ops over the
+        # pre-merge commit reaches the same search state
+        return DurableIndex(self.inner.merge_segments(start, count),
+                            self.store, self.translog_seq)
 
     def __getattr__(self, name):
         return getattr(self.inner, name)

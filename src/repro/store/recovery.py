@@ -12,10 +12,17 @@ store directory:
    ``seq > commit.seq`` -- torn tails are truncated, checksummed records
    are applied through the SAME ``add_documents``/``delete`` code paths
    the live ingest ran.  Replay re-runs the identical normalize/encode
-   computation on the identical logged inputs, which is why the recovered
-   index is not merely equivalent but *bit-identical* in search to the
-   index that was lost (pinned by tests/test_store.py at every
-   ingest/delete/compact stage boundary, all engines, 1/4/4x2 meshes).
+   computation on the identical logged inputs -- and re-SEALS append
+   segments at identical boundaries, because sealing is a pure function
+   of the op history -- which is why the recovered index is not merely
+   equivalent but *bit-identical* in search to the index that was lost
+   (pinned by tests/test_store.py at every ingest/delete/merge/compact
+   stage boundary, all engines, 1/4/4x2 meshes).
+
+The commit side is O(changed): content-addressed blobs mean recovery
+reads (and ``restore_group`` ships) only the parts the newest commit
+actually references -- unchanged segments restore from blobs written
+generations ago.
 
 A commit gap (oldest surviving translog record is newer than
 ``commit.seq + 1``) raises :class:`TranslogCorruptedError` rather than

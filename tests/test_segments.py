@@ -1,0 +1,392 @@
+"""The Lucene segment story (generational indexes + tiered merges).
+
+The pinned invariants:
+
+* sealing is INVISIBLE: a segmented index (tiny ``seal_threshold``)
+  returns ids AND scores bit-identical to the flat append path
+  (``seal_threshold=None``) for every engine at every (k, page) pair,
+  through a full ingest -> delete -> merge -> compact lifecycle;
+* sealing structure is deterministic: the active buffer seals the moment
+  it reaches the threshold, a pure function of the op history (what lets
+  translog replay re-seal identically -- tests/test_store.py pins the
+  recovery side);
+* ``merge_segments`` folds a contiguous run, reclaims exactly its
+  tombstones, preserves search results bitwise, and validates its range;
+* :class:`TieredMergePolicy` plans like Lucene's: delete-pressure
+  singleton rewrites first (per-SEGMENT deleted ratios -- the thing the
+  whole-index ``tombstone_ratio`` cannot see), then similar-sized tier
+  folds, ``None`` for flat indexes;
+* the maintenance daemon applies planned merges per replica group
+  (concurrently when several have work), off the query path, via the
+  ``swap_index`` CAS, with events/metrics/stats reconciling;
+* the whole lifecycle holds on multi-device meshes (4 shards, and
+  4 shards x 2 replicas on 8 devices) -- subprocesses, the usual
+  virtual-device pattern.
+"""
+
+import os
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.cluster import MaintenanceDaemon, TieredMergePolicy
+from repro.dist.shard_index import ShardedVectorIndex
+from repro.launch.mesh import make_shard_mesh
+from repro.obs import MetricsRegistry, format_segments_line, index_stats
+from repro.serve.engine import BatchedSearchEngine
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_ENGINES = ("postings", "codes", "onehot")
+N_FEAT = 12
+
+
+def _build(n_docs=40, seed=0):
+    rng = np.random.default_rng(seed)
+    V = rng.normal(size=(n_docs, N_FEAT)).astype(np.float32)
+    Q = rng.normal(size=(5, N_FEAT)).astype(np.float32)
+    return V, Q, rng
+
+
+def _assert_same_results(a, b, queries, ctx, *, ks=(1, 5, 13),
+                         pages=(7, 33, None)):
+    assert a.n_ids == b.n_ids, ctx
+    for engine in _ENGINES:
+        for k in ks:
+            for page in pages:
+                p = 2 * a.n_ids if page is None else page
+                i1, s1 = a.search(queries, k=k, page=p, engine=engine)
+                i2, s2 = b.search(queries, k=k, page=p, engine=engine)
+                assert np.array_equal(np.asarray(i1), np.asarray(i2)), \
+                    (ctx, engine, k, p)
+                assert np.array_equal(np.asarray(s1), np.asarray(s2)), \
+                    (ctx, engine, k, p)
+
+
+# ------------------------------------------------------------ the big pin
+def test_lifecycle_parity_segmented_vs_flat():
+    """THE acceptance invariant: the same op history applied to a
+    segmented index (seal_threshold=4) and a flat one
+    (seal_threshold=None) gives bit-identical search at every
+    (engine, k, page) after EVERY stage -- ingest that seals, deletes
+    hitting base + sealed + active rows, a partial merge, a full
+    compact."""
+    V, Q, rng = _build()
+    mesh = make_shard_mesh(1)
+    seg = ShardedVectorIndex.build_sharded(V, mesh, seal_threshold=4)
+    flat = ShardedVectorIndex.build_sharded(V, mesh, seal_threshold=None)
+    _assert_same_results(seg, flat, Q, "built")
+
+    for step in range(3):                       # ingest: seals twice
+        W = rng.normal(size=(5, N_FEAT)).astype(np.float32)
+        seg, flat = seg.add_documents(W), flat.add_documents(W)
+        _assert_same_results(seg, flat, Q, ("ingest", step))
+    assert seg.n_segments >= 2 and flat.n_segments == 0
+
+    victims = [2, 3, 41, 42, 47, 54]            # base + sealed + active
+    seg, flat = seg.delete(victims), flat.delete(victims)
+    _assert_same_results(seg, flat, Q, "deleted")
+
+    merged = seg.merge_segments(0, 2)           # partial fold, seg only
+    assert merged.n_segments == seg.n_segments - 1
+    _assert_same_results(merged, flat, Q, "merged")
+    _assert_same_results(merged, seg, Q, "merge is invisible")
+
+    seg, flat = merged.compact(), flat.compact()
+    _assert_same_results(seg, flat, Q, "compacted")
+    assert seg.n_segments == 0 and seg.tombstone_ratio == 0.0
+
+
+def test_seal_structure_is_deterministic():
+    """The buffer seals exactly when it reaches the threshold -- a pure
+    function of the op history -- and the sealed generation carries the
+    right rows/gids while the buffer resets."""
+    V, _, rng = _build(n_docs=20)
+    sidx = ShardedVectorIndex.build_sharded(V, make_shard_mesh(1),
+                                            seal_threshold=4)
+    sidx = sidx.add_documents(rng.normal(size=(5, N_FEAT))
+                              .astype(np.float32))
+    assert sidx.n_segments == 1 and sidx.n_active == 0
+    assert sidx.segments[0].n_rows == 5 and sidx.seg_base == 5
+    assert sorted(np.asarray(sidx.segments[0].gids).ravel()
+                  [np.asarray(sidx.segments[0].gids).ravel() >= 0]) \
+        == [20, 21, 22, 23, 24]
+    sidx = sidx.add_documents(rng.normal(size=(3, N_FEAT))
+                              .astype(np.float32))
+    assert sidx.n_segments == 1 and sidx.n_active == 3   # below threshold
+    sidx = sidx.add_documents(rng.normal(size=(2, N_FEAT))
+                              .astype(np.float32))
+    assert sidx.n_segments == 2 and sidx.n_active == 0   # 3 + 2 sealed
+    assert sidx.segments[1].n_rows == 5
+    assert sidx.n_ids == 30 and sidx.segment_rows == 10
+
+
+def test_segment_tombstone_accounting_and_exact_df():
+    """Deletes land in the right generation's ``tombstones`` (what the
+    merge policy consults) and keep df EXACT -- ``token_df`` stays
+    bit-equal to the flat index's through sealed + active deletes."""
+    V, Q, rng = _build(n_docs=20)
+    mesh = make_shard_mesh(1)
+    seg = ShardedVectorIndex.build_sharded(V, mesh, seal_threshold=4)
+    flat = ShardedVectorIndex.build_sharded(V, mesh, seal_threshold=None)
+    W = rng.normal(size=(5, N_FEAT)).astype(np.float32)
+    seg, flat = seg.add_documents(W), flat.add_documents(W)
+    W2 = rng.normal(size=(2, N_FEAT)).astype(np.float32)
+    seg, flat = seg.add_documents(W2), flat.add_documents(W2)
+    assert seg.n_segments == 1 and seg.n_active == 2
+    # 20..24 sealed, 25..26 active; hit one of each + a base doc
+    seg, flat = seg.delete([5, 21, 26]), flat.delete([5, 21, 26])
+    assert seg.segments[0].tombstones == 1
+    assert seg.segments[0].deleted_ratio == pytest.approx(1 / 5)
+    assert seg.active_tombstones == 1
+    assert seg.n_tombstones == flat.n_tombstones == 3
+    assert np.array_equal(np.asarray(seg.token_df(Q)),
+                          np.asarray(flat.token_df(Q)))
+    _assert_same_results(seg, flat, Q, "df after segment deletes")
+
+
+def test_merge_segments_reclaims_and_validates():
+    V, Q, rng = _build(n_docs=16)
+    sidx = ShardedVectorIndex.build_sharded(V, make_shard_mesh(1),
+                                            seal_threshold=4)
+    with pytest.raises(ValueError, match="no sealed segments"):
+        sidx.merge_segments()
+    for _ in range(3):
+        sidx = sidx.add_documents(rng.normal(size=(4, N_FEAT))
+                                  .astype(np.float32))
+    assert sidx.n_segments == 3
+    sidx = sidx.delete([17, 18, 21])            # 2 dead in seg0, 1 in seg1
+    with pytest.raises(ValueError, match="invalid merge range"):
+        sidx.merge_segments(2, 2)
+    with pytest.raises(ValueError, match="invalid merge range"):
+        sidx.merge_segments(-1, 1)
+    with pytest.raises(ValueError, match="invalid merge range"):
+        sidx.merge_segments(0, 0)
+    merged = sidx.merge_segments(0, 2)
+    assert merged.n_segments == 2
+    assert merged.segments[0].n_rows == 5       # 8 rows - 3 tombstones
+    assert merged.segments[0].tombstones == 0
+    assert merged.segments[1].n_rows == sidx.segments[2].n_rows
+    assert merged.n_reclaimed == sidx.n_reclaimed + 3
+    assert merged.n_ids == sidx.n_ids
+    _assert_same_results(merged, sidx, Q, "merge preserves results")
+
+
+# ------------------------------------------------------------ merge policy
+def _fake_index(*rows_tombs):
+    segs = tuple(SimpleNamespace(n_rows=r, tombstones=t,
+                                 deleted_ratio=t / max(r, 1))
+                 for r, t in rows_tombs)
+    return SimpleNamespace(segments=segs)
+
+
+def test_merge_policy_validates():
+    with pytest.raises(ValueError, match="merge_factor"):
+        TieredMergePolicy(merge_factor=1)
+    with pytest.raises(ValueError, match="segment_deletes"):
+        TieredMergePolicy(segment_deletes=0.0)
+
+
+def test_merge_policy_none_without_segments():
+    pol = TieredMergePolicy()
+    assert pol.select(_fake_index()) is None
+    assert pol.select(SimpleNamespace()) is None     # flat VectorIndex
+
+
+def test_merge_policy_delete_pressure_beats_tier():
+    """A generation past ``segment_deletes`` is rewritten ALONE, even
+    when a tier fold is also available -- reclaiming deletes is the
+    priority, exactly ES ``deletes_pct_allowed``."""
+    pol = TieredMergePolicy(merge_factor=2, segment_deletes=0.2)
+    sel = pol.select(_fake_index((8, 0), (8, 3), (8, 0)))
+    assert sel == {"start": 1, "count": 1, "reason": "deletes",
+                   "deleted_ratio": pytest.approx(3 / 8)}
+
+
+def test_merge_policy_tier_window():
+    """Without delete pressure, the first contiguous run of
+    ``merge_factor`` SIMILAR-sized segments folds; a giant next to minis
+    is left alone (max > mf * min -- Lucene's tier criterion)."""
+    pol = TieredMergePolicy(merge_factor=2, segment_deletes=0.5)
+    assert pol.select(_fake_index((100, 0), (4, 0))) is None
+    sel = pol.select(_fake_index((100, 0), (4, 0), (5, 0)))
+    assert sel == {"start": 1, "count": 2, "reason": "tier"}
+    assert pol.select(_fake_index((6, 0))) is None   # below merge_factor
+
+
+# ----------------------------------------------------------------- daemon
+def _segmented_engine(rng, *, n_docs=16, adds=3):
+    sidx = ShardedVectorIndex.build_sharded(
+        rng.normal(size=(n_docs, N_FEAT)).astype(np.float32),
+        make_shard_mesh(1), seal_threshold=4)
+    for _ in range(adds):
+        sidx = sidx.add_documents(rng.normal(size=(4, N_FEAT))
+                                  .astype(np.float32))
+    return BatchedSearchEngine(sidx, batch_size=2, trim=None, engine="codes")
+
+
+def test_daemon_applies_planned_merges_concurrently():
+    """One sweep, two groups with tier-fold work: both merge (the
+    concurrent apply path), events/metrics/stats reconcile, the global
+    compact never fires."""
+    rng = np.random.default_rng(3)
+    reg = MetricsRegistry()
+    engines = [_segmented_engine(rng), _segmented_engine(rng)]
+    try:
+        daemon = MaintenanceDaemon(
+            engines, threshold=0.9, metrics=reg,
+            merge_policy=TieredMergePolicy(merge_factor=3))
+        for e in engines:
+            assert e.index.n_segments == 3
+        assert daemon.poll_once() == 2
+        assert daemon.merges == 2 and daemon.compactions == 0
+        assert not daemon.failures
+        for e in engines:
+            assert e.index.n_segments == 1          # 3 folded into 1
+        assert sorted(ev["group"] for ev in daemon.merge_events) == [0, 1]
+        for ev in daemon.merge_events:
+            assert ev["reason"] == "tier"
+            assert (ev["start"], ev["count"]) == (0, 3)
+        assert reg.series("maintenance.merges") == \
+            {"group=0": 1, "group=1": 1}
+        assert daemon.poll_once() == 0              # steady state
+    finally:
+        for e in engines:
+            e.close()
+
+
+def test_daemon_delete_pressure_singleton_rewrite():
+    """A delete-heavy generation triggers a reason='deletes' singleton
+    merge that reclaims exactly its tombstones -- and the reclaim shows
+    up in the per-group counters the stats layer reads."""
+    rng = np.random.default_rng(4)
+    reg = MetricsRegistry()
+    eng = _segmented_engine(rng)
+    try:
+        eng.delete([18, 19])                        # 2/4 dead in segment 0
+        snapshot = eng.index
+        assert snapshot.segments[0].deleted_ratio == pytest.approx(0.5)
+        daemon = MaintenanceDaemon(
+            [eng], threshold=0.9, metrics=reg,
+            merge_policy=TieredMergePolicy(merge_factor=4,
+                                           segment_deletes=0.2))
+        assert daemon.poll_once() == 1
+        ev = daemon.merge_events[0]
+        assert ev["reason"] == "deletes"
+        assert (ev["start"], ev["count"], ev["reclaimed"]) == (0, 1, 2)
+        assert eng.index.segments[0].tombstones == 0
+        assert eng.index.segments[0].n_rows == 2
+        assert reg.series("maintenance.merge.reclaimed") == {"group=0": 2}
+    finally:
+        eng.close()
+
+
+def test_daemon_merge_policy_off_keeps_old_behavior():
+    """merge_policy=None (what probe-only daemons get): segments are
+    never touched; only the global compact threshold acts."""
+    rng = np.random.default_rng(5)
+    eng = _segmented_engine(rng)
+    try:
+        daemon = MaintenanceDaemon([eng], threshold=0.9, merge_policy=None)
+        assert daemon.poll_once() == 0
+        assert eng.index.n_segments == 3
+    finally:
+        eng.close()
+
+
+# ------------------------------------------------------------------ stats
+def test_index_stats_exposes_segment_story():
+    rng = np.random.default_rng(6)
+    sidx = ShardedVectorIndex.build_sharded(
+        rng.normal(size=(16, N_FEAT)).astype(np.float32),
+        make_shard_mesh(1), seal_threshold=4)
+    sidx = sidx.add_documents(rng.normal(size=(4, N_FEAT))
+                              .astype(np.float32))
+    sidx = sidx.add_documents(rng.normal(size=(2, N_FEAT))
+                              .astype(np.float32))
+    sidx = sidx.delete([17, 20])                    # one sealed, one active
+    st = index_stats(sidx)
+    assert st["n_segments"] == 1
+    assert st["segments"] == [{"rows": 4, "width": 4, "tombstones": 1,
+                               "deleted_ratio": pytest.approx(0.25)}]
+    assert st["n_active"] == 2 and st["active_tombstones"] == 1
+    assert st["seg_base"] == 4 and st["n_reclaimed"] == 0
+    line = format_segments_line(st)
+    assert line == ("segments base=16 seg0=4-1 active=2-1 tombstones=2")
+    merged = sidx.merge_segments()
+    st2 = index_stats(merged)
+    assert st2["n_reclaimed"] == 1
+    assert st2["segments"][0]["tombstones"] == 0
+    assert "reclaimed=1" in format_segments_line(st2)
+
+
+# ----------------------------------------------------- multi-device parity
+def _run_subprocess(script: str) -> None:
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, cwd=_REPO)
+    assert "OK" in out.stdout, out.stdout + out.stderr
+
+
+def _prelude(n_devices):
+    return rf"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_devices}"
+import numpy as np
+from repro.dist.shard_index import ShardedVectorIndex
+from repro.launch.mesh import make_shard_mesh
+
+def check(seg, flat, Q, ctx):
+    assert seg.n_ids == flat.n_ids, ctx
+    for engine in ("postings", "codes", "onehot"):
+        for k in (1, 9):
+            i1, s1 = flat.search(Q, k=k, page=2 * flat.n_ids, engine=engine)
+            i2, s2 = seg.search(Q, k=k, page=2 * seg.n_ids, engine=engine)
+            assert np.array_equal(np.asarray(i1), np.asarray(i2)), \
+                (ctx, engine, k)
+            assert np.array_equal(np.asarray(s1), np.asarray(s2)), \
+                (ctx, engine, k)
+
+def lifecycle(mesh):
+    rng = np.random.default_rng(0)
+    V = rng.normal(size=(54, 12)).astype(np.float32)
+    Q = rng.normal(size=(7, 12)).astype(np.float32)
+    seg = ShardedVectorIndex.build_sharded(V, mesh, seal_threshold=6)
+    flat = ShardedVectorIndex.build_sharded(V, mesh, seal_threshold=None)
+    for step in range(3):
+        W = rng.normal(size=(7, 12)).astype(np.float32)
+        seg, flat = seg.add_documents(W), flat.add_documents(W)
+        check(seg, flat, Q, ("ingest", step))
+    assert seg.n_segments >= 2
+    victims = [1, 55, 56, 60, 71]
+    seg, flat = seg.delete(victims), flat.delete(victims)
+    check(seg, flat, Q, "deleted")
+    merged = seg.merge_segments(0, 2)
+    check(merged, flat, Q, "merged")
+    seg, flat = merged.compact(), flat.compact()
+    assert seg.n_segments == 0
+    check(seg, flat, Q, "compacted")
+"""
+
+
+def test_four_shard_lifecycle_parity():
+    """4-device mesh: the full segment lifecycle stays bit-identical to
+    the flat path (ragged splits included -- 54 % 4 != 0)."""
+    _run_subprocess(_prelude(4) + r"""
+lifecycle(make_shard_mesh(4))
+print("OK")
+""")
+
+
+def test_replica_mesh_lifecycle_parity():
+    """4 shards x 2 replicas on 8 devices: sealing/merging touches every
+    replica column identically (the replica axis stays unmentioned in
+    every segment leaf's spec), so parity holds through the lifecycle."""
+    _run_subprocess(_prelude(8) + r"""
+lifecycle(make_shard_mesh(4, 2))
+print("OK")
+""")

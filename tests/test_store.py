@@ -22,6 +22,7 @@ to its surviving siblings), canary health probing, and the router's
 stream-pin LRU eviction cap.
 """
 
+import json
 import os
 import subprocess
 import sys
@@ -43,6 +44,7 @@ _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _LEAVES = ("vectors", "codes", "post_docs", "post_codes", "offsets", "live",
            "seg_vectors", "seg_codes", "seg_gids", "seg_live")
+_SEG_LEAVES = ("vectors", "codes", "gids", "live", "post_docs", "post_codes")
 _ENGINES = ("postings", "codes", "onehot")
 
 
@@ -60,6 +62,18 @@ def _assert_bit_identical(live, rec, queries, ctx, *, leaves=True):
             assert np.array_equal(a, b), (ctx, name)
         assert tuple(live.shard_tombstones or ()) == \
             tuple(rec.shard_tombstones or ()), ctx
+        # sealed generations survive the disk round trip structurally:
+        # same count, same rows/tombstones, same leaves per segment
+        assert live.seg_base == rec.seg_base, ctx
+        assert live.active_tombstones == rec.active_tombstones, ctx
+        assert len(live.segments) == len(rec.segments), ctx
+        for si, (sa, sb) in enumerate(zip(live.segments, rec.segments)):
+            assert sa.n_rows == sb.n_rows, (ctx, si)
+            assert sa.tombstones == sb.tombstones, (ctx, si)
+            for name in _SEG_LEAVES:
+                assert np.array_equal(np.asarray(getattr(sa, name)),
+                                      np.asarray(getattr(sb, name))), \
+                    (ctx, si, name)
     assert live.n_ids == rec.n_ids and live.n_docs == rec.n_docs, ctx
     for engine in _ENGINES:
         i1, s1 = live.search(queries, k=8, page=2 * live.n_ids,
@@ -204,9 +218,13 @@ def test_commit_falls_back_past_damaged_newest(tmp_path):
     sidx = ShardedVectorIndex.build_sharded(V, mesh)
     write_commit(str(tmp_path), sidx, seq=1)
     grown = sidx.add_documents(rng.normal(size=(3, 10)).astype(np.float32))
-    g2 = write_commit(str(tmp_path), grown, seq=2)
-    data = os.path.join(str(tmp_path), f"segments-{g2:08d}.npz")
-    with open(data, "r+b") as f:                    # torn newest data file
+    write_commit(str(tmp_path), grown, seq=2)
+    # tear a blob ONLY generation 2 references (the active-buffer blob:
+    # gen 1 had no appended docs) -- shared blobs must stay intact or the
+    # fallback would be damaged too
+    with open(os.path.join(str(tmp_path), "commit-00000002.json")) as f:
+        active = json.load(f)["files"]["active"]["file"]
+    with open(os.path.join(str(tmp_path), active), "r+b") as f:
         f.seek(10)
         f.write(b"\x00" * 8)
     commit = latest_commit(str(tmp_path))
@@ -215,13 +233,92 @@ def test_commit_falls_back_past_damaged_newest(tmp_path):
 
 
 def test_commit_retention_prunes_old_generations(tmp_path):
-    V, _ = _build()
+    V, rng = _build()
     sidx = ShardedVectorIndex.build_sharded(V, make_shard_mesh(1))
+    grown = sidx
     for seq in range(1, 5):
-        write_commit(str(tmp_path), sidx, seq=seq)
+        grown = grown.add_documents(
+            rng.normal(size=(2, 10)).astype(np.float32))
+        write_commit(str(tmp_path), grown, seq=seq)
     names = sorted(os.listdir(str(tmp_path)))
-    assert names == ["commit-00000003.json", "commit-00000004.json",
-                     "segments-00000003.npz", "segments-00000004.npz"]
+    manifests = [n for n in names if n.startswith("commit-")]
+    assert manifests == ["commit-00000003.json", "commit-00000004.json"]
+    # blob GC: exactly the union of the two retained manifests' references
+    # survives -- shared blobs (base vectors/state, written at gen 1) are
+    # still on disk, and the pruned generations' unshared active blobs
+    # are gone
+    referenced = set()
+    for m in manifests:
+        with open(os.path.join(str(tmp_path), m)) as f:
+            files = json.load(f)["files"]
+        referenced |= {e["file"] for k, e in files.items()
+                       if k != "segments" and e is not None}
+        referenced |= {e["file"] for e in files["segments"]}
+    blobs = {n for n in names if n.endswith(".seg")}
+    assert blobs == referenced
+    # both retained commits still fully restore
+    for gen, n_ids in ((3, 36), (4, 38)):
+        with open(os.path.join(str(tmp_path),
+                               f"commit-{gen:08d}.json")) as f:
+            assert json.load(f)["n_appended"] == n_ids - 30
+    assert restore(latest_commit(str(tmp_path)),
+                   make_shard_mesh(1)).n_ids == 38
+
+
+def test_commit_bytes_are_o_changed(tmp_path):
+    """The incremental-commit claim at the API level: a commit after a
+    small ingest rewrites the changed blobs (active buffer), not the
+    base vectors -- bytes_written << bytes_total on later generations."""
+    V, rng = _build()
+    sidx = ShardedVectorIndex.build_sharded(V, make_shard_mesh(1))
+    s0: dict = {}
+    write_commit(str(tmp_path), sidx, seq=1, stats=s0)
+    assert s0["bytes_written"] == s0["bytes_total"]    # first commit: all new
+    grown = sidx.add_documents(rng.normal(size=(2, 10)).astype(np.float32))
+    s1: dict = {}
+    write_commit(str(tmp_path), grown, seq=2, stats=s1)
+    # base vectors + base state blobs are re-referenced, only the active
+    # blob is new
+    assert 0 < s1["bytes_written"] < s1["bytes_total"]
+    assert s1["blobs_written"] == 1
+    # identical state -> zero new bytes
+    s2: dict = {}
+    write_commit(str(tmp_path), grown, seq=2, stats=s2)
+    assert s2["bytes_written"] == 0 and s2["blobs_written"] == 0
+
+
+def test_gc_keeps_blobs_referenced_by_fallback_commit(tmp_path):
+    """Retention GC must never delete a blob the FALLBACK commit
+    references, even when the newest generation no longer does (a merge
+    rewrote those segments).  Pinned the hard way: tear the newest
+    generation's fresh blob and recover through the fallback."""
+    V, rng = _build()
+    mesh = make_shard_mesh(1)
+    sidx = ShardedVectorIndex.build_sharded(V, mesh, seal_threshold=4)
+    for _ in range(2):
+        sidx = sidx.add_documents(
+            rng.normal(size=(5, 10)).astype(np.float32))
+    assert sidx.n_segments == 2
+    write_commit(str(tmp_path), sidx, seq=1)
+    with open(os.path.join(str(tmp_path), "commit-00000001.json")) as f:
+        gen1_seg_blobs = {e["file"]
+                          for e in json.load(f)["files"]["segments"]}
+    assert gen1_seg_blobs
+    merged = sidx.merge_segments()        # gen 2 references NONE of them
+    write_commit(str(tmp_path), merged, seq=2)
+    for blob in gen1_seg_blobs:           # GC ran; fallback blobs intact
+        assert os.path.exists(os.path.join(str(tmp_path), blob)), blob
+    # the fallback is not just present but USABLE: tear gen 2's merged
+    # segment blob, fall back a generation, restore
+    with open(os.path.join(str(tmp_path), "commit-00000002.json")) as f:
+        gen2_segs = {e["file"] for e in json.load(f)["files"]["segments"]}
+    target = sorted(gen2_segs - gen1_seg_blobs)[0]
+    with open(os.path.join(str(tmp_path), target), "r+b") as f:
+        f.seek(10)
+        f.write(b"\x00" * 8)
+    commit = latest_commit(str(tmp_path))
+    assert commit is not None and commit.seq == 1
+    assert restore(commit, mesh).n_ids == 40
 
 
 def test_recover_without_commit_raises(tmp_path):
@@ -234,11 +331,14 @@ def test_recover_without_commit_raises(tmp_path):
 @given(n_docs=st.integers(8, 40), dims=st.integers(4, 12),
        n_ops=st.integers(1, 5), seed=st.integers(0, 2**20))
 def test_crash_recovery_bit_parity_sweep(n_docs, dims, n_ops, seed):
-    """THE property: random ingest/delete/compact/commit interleavings,
-    with a kill point at EVERY stage boundary -- the recovered index
-    (disk state only) is bit-identical to the live index, leaves and
-    search results both.  Compact pairs with commit (daemon semantics);
-    the no-op boundary right after the baseline commit is stage 0."""
+    """THE property: random ingest/delete/merge/compact/commit
+    interleavings, with a kill point at EVERY stage boundary -- the
+    recovered index (disk state only) is bit-identical to the live
+    index, leaves and search results both.  The seal threshold is tiny
+    so appends routinely seal into segments and recovery replay must
+    re-seal at identical boundaries.  Merge and compact pair with
+    commit (daemon semantics); the no-op boundary right after the
+    baseline commit is stage 0."""
     import shutil
     import tempfile
 
@@ -249,7 +349,8 @@ def test_crash_recovery_bit_parity_sweep(n_docs, dims, n_ops, seed):
     store_dir = tempfile.mkdtemp(prefix="repro_store_")
     store = Store(store_dir,
                   durability=["request", "async"][int(rng.integers(2))])
-    live = store.open_index(ShardedVectorIndex.build_sharded(V, mesh))
+    live = store.open_index(
+        ShardedVectorIndex.build_sharded(V, mesh, seal_threshold=4))
     if store.durability == "async":
         store.translog.sync()   # a kill is a process death, not power loss;
         #                         sync() stands in for the OS page cache
@@ -260,7 +361,7 @@ def test_crash_recovery_bit_parity_sweep(n_docs, dims, n_ops, seed):
             _assert_bit_identical(live.inner, rec, Q, (seed, stage))
             if stage == n_ops:
                 break
-            op = rng.choice(["add", "delete", "compact"])
+            op = rng.choice(["add", "delete", "merge", "compact"])
             if op == "add":
                 m = int(rng.integers(1, 6))
                 live = live.add_documents(
@@ -269,7 +370,11 @@ def test_crash_recovery_bit_parity_sweep(n_docs, dims, n_ops, seed):
                 ids = rng.choice(live.n_ids, size=min(3, live.n_ids),
                                  replace=False)
                 live = live.delete(ids)
-            else:
+            elif op == "merge" and live.n_segments:
+                count = int(rng.integers(1, live.n_segments + 1))
+                live = live.merge_segments(0, count)
+                store.commit(live)
+            elif op == "compact":
                 live = live.compact()
                 store.commit(live)
             if rng.random() < 0.3:
@@ -352,6 +457,57 @@ def test_daemon_commits_after_compaction(tmp_path):
         _assert_bit_identical(eng.index.inner, rec, Q, "daemon commit")
     finally:
         eng.close()
+    store.close()
+
+
+def test_merge_kill_points_recover_bit_identical(tmp_path):
+    """A crash at EVERY boundary inside a background merge pass (before
+    the swap installs the merged index, after the swap but before the
+    commit, after the commit) recovers bit-identically.  A merge is not
+    logged, so until its commit lands the acked history -- and therefore
+    recovery -- names the PRE-merge layout; after the commit it names
+    the merged one.  Both layouts answer searches identically, so no
+    kill point can change what a recovered node serves."""
+    V, rng = _build(n_docs=24)
+    Q = rng.normal(size=(4, 10)).astype(np.float32)
+    mesh = make_shard_mesh(1)
+    store = Store(str(tmp_path))
+    live = store.open_index(
+        ShardedVectorIndex.build_sharded(V, mesh, seal_threshold=4))
+    for _ in range(3):                       # seal three generations
+        live = live.add_documents(
+            rng.normal(size=(5, 10)).astype(np.float32))
+    live = live.delete([30, 31, 36])         # dead rows inside segments
+    assert live.n_segments >= 2
+    pre = live
+
+    # kill point 1: merge computed, crash BEFORE the swap -- nothing
+    # changed on disk, recovery is the pre-merge state
+    merged = pre.merge_segments(0, 2)
+    rec, seq = recover(str(tmp_path), make_shard_mesh(1))
+    assert seq == pre.translog_seq
+    _assert_bit_identical(pre.inner, rec, Q, "before swap")
+
+    # kill point 2: swap installed (node was serving the merged index),
+    # crash BEFORE the commit -- disk still holds the pre-merge commit +
+    # the full translog, so recovery reproduces the pre-merge layout
+    # leaf for leaf, and that layout answers exactly like the merged one
+    live = merged                            # the CAS, collapsed
+    rec, seq = recover(str(tmp_path), make_shard_mesh(1))
+    assert seq == live.translog_seq
+    _assert_bit_identical(pre.inner, rec, Q, "after swap")
+    for engine in _ENGINES:
+        i1, s1 = live.search(Q, k=8, page=2 * live.n_ids, engine=engine)
+        i2, s2 = rec.search(Q, k=8, page=2 * rec.n_ids, engine=engine)
+        assert np.array_equal(np.asarray(i1), np.asarray(i2)), engine
+        assert np.array_equal(np.asarray(s1), np.asarray(s2)), engine
+
+    # kill point 3: crash AFTER the commit -- recovery is the merged
+    # layout itself, leaf for leaf
+    store.commit(live)
+    rec, seq = recover(str(tmp_path), make_shard_mesh(1))
+    assert seq == live.translog_seq
+    _assert_bit_identical(live.inner, rec, Q, "after commit")
     store.close()
 
 
