@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke-shard smoke-replica smoke-build smoke-cluster smoke-store smoke-obs smoke-segments bench bench-full
+.PHONY: test smoke-shard smoke-replica smoke-build smoke-cluster smoke-store smoke-obs smoke-segments smoke-kernels bench bench-full
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -83,6 +83,17 @@ smoke-segments:
 	  --ingest-batch 32 --batches 8 --seal-threshold 64 --queries 16 \
 	  --search-calls 8 --repeats 1 \
 	  --json artifacts/BENCH_segment_scale_quick.json
+
+# kernel smoke: the fused/quantized parity property suites plus the
+# measured fused-vs-composed scaling bench in quick config (asserts the
+# fused path moves strictly fewer bytes AND finishes sooner than the
+# composed path at its largest size; the _quick artifact name keeps it
+# out of the accumulating BENCH_kernel_scale.json trajectory)
+smoke-kernels:
+	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_quantized.py
+	$(PY) -c "from benchmarks.roofline import kernel_scale; \
+	  kernel_scale(quick=True, \
+	    json_path='artifacts/BENCH_kernel_scale_quick.json')"
 
 bench:
 	$(PY) -m benchmarks.run

@@ -3,6 +3,12 @@
 Points = (avg precision, per-request seconds) for trim x page; the paper's
 reading: page size is nearly free, trim dominates latency -- retrieve as
 large a page as latency allows, trim to ~0.05.
+
+Beyond the paper's engine axis: ``fused`` (bit-identical selection to the
+composed code-match path, so it inherits those points' quality) and
+``fused_int8`` (per-row int8 quantized phase-1) extend the frontier --
+each int8 row reports recall@10 against the brute-force gold, showing
+what the 4x phase-1 byte saving costs in candidate recall at each page.
 Usage: PYTHONPATH=src python -m benchmarks.fig2_tradeoff [--quick]
 """
 
@@ -36,14 +42,32 @@ def run(quick: bool = False):
                                    max_postings=4096),
                 repeats=2 if quick else 3)
             p = float(precision_at_k(ids, gold).mean())
-            rows.append({"trim": trim, "page": page, "avg_p10": p,
+            rows.append({"engine": "postings", "trim": trim, "page": page,
+                         "avg_p10": p, "per_request_s": secs / nb})
+            print(f"postings   trim={trim:<5.2f} page={page:<4d} P@10={p:.4f} "
+                  f"t/req={secs/nb*1e3:8.2f}ms")
+
+    # the quantization axis: fused fp32 (selection bit-identical to the
+    # composed code-match engine) vs fused int8 (4x fewer phase-1 table
+    # bytes; recall@10 = overlap with brute-force gold measures what
+    # quantized candidate selection gives up at each page)
+    for eng in ("fused", "fused_int8"):
+        for page in pages:
+            (ids, _), secs = timed(
+                lambda: idx.search(Q, k=10, page=page, trim=None, engine=eng),
+                repeats=2 if quick else 3)
+            r = float(precision_at_k(ids, gold).mean())
+            rows.append({"engine": eng, "trim": 0.0, "page": page,
+                         "avg_p10": r, "recall_at_10": r,
                          "per_request_s": secs / nb})
-            print(f"trim={trim:<5.2f} page={page:<4d} P@10={p:.4f} "
+            print(f"{eng:10s} trim=0.00  page={page:<4d} R@10={r:.4f} "
                   f"t/req={secs/nb*1e3:8.2f}ms")
 
     import csv, os
+    fields = ["engine", "trim", "page", "avg_p10", "recall_at_10",
+              "per_request_s"]
     with open(os.path.join(ART, "fig2_tradeoff.csv"), "w", newline="") as f:
-        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w = csv.DictWriter(f, fieldnames=fields, restval="")
         w.writeheader()
         w.writerows(rows)
     return rows

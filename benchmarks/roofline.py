@@ -1,4 +1,18 @@
-"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Roofline analysis: dry-run artifacts + the measured fused-kernel bench.
+
+Two sections:
+
+* the HLO dry-run roofline (EXPERIMENTS.md §Roofline) over the arch grid;
+* :func:`kernel_scale` -- a MEASURED fused-vs-composed phase-1 comparison
+  emitting ``artifacts/BENCH_kernel_scale.json``.  Per corpus size it
+  times the composed hot path (dense ``score_codes`` matrix + global
+  ``top_k``), the fused fp32 kernel (streamed scoring + running top-k, no
+  (Q, d) score matrix), and the fused int8 kernel (quantized table, 4x
+  fewer table bytes), and pairs each wall time with its analytic HBM
+  byte count and roofline bound.  The composed path's extra traffic is
+  exactly the score matrix it writes then re-reads (2*Q*d*4 bytes); the
+  fused paths never materialize it, so they move strictly fewer bytes at
+  every size -- the wall-time column shows that winning on this host too.
 
 Per (arch x shape x mesh) cell:
     compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
@@ -144,7 +158,99 @@ def roofline_row(rec: Dict) -> Dict:
     }
 
 
-def main():
+def _timed(fn, repeats=3):
+    import time
+
+    import jax
+    out = fn()
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def kernel_scale(quick: bool = True, json_path: str = None):
+    """Measured fused-vs-composed phase-1 scaling (see module doc).
+
+    Emits ``artifacts/BENCH_kernel_scale.json`` with one row per
+    (n_docs x variant): best-of-3 wall seconds, analytic HBM bytes, the
+    HBM roofline bound at v5e bandwidth, and the achieved fraction.
+    """
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core.codes import score_codes
+    from repro.core.quantize import quantize_table
+    from repro.kernels.fused_phase1 import ops as fp_ops
+
+    # paper-scale shapes: LSA 200 features, combined encoder -> C = 400
+    Q, page, n_feat, C = 32, 320, 200, 400
+    sizes = [20_000, 60_000] if quick else [20_000, 60_000, 200_000]
+    rng = np.random.default_rng(0)
+
+    composed = jax.jit(
+        lambda dc, qc, w: jax.lax.top_k(score_codes(dc, qc, w), page))
+
+    rows = []
+    print(f"\n== kernel_scale (Q={Q} page={page} C={C} n={n_feat}) ==")
+    for d in sizes:
+        dc = jnp.asarray(rng.integers(-8, 8, size=(d, C)), jnp.int8)
+        qc = jnp.asarray(rng.integers(-8, 8, size=(Q, C)), jnp.int8)
+        w = jnp.asarray(rng.random((Q, C)), jnp.float32)
+        V = jnp.asarray(rng.normal(size=(d, n_feat)), jnp.float32)
+        qt = quantize_table(V)
+        qv = jnp.asarray(rng.normal(size=(Q, n_feat)), jnp.float32)
+
+        # analytic HBM traffic per query batch: every variant reads its
+        # doc-side table once; ONLY the composed path also writes the
+        # (Q, d) fp32 score matrix and reads it back for top_k
+        score_mat = 2 * Q * d * 4
+        variants = {
+            "composed": (lambda: composed(dc, qc, w), d * C + score_mat),
+            "fused": (lambda: fp_ops.fused_phase1(dc, qc, w, page=page),
+                      d * C),
+            "fused_int8": (lambda: fp_ops.fused_phase1_quant(
+                qt.codes, qt.scale, qt.zero, qv, page=page),
+                d * n_feat + 8 * d),
+        }
+        for name, (fn, nbytes) in variants.items():
+            secs = _timed(fn)
+            bound = nbytes / HBM_BW
+            rows.append({
+                "n_docs": d, "n_queries": Q, "page": page, "C": C,
+                "n_features": n_feat, "variant": name,
+                "wall_s": secs, "hbm_bytes": int(nbytes),
+                "roofline_s": bound, "pct_roofline": bound / secs,
+            })
+            print(f"d={d:<7d} {name:10s} {secs * 1e3:8.1f}ms "
+                  f"{nbytes / 2**20:8.1f}MiB")
+
+    # the claim the bench exists to pin: at the LARGEST size the fused
+    # kernel moves strictly fewer bytes AND finishes sooner
+    big = max(sizes)
+    by = {r["variant"]: r for r in rows if r["n_docs"] == big}
+    assert by["fused"]["hbm_bytes"] < by["composed"]["hbm_bytes"]
+    assert by["fused"]["wall_s"] < by["composed"]["wall_s"], (
+        by["fused"]["wall_s"], by["composed"]["wall_s"])
+
+    if json_path is None:
+        json_path = os.path.join(os.path.dirname(__file__), "..",
+                                 "artifacts", "BENCH_kernel_scale.json")
+    with open(os.path.abspath(json_path), "w") as f:
+        json.dump({"bench": "kernel_scale",
+                   "hw_model": {"hbm_bw": HBM_BW, "peak_flops": PEAK_FLOPS},
+                   "rows": rows}, f, indent=2)
+    return rows
+
+
+def main(full: bool = False):
+    kernel_scale(quick=not full)
     for mesh in ["single_16x16", "multi_2x16x16"]:
         recs = load_records(mesh)
         if not recs:

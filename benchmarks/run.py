@@ -93,8 +93,9 @@ def main() -> None:
     _run_device_bench("obs_overhead", [], full)
 
     t0 = time.perf_counter()
-    roofline.main()
-    print(f"roofline,{(time.perf_counter()-t0)*1e6:.0f},see_EXPERIMENTS_md")
+    roofline.main(full=full)
+    print(f"roofline,{(time.perf_counter()-t0)*1e6:.0f},"
+          "see_EXPERIMENTS_md_and_BENCH_kernel_scale")
 
 
 if __name__ == "__main__":

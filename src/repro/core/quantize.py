@@ -1,0 +1,119 @@
+"""Per-row int8 scalar quantization of the dense vector table.
+
+The paper's tunable speed/quality knob pushed down to the numeric level:
+phase-1 candidate selection can run against an int8 copy of the (d, n)
+vector table -- 4x fewer bytes streamed from HBM -- while the final page is
+ALWAYS rescored against the exact fp32 vectors (the canonical (Q, k, n)
+einsum in :mod:`repro.core.rerank` -- the last-ulp parity invariant is
+untouched, so quantization can only change *which* candidates reach the
+rescore, never the reported score of a hit).
+
+Scheme: asymmetric per-row affine quantization.  For each row ``v``::
+
+    zero  = (max(v) + min(v)) / 2
+    scale = max(max(v) - min(v), eps) / 254
+    q     = clip(round((v - zero) / scale), -127, 127)  int8
+
+so the dequantized row is ``q * scale + zero`` with per-element error
+``<= scale / 2`` (the row's extremes land exactly on +-127; no clipping in
+exact arithmetic).  All-zero rows (shard padding) quantize to exactly
+``q = 0, zero = 0``.
+
+Because quantization is a pure per-row function of the row's bits, a row
+quantizes to identical int8 codes wherever it lives -- single device, any
+mesh shape, base table or sealed segment, before or after a crash-recovery
+rebuild.  That is what lets the sharded/segmented paths derive quantized
+tables lazily per leaf (nothing is persisted) while keeping seg-vs-flat
+bit-parity.
+
+The phase-1 score against dequantized rows never materializes them::
+
+    q . (a * scale + zero) = scale * (q . a) + zero * sum(q)
+
+one int8-read matmul plus a rank-1 correction (:func:`quantized_scores`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QMAX",
+    "QuantizedTable",
+    "quantize_rows",
+    "dequantize_rows",
+    "quantize_table",
+    "quantized_scores",
+]
+
+QMAX = 127          # symmetric int8 code range [-127, 127]
+_EPS = 1e-8         # degenerate (constant) rows get this range
+
+
+def quantize_rows(v: jnp.ndarray, eps: float = _EPS):
+    """Quantize ``(..., n)`` f32 rows -> (codes int8, scale, zero).
+
+    ``scale``/``zero`` have shape ``(...,)`` (one pair per row).  Row-wise
+    and deterministic: quantizing any sub-batch of rows yields the same
+    bits as quantizing them inside a larger table (pinned by tests).
+    """
+    v = jnp.asarray(v, jnp.float32)
+    lo = jnp.min(v, axis=-1, keepdims=True)
+    hi = jnp.max(v, axis=-1, keepdims=True)
+    zero = (hi + lo) * 0.5
+    scale = jnp.maximum(hi - lo, eps) / (2.0 * QMAX)
+    q = jnp.clip(jnp.round((v - zero) / scale), -QMAX, QMAX).astype(jnp.int8)
+    return q, scale[..., 0], zero[..., 0]
+
+
+def dequantize_rows(codes: jnp.ndarray, scale: jnp.ndarray,
+                    zero: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct f32 rows; per-element error ``<= scale / 2`` per row."""
+    return (codes.astype(jnp.float32) * scale[..., None]
+            + zero[..., None])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTable:
+    """int8 copy of a (d, n) vector table + per-row affine params."""
+
+    codes: jnp.ndarray    # (d, n) int8
+    scale: jnp.ndarray    # (d,) f32
+    zero: jnp.ndarray     # (d,) f32
+
+    def tree_flatten(self):
+        return (self.codes, self.scale, self.zero), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def nbytes_codes(self) -> int:
+        return self.codes.size  # int8: one byte per element
+
+
+def quantize_table(vectors: jnp.ndarray) -> QuantizedTable:
+    return QuantizedTable(*quantize_rows(vectors))
+
+
+def quantized_scores(
+    codes: jnp.ndarray,      # (d, n) int8
+    scale: jnp.ndarray,      # (d,) f32
+    zero: jnp.ndarray,       # (d,) f32
+    queries: jnp.ndarray,    # (Q, n) f32
+    qsum: jnp.ndarray = None,  # (Q, 1) precomputed sum(queries, -1)
+) -> jnp.ndarray:
+    """(Q, d) phase-1 scores against the dequantized rows, computed as
+    ``scale * (codes . query) + zero * sum(query)`` -- the dequantized
+    table is never materialized.  The composed jnp reference for the
+    ``fused_int8`` engine (kernels/fused_phase1/ref.py wraps this)."""
+    if qsum is None:
+        qsum = jnp.sum(queries, axis=-1, keepdims=True)
+    raw = jnp.einsum("qn,dn->qd", queries, codes.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return raw * scale[None, :] + qsum * zero[None, :]

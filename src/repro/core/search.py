@@ -3,13 +3,22 @@
     idx = VectorIndex.build(vectors, encoder=RoundingEncoder(2))
     ids, sims = idx.search(queries, k=10, page=320, trim=TrimFilter(0.05))
 
-Phase 1 retrieves ``page`` candidates with one of three engines
+Phase 1 retrieves ``page`` candidates with one of the engines
 
-* ``postings`` -- paper-faithful inverted index (:mod:`repro.core.postings`)
-* ``codes``    -- TPU-native code-match streaming (:mod:`repro.core.codes`)
-* ``onehot``   -- MXU matmul over the one-hot token vocabulary
+* ``postings``   -- paper-faithful inverted index (:mod:`repro.core.postings`)
+* ``codes``      -- TPU-native code-match streaming (:mod:`repro.core.codes`)
+* ``onehot``     -- MXU matmul over the one-hot token vocabulary
+* ``codes_pallas`` -- the code_match Pallas kernel (full score matrix)
+* ``fused``      -- fused Pallas kernel: code-match scoring + running
+  top-``page`` in one pass, no (Q, n_docs) score matrix
+  (:mod:`repro.kernels.fused_phase1`)
+* ``fused_int8`` -- the fused kernel over the int8 per-row quantized copy
+  of the dense table (:mod:`repro.core.quantize`, derived lazily and
+  cached per index instance) -- phase-1 selection only
 
-and phase 2 re-ranks them by exact cosine (:mod:`repro.core.rerank`).
+and phase 2 re-ranks them by exact cosine (:mod:`repro.core.rerank`) --
+for every engine, including the quantized one, so reported scores are
+always exact fp32.
 Filtering (trim/best) is query-side by default -- choosable per request, the
 paper's §5 recommendation -- with optional index-side ``best`` at build time.
 """
@@ -38,9 +47,17 @@ from .postings import (
     lookup,
     score_postings_batch,
 )
+from .quantize import QuantizedTable, quantize_table
 from .rerank import brute_force_topk, normalize, rerank_topk
 
-__all__ = ["VectorIndex", "SearchParams", "phase1_engine_scores"]
+__all__ = ["VectorIndex", "SearchParams", "phase1_engine_scores",
+           "FUSED_ENGINES"]
+
+# engines that fuse phase-1 scoring with candidate selection: they return
+# the candidate page directly instead of a dense (Q, d) score matrix, so
+# they dispatch around phase1_engine_scores (in both VectorIndex.search
+# and the per-shard query phase in repro.dist.shard_index)
+FUSED_ENGINES = ("fused", "fused_int8")
 
 _SENTINEL = {  # never-matching code per dtype (outside any bucket range)
     jnp.int8.dtype: 127,
@@ -92,7 +109,7 @@ class SearchParams:
     page: int = 320
     trim: Optional[TrimFilter] = None
     best: Optional[BestFilter] = None
-    engine: str = "postings"       # postings | codes | onehot | codes_pallas
+    engine: str = "postings"  # postings|codes|onehot|codes_pallas|fused|fused_int8
     weighting: str = "idf"         # idf | count
     max_postings: Optional[int] = None  # None -> exact (= n_docs)
 
@@ -142,6 +159,20 @@ class VectorIndex:
     def n_features(self) -> int:
         return self.vectors.shape[1]
 
+    @property
+    def quantized(self) -> QuantizedTable:
+        """int8 per-row quantized copy of ``vectors`` for ``fused_int8``
+        phase-1 selection.  Derived lazily (a pure function of the vector
+        bits -- never persisted; recovered indexes re-derive identical
+        tables) and cached per instance: every mutation path returns a
+        new index, so the cache can never go stale (the ``max_df``
+        pattern in dist/shard_index)."""
+        cached = self.__dict__.get("_quant_cache")
+        if cached is None:
+            cached = quantize_table(self.vectors)
+            self.__dict__["_quant_cache"] = cached
+        return cached
+
     # ---------------------------------------------------------- query encode
     def encode_queries(
         self,
@@ -188,10 +219,33 @@ class VectorIndex:
         weighting: str = "idf",
         max_postings: Optional[int] = None,
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Two-phase search -> (ids (Q,k), cosine scores (Q,k))."""
+        """Two-phase search -> (ids (Q,k), cosine scores (Q,k)).
+
+        The ``fused``/``fused_int8`` engines select the candidate page in
+        one kernel pass (repro.kernels.fused_phase1) instead of
+        materializing phase-1 scores; ``fused`` is bit-identical to
+        ``codes`` selection, ``fused_int8`` trades candidate recall for
+        4x fewer phase-1 bytes.  Phase 2 is the same exact-fp32 rerank
+        for every engine.  ``fused_int8`` reads no tokens, so
+        trim/best/weighting do not apply to it.
+        """
         queries = jnp.atleast_2d(queries)
         page = min(page, self.n_docs)
         k = min(k, page)
+        if engine in FUSED_ENGINES:
+            from repro.kernels.fused_phase1 import ops as fp_ops
+
+            if engine == "fused":
+                q, qcodes, w = self.encode_queries(
+                    queries, trim, best, weighting)
+                _, cand = fp_ops.fused_phase1(self.codes, qcodes, w,
+                                              page=page)
+            else:
+                q = normalize(jnp.asarray(queries, jnp.float32))
+                qt = self.quantized
+                _, cand = fp_ops.fused_phase1_quant(
+                    qt.codes, qt.scale, qt.zero, q, page=page)
+            return rerank_topk(self.vectors, cand, q, k)
         q, qcodes, w = self.encode_queries(queries, trim, best, weighting)
         scores1 = self.phase1_scores(qcodes, w, engine, max_postings)
         _, cand = jax.lax.top_k(scores1, page)                  # (Q, page)

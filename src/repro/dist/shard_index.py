@@ -125,6 +125,7 @@ enter the merged top-k.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from functools import partial
 from typing import Optional, Tuple
@@ -139,8 +140,10 @@ from repro.core.filtering import (BestFilter, TrimFilter, expand_mask,
                                   feature_mask, index_best_codes)
 from repro.core.postings import (Postings, build_postings, code_df,
                                  df_lookup, idf_weights)
+from repro.core.quantize import quantize_rows
 from repro.core.rerank import normalize
-from repro.core.search import _SENTINEL, VectorIndex, phase1_engine_scores
+from repro.core.search import (_SENTINEL, FUSED_ENGINES, VectorIndex,
+                               phase1_engine_scores)
 
 from .sharding import DATA_AXIS, REPLICA_AXIS
 
@@ -213,6 +216,21 @@ class Segment:
         the tiered merge policy consults (the whole-index
         ``tombstone_ratio`` can't see which generation the deletes hit)."""
         return self.tombstones / max(self.n_rows, 1)
+
+    def quantized(self, mesh: Mesh):
+        """Per-row int8 quantization of this segment's vectors for
+        ``fused_int8`` phase-1 -- (codes (S,G,n) int8, scale (S,G),
+        zero (S,G)), derived lazily and cached on the segment object
+        (segments are immutable; tombstoning replaces the object but
+        carries the cache, since the vector bits are untouched).
+        Quantization is row-wise, so a row's int8 codes are identical
+        here and in the flat append buffer -- the seg-vs-flat parity
+        pin extends to the quantized engine for free."""
+        cached = self.__dict__.get("_quant_cache")
+        if cached is None:
+            cached = _quantize_program(self.vectors, mesh=mesh)
+            self.__dict__["_quant_cache"] = cached
+        return cached
 
 
 @jax.tree_util.register_pytree_node_class
@@ -369,6 +387,42 @@ class ShardedVectorIndex:
                 sentinel=int(_SENTINEL[self.codes.dtype])))
             self.__dict__["_max_df_cache"] = cached
         return cached
+
+    # --------------------------------------------------- quantized tables
+    # int8 per-row copies of the dense leaves for fused_int8 phase-1.
+    # Pure per-row functions of the vector bits: never persisted (store
+    # commits and crash recovery re-derive identical tables), identical
+    # on every mesh shape, and cached per instance like max_df.  Deletes
+    # do NOT invalidate them -- tombstones only flip live/codes, and dead
+    # rows are -inf-masked before quantized scores can matter -- so the
+    # mutation paths carry the caches forward wherever the underlying
+    # vectors leaf is shared (_carry_quant).
+    def _quant_base(self):
+        """(codes (S,dp,n) int8, scale (S,dp), zero (S,dp)) of the base."""
+        cached = self.__dict__.get("_quant_base_cache")
+        if cached is None:
+            cached = _quantize_program(self.vectors, mesh=self.mesh)
+            self.__dict__["_quant_base_cache"] = cached
+        return cached
+
+    def _quant_active(self):
+        """Quantized active append buffer (recomputed once per ingest
+        batch -- the buffer is small and mutations return new instances)."""
+        cached = self.__dict__.get("_quant_active_cache")
+        if cached is None:
+            cached = _quantize_program(self.seg_vectors, mesh=self.mesh)
+            self.__dict__["_quant_active_cache"] = cached
+        return cached
+
+    def _carry_quant(self, out: "ShardedVectorIndex", base: bool = False,
+                     active: bool = False) -> "ShardedVectorIndex":
+        """Propagate quant caches to a derived index whose corresponding
+        vectors leaves are unchanged (dataclasses.replace drops them)."""
+        for flag, key in ((base, "_quant_base_cache"),
+                          (active, "_quant_active_cache")):
+            if flag and key in self.__dict__:
+                out.__dict__[key] = self.__dict__[key]
+        return out
 
     # ------------------------------------------------------------- replicas
     def replica_group(self, g: int) -> "ShardedVectorIndex":
@@ -576,7 +630,8 @@ class ShardedVectorIndex:
                                  **kwargs)
 
     # ----------------------------------------------------------------- ingest
-    def add_documents(self, vectors) -> "ShardedVectorIndex":
+    def add_documents(self, vectors, *,
+                      donate: bool = False) -> "ShardedVectorIndex":
         """Append new documents ES-style -> a new index sharing every
         unchanged leaf with ``self``.
 
@@ -589,6 +644,16 @@ class ShardedVectorIndex:
         as a runtime scalar, so an ingest stream recompiles the search
         program only O(log(appended)) times (for ``page < n_ids``), not
         per batch.
+
+        The four active-buffer leaves update in ONE jitted program with
+        explicit output shardings (no per-leaf device_put copies).  With
+        ``donate=True`` the old buffers are additionally DONATED to that
+        program -- zero new steady-state allocations -- which makes
+        ``self`` unusable afterwards: only pass it when nothing else can
+        be holding this index (the serve engine's opt-in hot-swap path
+        proves that with its serving-snapshot guard).  Growth batches
+        never donate: the concatenated temporaries are not committed to
+        the output sharding, so XLA could not alias them anyway.
         """
         v = jnp.atleast_2d(jnp.asarray(vectors, jnp.float32))
         m = int(v.shape[0])
@@ -618,7 +683,8 @@ class ShardedVectorIndex:
 
         svec, scod = self.seg_vectors, self.seg_codes
         sgid, sliv = self.seg_gids, self.seg_live
-        if need > G:
+        grew = need > G
+        if grew:
             # grow geometrically: search programs specialise on the segment
             # width, so exact-fit growth would recompile the whole SPMD
             # query phase per ingest batch -- doubling amortises that to
@@ -635,17 +701,17 @@ class ShardedVectorIndex:
             sliv = jnp.concatenate(
                 [sliv, jnp.zeros((ns, grow), bool)], axis=1)
         sh, sl = jnp.asarray(shard_of), jnp.asarray(slot_of)
+        # growth batches skip donation: the concat temporaries above are
+        # uncommitted, so the aliasing would be silently dropped anyway
+        svec, scod, sgid, sliv = _append_update(self.mesh, donate and not grew)(
+            svec, scod, sgid, sliv, sh, sl, v,
+            codes.astype(scod.dtype), jnp.asarray(gids))
         out = dataclasses.replace(
             self,
-            seg_vectors=_put(self.mesh, svec.at[sh, sl].set(v), _ROW),
-            seg_codes=_put(self.mesh,
-                           scod.at[sh, sl].set(codes.astype(scod.dtype)),
-                           _ROW),
-            seg_gids=_put(self.mesh, sgid.at[sh, sl].set(jnp.asarray(gids)),
-                          _VEC),
-            seg_live=_put(self.mesh, sliv.at[sh, sl].set(True), _VEC),
+            seg_vectors=svec, seg_codes=scod, seg_gids=sgid, seg_live=sliv,
             n_appended=self.n_appended + m,
         )
+        out = self._carry_quant(out, base=True)  # base leaves untouched
         if (out.seal_threshold is not None
                 and out.n_active >= out.seal_threshold):
             out = out._seal_active()
@@ -673,13 +739,22 @@ class ShardedVectorIndex:
         pdocs, pcodes = _postings_program(scod, mesh=self.mesh)
         seg = Segment(svec, scod, sgid, sliv, pdocs, pcodes,
                       n_rows=n_act, tombstones=self.active_tombstones)
+        # the sealed generation inherits the active buffer's quant cache
+        # as its own (same vector bits; the seal is a truncating slice, and
+        # quantization is row-wise) -- but only when widths already agree,
+        # else let the segment re-derive lazily
+        if ("_quant_active_cache" in self.__dict__
+                and self.seg_capacity == w):
+            seg.__dict__["_quant_cache"] = self.__dict__[
+                "_quant_active_cache"]
         ev, ec, eg, el = self._empty_segments(
             self.mesh, ns, self.n_features, self.codes.shape[-1],
             self.codes.dtype)
-        return dataclasses.replace(
+        out = dataclasses.replace(
             self, segments=self.segments + (seg,),
             seg_vectors=ev, seg_codes=ec, seg_gids=eg, seg_live=el,
             seg_base=self.n_appended, active_tombstones=0)
+        return self._carry_quant(out, base=True)
 
     def delete(self, ids) -> "ShardedVectorIndex":
         """Tombstone documents by global id -> a new index.
@@ -741,6 +816,11 @@ class ShardedVectorIndex:
                 segs[i] = Segment(seg.vectors, codes2, seg.gids, live2,
                                   pdocs, pcodes, seg.n_rows,
                                   seg.tombstones + n_new)
+                if "_quant_cache" in seg.__dict__:
+                    # same vectors leaf; dead rows are live-masked before
+                    # quantized scores matter, so the table stays valid
+                    segs[i].__dict__["_quant_cache"] = \
+                        seg.__dict__["_quant_cache"]
                 seg_changed = True
             if seg_changed:
                 new["segments"] = tuple(segs)
@@ -758,7 +838,9 @@ class ShardedVectorIndex:
         old = (np.asarray(self.shard_tombstones, np.int64)
                if self.shard_tombstones else np.zeros(self.n_shards, np.int64))
         new["shard_tombstones"] = tuple(int(x) for x in old + dead)
-        return dataclasses.replace(self, **new)
+        # deletes never touch a vectors leaf -- every quant table survives
+        return self._carry_quant(dataclasses.replace(self, **new),
+                                 base=True, active=True)
 
     def compact(self) -> "ShardedVectorIndex":
         """Fold append segments and tombstones back into a clean base by
@@ -964,6 +1046,10 @@ class ShardedVectorIndex:
         sealed = tuple(
             (s.vectors, s.codes, s.gids, s.live, s.post_docs, s.post_codes)
             for s in self.segments)
+        # fused_int8 scores every generation off its lazily derived int8
+        # table (mixing quantized-cosine and idf-sum scales inside one
+        # top_k would be meaningless); other engines pass no quant leaves
+        quant = engine == "fused_int8"
         gids, scores = _query_phase(
             self.vectors, self.codes, self.post_docs, self.post_codes,
             self.offsets, self.live,
@@ -972,6 +1058,10 @@ class ShardedVectorIndex:
             self.seg_gids if seg else None,
             self.seg_live if seg else None,
             sealed,
+            self._quant_base() if quant else None,
+            self._quant_active() if (quant and seg) else None,
+            tuple(s.quantized(self.mesh) for s in self.segments)
+            if quant else (),
             q, qcodes, mask, jnp.asarray(self.n_ids, jnp.int32),
             mesh=self.mesh, max_abs_bucket=self.encoder.max_abs_bucket,
             page_loc=page_loc, engine=engine, weighting=weighting,
@@ -1020,6 +1110,51 @@ def _build_program(raw, live, *, mesh, encoder, index_best):
     fn = shard_map(local, mesh=mesh, in_specs=(_ROW, _VEC),
                    out_specs=(_ROW, _ROW, _ROW, _ROW), check=False)
     return fn(raw, live)
+
+
+@functools.lru_cache(maxsize=None)
+def _append_update(mesh: Mesh, donate: bool):
+    """The fused append-update program for the ingest hot path.
+
+    All four active-buffer leaves scatter-update in ONE jitted program
+    with explicit output shardings -- replacing four eager ``.at[].set``
+    + ``device_put`` pairs (eight buffer allocations per batch) with a
+    single XLA computation (four allocations, or ZERO with donation:
+    ``donate=True`` aliases each input buffer to its output, so the
+    update happens in place).  Scatter targets here are the data-sharded
+    seg leaves, never anything replica-replicated-only, so the GSPMD
+    scatter hazard (see merge_segments) does not apply.  Cached per
+    (mesh, donate); jit caches per batch shape inside.
+    """
+    row = NamedSharding(mesh, _ROW)
+    vec = NamedSharding(mesh, _VEC)
+
+    def upd(svec, scod, sgid, sliv, sh, sl, v, c, g):
+        return (svec.at[sh, sl].set(v),
+                scod.at[sh, sl].set(c),
+                sgid.at[sh, sl].set(g),
+                sliv.at[sh, sl].set(True))
+
+    return jax.jit(upd,
+                   donate_argnums=(0, 1, 2, 3) if donate else (),
+                   out_shardings=(row, row, vec, vec))
+
+
+@partial(jax.jit, static_argnames=("mesh",))
+def _quantize_program(vectors, *, mesh):
+    """Per-shard int8 row quantization in one SPMD program: (S, W, n) f32
+    -> (codes (S, W, n) int8, scale (S, W), zero (S, W)).  Row-wise, so
+    per-shard blocks quantize to the same bits as the rows would anywhere
+    else -- mesh shape and generation layout can't change a code."""
+    from .shmap import shard_map
+
+    def local(v):
+        q8, sc, zp = quantize_rows(v[0])
+        return q8[None], sc[None], zp[None]
+
+    fn = shard_map(local, mesh=mesh, in_specs=(_ROW,),
+                   out_specs=(_ROW, _VEC, _VEC), check=False)
+    return fn(vectors)
 
 
 @partial(jax.jit, static_argnames=("mesh",))
@@ -1127,6 +1262,7 @@ def _rescore(cvec, q, top_ids):
                                    "k", "merge"))
 def _query_phase(vectors, codes, post_docs, post_codes, offsets, live,
                  seg_vectors, seg_codes, seg_gids, seg_live, sealed,
+                 base_quant, act_quant, sealed_quant,
                  q, qcodes, mask, n_ids, *, mesh, max_abs_bucket, page_loc,
                  engine, weighting, max_postings, k, merge):
     """Per-shard query phase under shard_map -> merge-ready candidates.
@@ -1158,6 +1294,16 @@ def _query_phase(vectors, codes, post_docs, post_codes, offsets, live,
     capacity then hit this jit's cache (same shapes, same treedef) instead
     of recompiling the SPMD program per ``add_documents``; seals and
     merges change the treedef and recompile O(maintenance events) times.
+
+    The ``fused``/``fused_int8`` engines replace the dense-scores +
+    ``top_k`` pair with the fused kernel's streamed selection over the
+    BASE (top ``min(page_loc, dp)`` of the base always covers every base
+    candidate the composed top-k could pick), then one top-k over [base
+    page | generation scores] in the same concat-index space -- identical
+    candidates, same downstream gather/rescore.  ``fused_int8`` scores
+    every generation off the per-row int8 tables (``*_quant`` args,
+    ``None``/empty for other engines) and reads no tokens, so the idf
+    psum is skipped entirely.
     """
     from .shmap import shard_map
 
@@ -1166,6 +1312,7 @@ def _query_phase(vectors, codes, post_docs, post_codes, offsets, live,
     n_shards = vectors.shape[0]
     n_sealed = len(sealed)
     widths = tuple(t[0].shape[1] for t in sealed)
+    quant = engine == "fused_int8"
 
     def local(*args):
         vec, codes, pdocs, pcodes, off, lv = args[:6]
@@ -1175,12 +1322,24 @@ def _query_phase(vectors, codes, post_docs, post_codes, offsets, live,
             rest = rest[4:]
         segs = [tuple(x[0] for x in rest[i * 6:(i + 1) * 6])
                 for i in range(n_sealed)]
-        q, qcodes, mask, n_ids = rest[n_sealed * 6:]
+        rest = rest[n_sealed * 6:]
+        if quant:
+            bq8, bsc, bzp = (x[0] for x in rest[:3])
+            rest = rest[3:]
+            if G:
+                aq8, asc, azp = (x[0] for x in rest[:3])
+                rest = rest[3:]
+            seg_quants = [tuple(x[0] for x in rest[i * 3:(i + 1) * 3])
+                          for i in range(n_sealed)]
+            rest = rest[n_sealed * 3:]
+        q, qcodes, mask, n_ids = rest
         vec, codes, lv = vec[0], codes[0], lv[0]
         postings = Postings(pdocs[0], pcodes[0], dp)
         off = off[0]
 
-        if weighting == "idf":
+        if quant:
+            w = None    # token-free engine: no df psum, no idf weights
+        elif weighting == "idf":
             df = df_lookup(postings, qcodes)
             for i, (_, _, _, _, spd, spc) in enumerate(segs):
                 # sealed generations answer df off their mini posting
@@ -1194,7 +1353,8 @@ def _query_phase(vectors, codes, post_docs, post_codes, offsets, live,
             w = jnp.ones(qcodes.shape, jnp.float32)
         else:
             raise ValueError(f"unknown weighting {weighting!r}")
-        w = jnp.where(mask, w, 0.0)
+        if w is not None:
+            w = jnp.where(mask, w, 0.0)
 
         def seg_scores(sc, sl):
             # generation phase 1: direct bucket-equality match (the
@@ -1205,15 +1365,84 @@ def _query_phase(vectors, codes, post_docs, post_codes, offsets, live,
                                preferred_element_type=jnp.float32)
             return jnp.where(sl[None, :], s_seg, -jnp.inf)
 
-        s1 = phase1_engine_scores(codes, postings, qcodes, w, engine,
-                                  max_postings, max_abs_bucket)
-        s1 = jnp.where(lv[None, :], s1, -jnp.inf)   # pads/tombstones out
-        parts = [s1]
-        parts += [seg_scores(sc_, sl_) for _, sc_, _, sl_, _, _ in segs]
-        if G:
-            parts.append(seg_scores(scod, sliv))
-        s1 = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
-        _, cand = jax.lax.top_k(s1, page_loc)       # (Q, page_loc)
+        def seg_scores_fused(sc, sl):
+            # the fused branch scores generations with the SAME ordered
+            # column fold the kernel uses for the base (ref.match_scores),
+            # so every doc's phase-1 bits are identical across the seg and
+            # flat layouts -- the einsum form above reduces in a
+            # shape-dependent order and would wobble the last ulp
+            from repro.kernels.fused_phase1.ref import match_scores
+
+            return jnp.where(sl[None, :], match_scores(sc, qcodes, w),
+                             -jnp.inf)
+
+        def seg_scores_quant(t, sl):
+            # generation phase 1 under fused_int8: the same per-row
+            # affine-int8 score the base kernel computes -- quantization
+            # is row-wise, so a row scores identically in a sealed
+            # generation and in the flat buffer (the parity pin)
+            s8, ssc, szp = t
+            raw = jnp.einsum("qn,gn->qg", q, s8.astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+            s_seg = raw * ssc[None, :] + qsum * szp[None, :]
+            return jnp.where(sl[None, :], s_seg, -jnp.inf)
+
+        if engine in FUSED_ENGINES:
+            # fused selection: the kernel streams the base and returns its
+            # top min(page_loc, dp) directly -- a superset of every base
+            # candidate the composed top-k could select -- then ONE top-k
+            # merges it with the (small) generation scores in the same
+            # concat-index space [base | sealed... | active] the composed
+            # path uses.  Stable top-k order matches the composed concat
+            # (base entries keep ascending-id tie order and precede
+            # generation entries), so `cand` is identical wherever scores
+            # are finite; -inf slots differ only in unspecified ids, which
+            # the live mask turns into (id=-1, -inf) either way.
+            from repro.kernels.fused_phase1 import ops as fp_ops
+
+            p_base = min(page_loc, dp)
+            if quant:
+                qsum = jnp.sum(q, axis=-1, keepdims=True)
+                s_b, ids_b = fp_ops.fused_phase1_quant(
+                    bq8, bsc, bzp, q, page=p_base, live=lv)
+            else:
+                s_b, ids_b = fp_ops.fused_phase1(
+                    codes, qcodes, w, page=p_base, live=lv)
+            parts_s, parts_i = [s_b], [ids_b]
+            gen_off = dp
+            gen_sc = ([seg_scores_quant(seg_quants[i], segs[i][3])
+                       for i in range(n_sealed)] if quant else
+                      [seg_scores_fused(segs[i][1], segs[i][3])
+                       for i in range(n_sealed)])
+            for i, sc_i in enumerate(gen_sc):
+                parts_s.append(sc_i)
+                parts_i.append(gen_off + jax.lax.broadcasted_iota(
+                    jnp.int32, sc_i.shape, 1))
+                gen_off += widths[i]
+            if G:
+                sc_a = (seg_scores_quant((aq8, asc, azp), sliv) if quant
+                        else seg_scores_fused(scod, sliv))
+                parts_s.append(sc_a)
+                parts_i.append(gen_off + jax.lax.broadcasted_iota(
+                    jnp.int32, sc_a.shape, 1))
+            if len(parts_s) == 1:
+                cand = ids_b                        # p_base == page_loc
+            else:
+                cat_s = jnp.concatenate(parts_s, axis=1)
+                cat_i = jnp.concatenate(parts_i, axis=1)
+                _, pos = jax.lax.top_k(cat_s, page_loc)
+                cand = jnp.take_along_axis(cat_i, pos, axis=1)
+        else:
+            s1 = phase1_engine_scores(codes, postings, qcodes, w, engine,
+                                      max_postings, max_abs_bucket)
+            s1 = jnp.where(lv[None, :], s1, -jnp.inf)  # pads/tombstones out
+            parts = [s1]
+            parts += [seg_scores(sc_, sl_) for _, sc_, _, sl_, _, _ in segs]
+            if G:
+                parts.append(seg_scores(scod, sliv))
+            s1 = (parts[0] if len(parts) == 1
+                  else jnp.concatenate(parts, axis=1))
+            _, cand = jax.lax.top_k(s1, page_loc)   # (Q, page_loc)
 
         if segs or G:
             vparts = [vec] + [t[0] for t in segs]
@@ -1249,6 +1478,15 @@ def _query_phase(vectors, codes, post_docs, post_codes, offsets, live,
     for sv_, sc_, sg_, sl_, spd_, spc_ in sealed:
         args += [sv_, sc_, sg_, sl_, spd_, spc_]
         specs += [_ROW, _ROW, _VEC, _VEC, _ROW, _ROW]
+    if quant:
+        args += list(base_quant)
+        specs += [_ROW, _VEC, _VEC]
+        if G:
+            args += list(act_quant)
+            specs += [_ROW, _VEC, _VEC]
+        for t in sealed_quant:
+            args += list(t)
+            specs += [_ROW, _VEC, _VEC]
     args += [q, qcodes, mask, n_ids]
     specs += [P(qaxis, None)] * 3 + [P()]
     out = P(qaxis, DATA_AXIS) if merge == "gather" else P(qaxis, None)

@@ -1,0 +1,172 @@
+"""Fused phase-1 Pallas kernel: tiled scoring + running top-k in one pass.
+
+The composed hot path scores every document, writes the full (Q, d) score
+matrix to HBM, reads it back for ``top_k(page)``, and throws it away --
+2 x Q x d x 4 bytes of HBM traffic that dwarfs the code table itself once
+d is large.  This kernel keeps a running top-``page`` accumulator in the
+revisited output block instead, so the score matrix never exists:
+
+* grid = (Q / BLOCK_Q, d / BLOCK_D), with the DOC axis as the minor
+  (fastest-moving) grid dimension -- for a fixed query tile the kernel
+  walks every doc tile in order, and the output BlockSpec ignores the doc
+  index, so the same (BLOCK_Q, page) scores/ids block stays resident in
+  VMEM across the whole doc sweep (the standard revisited-accumulator
+  pattern);
+* each step scores one (BLOCK_Q, BLOCK_D) tile -- weighted code equality
+  in fp32 mode, the int8 dot + per-row affine correction in quantized
+  mode -- masks dead rows to -inf, and folds the tile into the
+  accumulator as ``top_k(concat([acc, tile]), page)``;
+* stable ``top_k`` makes the streamed fold EQUIVALENT to one global
+  top-k: ties prefer earlier concat positions, accumulator entries hold
+  earlier doc ids than any tile entry, and within a tile ids ascend -- so
+  the selected ids and scores are bit-identical to the composed
+  reference (per-cell scores are untouched by the fold; only selection
+  is streamed).
+
+The C (code-column) reduction is the shared fixed pairwise tree from
+ref.py (``match_scores``): its order is a pure function of C, so the
+per-cell bits are identical to the full-matrix oracle no matter how the
+doc axis is tiled -- which is what buys *bit*-exactness against the
+composed fp32 path (code_match's BLOCK_C chunking and jnp.sum's
+shape-dependent reduction order both trade that away; here BLOCK_D is
+the VMEM release valve instead).
+
+Init is branchless: at doc-tile 0 the accumulator read is replaced by
+(-inf, 0) placeholders via ``where`` on the grid index, so slots that
+never see a finite score report score -inf with an unspecified id
+(ops.py documents this contract; ids are clamped in-range there).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 8
+DEFAULT_BLOCK_D = 512
+
+
+def _fold_topk(prev_s, prev_i, tile_s, tile_i, page):
+    """One accumulator fold: stable top-k over [acc | tile]."""
+    cat_s = jnp.concatenate([prev_s, tile_s], axis=1)
+    cat_i = jnp.concatenate([prev_i, tile_i], axis=1)
+    top_s, pos = jax.lax.top_k(cat_s, page)
+    return top_s, jnp.take_along_axis(cat_i, pos, axis=1)
+
+
+def _acc_read(os_ref, oi_ref, j):
+    """Accumulator contents, or (-inf, 0) placeholders on the first doc
+    tile (the output block is uninitialized storage at j == 0)."""
+    first = j == 0
+    prev_s = jnp.where(first, -jnp.inf, os_ref[...])
+    prev_i = jnp.where(first, 0, oi_ref[...])
+    return prev_s, prev_i
+
+
+def _fused_kernel(q_ref, w_ref, d_ref, lv_ref, os_ref, oi_ref, *,
+                  block_d: int, page: int):
+    """fp32 code-match tile + running top-k fold.  Scores via the shared
+    fixed-tree reduction (ref.match_scores), so the tile's bits match the
+    full-matrix oracle exactly."""
+    from .ref import match_scores
+
+    j = pl.program_id(1)
+    qc = q_ref[...]                            # (BQ, C) int
+    dc = d_ref[...]                            # (BD, C) int
+    w = w_ref[...]                             # (BQ, C) f32
+    s = match_scores(dc, qc, w)                # (BQ, BD)
+    lv = lv_ref[...][:, 0]                     # (BD,)
+    s = jnp.where(lv[None, :], s, -jnp.inf)
+    ids = j * block_d + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    prev_s, prev_i = _acc_read(os_ref, oi_ref, j)
+    os_ref[...], oi_ref[...] = _fold_topk(prev_s, prev_i, s, ids, page)
+
+
+def _fused_quant_kernel(q_ref, qsum_ref, d8_ref, sc_ref, zp_ref, lv_ref,
+                        os_ref, oi_ref, *, block_d: int, page: int):
+    """int8 quantized-dot tile + running top-k fold.  Scores the
+    dequantized rows without materializing them:
+    ``scale * (codes . query) + zero * sum(query)``."""
+    j = pl.program_id(1)
+    q = q_ref[...]                             # (BQ, n) f32
+    d8 = d8_ref[...].astype(jnp.float32)       # (BD, n)
+    raw = jax.lax.dot_general(
+        q, d8, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)    # (BQ, BD)
+    sc = sc_ref[...][:, 0]                     # (BD,)
+    zp = zp_ref[...][:, 0]
+    s = raw * sc[None, :] + qsum_ref[...] * zp[None, :]
+    lv = lv_ref[...][:, 0]
+    s = jnp.where(lv[None, :], s, -jnp.inf)
+    ids = j * block_d + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    prev_s, prev_i = _acc_read(os_ref, oi_ref, j)
+    os_ref[...], oi_ref[...] = _fold_topk(prev_s, prev_i, s, ids, page)
+
+
+def _call(kernel, doc_inputs, q_inputs, Q, d, page, block_q, block_d,
+          interpret):
+    """Shared pallas_call plumbing: query-tile inputs replicate over the
+    doc grid axis, doc-tile inputs over the query axis, and both outputs
+    revisit the same (BLOCK_Q, page) block for every doc tile."""
+    grid = (Q // block_q, d // block_d)
+    q_specs = [pl.BlockSpec((block_q, x.shape[-1]), lambda i, j: (i, 0))
+               for x in q_inputs]
+    d_specs = [pl.BlockSpec((block_d, x.shape[-1]), lambda i, j: (j, 0))
+               for x in doc_inputs]
+    out_spec = pl.BlockSpec((block_q, page), lambda i, j: (i, 0))
+    return pl.pallas_call(
+        functools.partial(kernel, block_d=block_d, page=page),
+        grid=grid,
+        in_specs=q_specs + d_specs,
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((Q, page), jnp.float32),
+                   jax.ShapeDtypeStruct((Q, page), jnp.int32)],
+        interpret=interpret,
+    )(*q_inputs, *doc_inputs)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("page", "block_q", "block_d", "interpret"))
+def fused_phase1_pallas(
+    doc_codes: jnp.ndarray,    # (d, C) int
+    qcodes: jnp.ndarray,       # (Q, C) int
+    col_weights: jnp.ndarray,  # (Q, C) f32
+    live: jnp.ndarray,         # (d,) bool
+    page: int,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+):
+    """Padded-shape fp32 pallas call; use :mod:`.ops` for the wrapper."""
+    d, _ = doc_codes.shape
+    Q = qcodes.shape[0]
+    assert Q % block_q == 0 and d % block_d == 0, (Q, d, block_q, block_d)
+    return _call(_fused_kernel, [doc_codes, live[:, None]],
+                 [qcodes, col_weights], Q, d, page, block_q, block_d,
+                 interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("page", "block_q", "block_d", "interpret"))
+def fused_phase1_quant_pallas(
+    qcodes8: jnp.ndarray,      # (d, n) int8
+    scale: jnp.ndarray,        # (d,) f32
+    zero: jnp.ndarray,         # (d,) f32
+    queries: jnp.ndarray,      # (Q, n) f32
+    qsum: jnp.ndarray,         # (Q, 1) f32 precomputed row sums
+    live: jnp.ndarray,         # (d,) bool
+    page: int,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+):
+    """Padded-shape int8 pallas call; use :mod:`.ops` for the wrapper."""
+    d, _ = qcodes8.shape
+    Q = queries.shape[0]
+    assert Q % block_q == 0 and d % block_d == 0, (Q, d, block_q, block_d)
+    return _call(_fused_quant_kernel,
+                 [qcodes8, scale[:, None], zero[:, None], live[:, None]],
+                 [queries, qsum], Q, d, page, block_q, block_d, interpret)

@@ -115,6 +115,11 @@ def engine_stats(engine) -> dict:
             "delete_ops": reg.value("engine.ingest.delete_ops", **labels),
             "swaps": reg.value("engine.swaps", **labels),
         },
+        # dispatches by phase-1 path (labelled by engine name) -- the
+        # fused-kernel rollout gauge: a mixed fleet shows its
+        # fused/composed split here
+        "kernel_path": {engine.engine: reg.value(
+            "engine.kernel_path", engine=engine.engine, **labels)},
         "index": index_stats(index),
     }
 

@@ -70,6 +70,7 @@ the batcher's accounting and the trace always agree on a wait.
 
 from __future__ import annotations
 
+import inspect
 import threading
 import time
 from concurrent.futures import Future
@@ -100,6 +101,7 @@ class BatchedSearchEngine:
         metrics=None,
         tracer=None,
         group: Optional[int] = None,
+        donate_ingest: bool = False,
     ):
         self.index = index
         self.batch_size = batch_size
@@ -110,6 +112,14 @@ class BatchedSearchEngine:
         # None omits the kwarg so plain VectorIndex keeps serving unchanged
         self.merge = merge
         self.max_postings = max_postings
+        # opt-in buffer donation for hot ingest: add_documents may donate
+        # the active append buffers to the update program -- but ONLY when
+        # the current index is not the snapshot a batch is searching right
+        # now (the worker records its snapshot in _serving under the lock;
+        # donating a buffer a dispatched program still reads would be a
+        # use-after-free)
+        self.donate_ingest = donate_ingest
+        self._serving = None
         # observability: metrics series carry the replica-group label when
         # this batcher fronts one group of a cluster; instruments are
         # cached here so the worker pays one lock-op per record, not a
@@ -129,6 +139,11 @@ class BatchedSearchEngine:
         self._h_wait = self.metrics.histogram("engine.queue.wait_s", **lb)
         self._h_dispatch = self.metrics.histogram(
             "engine.dispatch.latency_s", **lb)
+        # which phase-1 path served each batch -- the fused-kernel rollout
+        # counter (label = engine name, so a fleet-wide registry shows the
+        # fused/composed mix at a glance)
+        self._c_kernel_path = self.metrics.counter(
+            "engine.kernel_path", engine=self.engine, **lb)
         self._lock = threading.Condition()
         # queue items: (query, future, enqueue timestamp, trace)
         self._queue: List[tuple] = []
@@ -182,6 +197,12 @@ class BatchedSearchEngine:
         batches search the new docs.  Raises ``RuntimeError`` after
         ``close`` and ``TypeError`` for indexes without incremental ingest
         (plain :class:`VectorIndex` is immutable -- shard it first).
+
+        With ``donate_ingest=True`` the update donates the old append
+        buffers to the update program (zero steady-state allocations) --
+        guarded by the serving snapshot: if the batch in flight is
+        searching the CURRENT index, its buffers are still being read and
+        donation is skipped for this call.
         """
         with self._lock:
             if self._stop:
@@ -192,8 +213,14 @@ class BatchedSearchEngine:
                     f"{type(self.index).__name__} does not support "
                     "incremental ingest; serve a ShardedVectorIndex")
             first_id = self.index.n_ids
+            # donation is safe only when nothing else holds this index:
+            # the engine owns the only reference unless the in-flight
+            # batch snapshotted exactly this object
+            donate = (self.donate_ingest
+                      and self.index is not self._serving
+                      and "donate" in inspect.signature(add).parameters)
             t0 = time.monotonic()
-            self.index = add(vectors)
+            self.index = add(vectors, donate=True) if donate else add(vectors)
             latency = time.monotonic() - t0
         # ingest apply latency measured inside the lock -- this is the
         # stall submits see, the number the segment story exists to bound
@@ -285,8 +312,11 @@ class BatchedSearchEngine:
                 batch = self._queue[: self.batch_size]
                 del self._queue[: len(batch)]
                 # snapshot under the lock: a hot swap after this point
-                # applies to the NEXT batch, this one finishes on `index`
+                # applies to the NEXT batch, this one finishes on `index`.
+                # _serving publishes the snapshot so a concurrent
+                # donate-ingest knows these buffers are being read
                 index = self.index
+                self._serving = index if batch else None
                 self._inflight = len(batch)
             if not batch:
                 continue
@@ -333,6 +363,7 @@ class BatchedSearchEngine:
                         if not fut.done():  # caller may have cancelled
                             fut.set_result((ids[i], scores[i]))
                     self._c_completed.inc(len(batch))
+                    self._c_kernel_path.inc()   # one dispatch on `engine`
                 self._h_dispatch.observe(t_done - t_dispatch)
                 for _, _, t_enq, tr in batch:
                     if not tr:          # NULL_TRACE: skip the kwargs builds
@@ -347,3 +378,4 @@ class BatchedSearchEngine:
                                else {"error": repr(error)}))
             finally:
                 self._inflight = 0
+                self._serving = None

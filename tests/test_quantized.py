@@ -1,0 +1,157 @@
+"""int8 quantized phase-1 (core/quantize.py + the ``fused_int8`` engine).
+
+The quantization contract, pinned at three levels:
+
+* **numeric**: per-row affine round-trip error is bounded by ``scale / 2``
+  per element, degenerate rows (all-zero shard padding, constant rows)
+  reconstruct EXACTLY, and quantization is a pure per-row function --
+  a row quantizes to the same bits alone or inside any larger table
+  (what keeps lazily-derived shard/segment tables seg-vs-flat consistent);
+* **selection**: int8 only ever picks the candidate page; the final page
+  is ALWAYS rescored against the exact fp32 vectors, so when the page
+  covers the corpus the ``fused_int8`` engine returns ids AND scores
+  bit-identical to the exact engines -- quantization becomes invisible;
+* **quality**: on an LSA corpus (the test_quality_claims setup, scaled
+  down), int8 phase-1 keeps recall@10 against the brute-force gold above
+  a pinned floor, improving with page -- the paper's speed/quality knob
+  extended one level down the numeric stack.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core import VectorIndex, precision_at_k
+from repro.core.quantize import (QMAX, dequantize_rows, quantize_rows,
+                                 quantize_table)
+from repro.data import make_corpus
+from repro.lsa import build_lsa
+
+
+# ------------------------------------------------------------- numeric level
+class TestQuantizeRows:
+    def test_round_trip_error_bound(self):
+        """|dequant - v| <= scale/2 per element (the affine scheme's
+        worst case: rounding to the nearest of 255 levels), with per-row
+        magnitudes spanning two orders so every row gets its own scale."""
+        rng = np.random.default_rng(0)
+        V = rng.normal(size=(200, 48)).astype(np.float32) * \
+            rng.uniform(0.05, 5.0, size=(200, 1)).astype(np.float32)
+        codes, scale, zero = quantize_rows(jnp.asarray(V))
+        assert codes.dtype == jnp.int8
+        err = np.abs(np.asarray(dequantize_rows(codes, scale, zero)) - V)
+        bound = np.asarray(scale)[:, None] / 2
+        assert (err <= bound * (1 + 1e-5) + 1e-7).all()
+        # the row extremes land on the code-range ends: no clipping loss
+        assert (np.abs(np.asarray(codes)).max(axis=1) == QMAX).all()
+
+    def test_degenerate_rows_reconstruct_exactly(self):
+        """All-zero rows (shard padding) -> codes 0, zero 0, exact zeros
+        back; constant rows -> codes 0, exact constant back."""
+        V = np.zeros((3, 8), np.float32)
+        V = np.concatenate([V, np.full((2, 8), 1.75, np.float32)])
+        codes, scale, zero = quantize_rows(jnp.asarray(V))
+        assert not np.asarray(codes).any()
+        assert_allclose(np.asarray(zero), [0, 0, 0, 1.75, 1.75], rtol=0)
+        assert np.array_equal(
+            np.asarray(dequantize_rows(codes, scale, zero)), V)
+
+    def test_subbatch_determinism(self):
+        """Quantizing any sub-batch yields the bits it gets inside the
+        full table -- the property that lets sharded/segmented indexes
+        derive per-leaf tables lazily yet stay seg-vs-flat bit-equal."""
+        rng = np.random.default_rng(1)
+        V = rng.normal(size=(64, 16)).astype(np.float32)
+        c_all, s_all, z_all = quantize_rows(jnp.asarray(V))
+        for lo, hi in [(0, 1), (7, 30), (30, 64)]:
+            c, s, z = quantize_rows(jnp.asarray(V[lo:hi]))
+            assert np.array_equal(np.asarray(c), np.asarray(c_all)[lo:hi])
+            assert np.array_equal(np.asarray(s), np.asarray(s_all)[lo:hi])
+            assert np.array_equal(np.asarray(z), np.asarray(z_all)[lo:hi])
+
+    def test_table_cached_per_instance(self):
+        rng = np.random.default_rng(2)
+        idx = VectorIndex.build(
+            rng.normal(size=(50, 12)).astype(np.float32))
+        qt = idx.quantized
+        assert idx.quantized is qt                  # derived once
+        assert qt.nbytes_codes == 50 * 12           # one byte per element
+        assert np.array_equal(
+            np.asarray(qt.codes),
+            np.asarray(quantize_table(idx.vectors).codes))
+
+
+# ----------------------------------------------------------- selection level
+class TestFinalPageBitIdentity:
+    """page >= n_docs: every doc reaches the exact fp32 rescore, so the
+    quantized engine's output must be bit-identical to the exact ones --
+    int8 can change WHICH candidates reach the rescore, never the score
+    of a hit, and with a full page there is nothing left to change."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        rng = np.random.default_rng(3)
+        idx = VectorIndex.build(
+            rng.normal(size=(150, 16)).astype(np.float32))
+        Q = rng.normal(size=(7, 16)).astype(np.float32)
+        return idx, Q
+
+    @pytest.mark.parametrize("engine", ["fused", "fused_int8"])
+    def test_full_page_matches_exact_engine(self, setup, engine):
+        idx, Q = setup
+        gold_ids, gold_s = idx.search(Q, k=10, page=300, trim=None,
+                                      engine="codes")
+        ids, s = idx.search(Q, k=10, page=300, trim=None, engine=engine)
+        assert np.array_equal(np.asarray(ids), np.asarray(gold_ids)), engine
+        assert np.array_equal(np.asarray(s), np.asarray(gold_s)), engine
+
+    def test_partial_page_scores_stay_exact(self, setup):
+        """Even when int8 picks a DIFFERENT candidate page, every reported
+        score is the exact fp32 cosine of that doc -- never a dequantized
+        approximation."""
+        idx, Q = setup
+        ids, s = idx.search(Q, k=5, page=20, trim=None, engine="fused_int8")
+        gold_all = np.asarray(idx.gold_topk(Q, idx.n_docs)[1])
+        order = np.asarray(idx.gold_topk(Q, idx.n_docs)[0])
+        exact = np.take_along_axis(
+            np.take_along_axis(gold_all, np.argsort(order), axis=1),
+            np.asarray(ids), axis=1)
+        assert_allclose(np.asarray(s), exact, rtol=1e-6, atol=1e-7)
+
+
+# ------------------------------------------------------------- quality level
+@pytest.fixture(scope="module")
+def lsa_setup():
+    corpus = make_corpus(n_docs=800, vocab_size=4000, n_topics=20, seed=11)
+    pipe = build_lsa(corpus, n_features=64)
+    idx = VectorIndex.build(pipe.doc_vectors)
+    Q = pipe.doc_vectors[:16]
+    gold_ids, _ = idx.gold_topk(Q, 10)
+    return idx, Q, gold_ids
+
+
+def test_int8_phase1_recall_floor(lsa_setup):
+    """int8 candidate selection keeps recall@10 against brute-force gold
+    >= 0.9 at page=80 on a real LSA corpus (fig2's quantization-axis
+    claim, in test form), and a larger page can only help."""
+    idx, Q, gold_ids = lsa_setup
+    recalls = {}
+    for page in (20, 80, 320):
+        ids, _ = idx.search(Q, k=10, page=page, trim=None,
+                            engine="fused_int8")
+        recalls[page] = float(precision_at_k(ids, gold_ids).mean())
+    assert recalls[80] >= 0.9, recalls
+    assert recalls[320] >= recalls[20] - 1e-6, recalls
+
+
+def test_fused_fp32_recall_matches_codes_engine(lsa_setup):
+    """The fused fp32 engine selects through the same exact phase-1
+    scores as the composed engines, so at equal page its quality is the
+    composed engine's quality."""
+    idx, Q, gold_ids = lsa_setup
+    ids_f, s_f = idx.search(Q, k=10, page=80, trim=None, engine="fused")
+    ids_c, s_c = idx.search(Q, k=10, page=80, trim=None, engine="codes")
+    r_f = float(precision_at_k(ids_f, gold_ids).mean())
+    r_c = float(precision_at_k(ids_c, gold_ids).mean())
+    assert r_f == pytest.approx(r_c, abs=0.05), (r_f, r_c)

@@ -52,9 +52,9 @@ def _build(n_docs=40, seed=0):
 
 
 def _assert_same_results(a, b, queries, ctx, *, ks=(1, 5, 13),
-                         pages=(7, 33, None)):
+                         pages=(7, 33, None), engines=_ENGINES):
     assert a.n_ids == b.n_ids, ctx
-    for engine in _ENGINES:
+    for engine in engines:
         for k in ks:
             for page in pages:
                 p = 2 * a.n_ids if page is None else page
@@ -97,6 +97,40 @@ def test_lifecycle_parity_segmented_vs_flat():
 
     seg, flat = merged.compact(), flat.compact()
     _assert_same_results(seg, flat, Q, "compacted")
+    assert seg.n_segments == 0 and seg.tombstone_ratio == 0.0
+
+
+def test_lifecycle_parity_fused_engines():
+    """The fused phase-1 engines ride the same sealing-is-invisible
+    invariant: ``fused`` streams every generation through the shared
+    fixed-tree scorer (bit-identical phase-1 to the flat layout by
+    construction), ``fused_int8`` derives per-generation quantized tables
+    lazily -- both must return flat-vs-segmented bit-identical ids AND
+    scores through ingest, deletes hitting every generation, a partial
+    merge, and a compact."""
+    V, Q, rng = _build()
+    mesh = make_shard_mesh(1)
+    seg = ShardedVectorIndex.build_sharded(V, mesh, seal_threshold=4)
+    flat = ShardedVectorIndex.build_sharded(V, mesh, seal_threshold=None)
+    kw = dict(ks=(1, 9), pages=(9, None), engines=("fused", "fused_int8"))
+    _assert_same_results(seg, flat, Q, "built", **kw)
+
+    for step in range(2):                       # ingest: seals at least once
+        W = rng.normal(size=(5, N_FEAT)).astype(np.float32)
+        seg, flat = seg.add_documents(W), flat.add_documents(W)
+        _assert_same_results(seg, flat, Q, ("ingest", step), **kw)
+    assert seg.n_segments >= 1 and flat.n_segments == 0
+
+    victims = [2, 3, 41, 42, 47]                # base + sealed + active
+    seg, flat = seg.delete(victims), flat.delete(victims)
+    _assert_same_results(seg, flat, Q, "deleted", **kw)
+
+    if seg.n_segments >= 2:
+        seg = seg.merge_segments(0, 2)
+        _assert_same_results(seg, flat, Q, "merged", **kw)
+
+    seg, flat = seg.compact(), flat.compact()
+    _assert_same_results(seg, flat, Q, "compacted", **kw)
     assert seg.n_segments == 0 and seg.tombstone_ratio == 0.0
 
 
@@ -342,7 +376,7 @@ from repro.launch.mesh import make_shard_mesh
 
 def check(seg, flat, Q, ctx):
     assert seg.n_ids == flat.n_ids, ctx
-    for engine in ("postings", "codes", "onehot"):
+    for engine in ("postings", "codes", "onehot", "fused", "fused_int8"):
         for k in (1, 9):
             i1, s1 = flat.search(Q, k=k, page=2 * flat.n_ids, engine=engine)
             i2, s2 = seg.search(Q, k=k, page=2 * seg.n_ids, engine=engine)

@@ -270,6 +270,114 @@ def test_pending_tracks_queue_and_inflight(index, queries):
         eng.close()
 
 
+@pytest.mark.parametrize("engine", ["codes", "fused"])
+def test_kernel_path_counter_counts_dispatches(index, queries, engine):
+    """engine.kernel_path counts one increment per dispatched batch,
+    labelled by the serving engine name -- the fused-kernel rollout
+    signal (a fleet registry shows the fused/composed dispatch mix)."""
+    from repro.obs import MetricsRegistry
+
+    reg = MetricsRegistry()
+    eng = BatchedSearchEngine(index, batch_size=4, k=5, page=N_DOCS,
+                              trim=None, engine=engine, metrics=reg)
+    try:
+        with eng._lock:              # hold the worker off until all queued
+            futs = [eng.submit(q) for q in queries[:8]]
+        for f in futs:
+            f.result(timeout=60)
+    finally:
+        eng.close()
+    assert reg.value("engine.kernel_path", engine=engine) == 2
+    assert reg.value("engine.requests.completed") == 8
+    assert eng.stats()["kernel_path"] == {engine: 2}
+
+
+class _IngestRecorder:
+    """Sharded-index stand-in recording the ``donate`` kwarg each hot add
+    receives, with an optional gate to hold a batch in flight -- the
+    deterministic probe for the serving-snapshot donation guard."""
+
+    def __init__(self, inner, log=None, gate=None):
+        self.inner = inner
+        self.donate_log = [] if log is None else log
+        self.gate = gate                      # (entered, release) or None
+
+    @property
+    def n_ids(self):
+        return self.inner.n_ids
+
+    def search(self, queries, **kw):
+        if self.gate is not None:
+            entered, release = self.gate
+            entered.set()
+            assert release.wait(timeout=60), "gate never released"
+        return self.inner.search(queries, **kw)
+
+    def add_documents(self, vectors, *, donate=False):
+        self.donate_log.append(donate)
+        return _IngestRecorder(self.inner.add_documents(vectors,
+                                                        donate=donate),
+                               self.donate_log, self.gate)
+
+
+def test_donate_ingest_guarded_by_serving_snapshot():
+    """donate_ingest=True donates the append buffers ONLY when the batch
+    in flight is not reading them: an add landing while the CURRENT index
+    serves must pass donate=False (a donated buffer a dispatched program
+    still reads would be a use-after-free); once the served snapshot is a
+    stale index, donation turns on -- and either way the ingest itself is
+    semantically identical (new docs retrievable, ids dense)."""
+    from repro.dist.shard_index import ShardedVectorIndex
+    from repro.launch.mesh import make_shard_mesh
+
+    rng = np.random.default_rng(11)
+    V = rng.normal(size=(20, N_FEAT)).astype(np.float32)
+    entered, release = threading.Event(), threading.Event()
+    rec = _IngestRecorder(
+        ShardedVectorIndex.build_sharded(V, make_shard_mesh(1)),
+        gate=(entered, release))
+    eng = BatchedSearchEngine(rec, batch_size=1, k=3, page=64, trim=None,
+                              engine="codes", donate_ingest=True)
+    try:
+        fut = eng.submit(V[0])
+        assert entered.wait(timeout=60)        # batch in flight on `rec`
+        W1 = rng.normal(size=(3, N_FEAT)).astype(np.float32)
+        assert eng.add_documents(W1) == 20
+        assert rec.donate_log == [False]       # buffers being read: skip
+        release.set()
+        fut.result(timeout=60)
+        W2 = rng.normal(size=(3, N_FEAT)).astype(np.float32)
+        # the served snapshot (rec) is stale -- nothing holds the grown
+        # index's buffers, so this add may donate
+        assert eng.add_documents(W2) == 23
+        assert rec.donate_log == [False, True]
+        ids, _ = eng.submit(W2[0]).result(timeout=60)
+        assert ids[0] == 23
+    finally:
+        release.set()
+        eng.close()
+
+
+def test_donate_ingest_off_never_donates():
+    """The default (donate_ingest=False) never passes donate=True -- the
+    conservative path stays byte-for-byte the old behaviour."""
+    from repro.dist.shard_index import ShardedVectorIndex
+    from repro.launch.mesh import make_shard_mesh
+
+    rng = np.random.default_rng(12)
+    V = rng.normal(size=(20, N_FEAT)).astype(np.float32)
+    rec = _IngestRecorder(
+        ShardedVectorIndex.build_sharded(V, make_shard_mesh(1)))
+    eng = BatchedSearchEngine(rec, batch_size=2, k=3, page=64, trim=None,
+                              engine="codes")
+    try:
+        eng.add_documents(rng.normal(size=(2, N_FEAT)).astype(np.float32))
+        eng.add_documents(rng.normal(size=(2, N_FEAT)).astype(np.float32))
+        assert rec.donate_log == [False, False]
+    finally:
+        eng.close()
+
+
 def test_delete_requires_mutable_index(index, queries):
     """Plain VectorIndex has no tombstones: hot delete must fail fast, and
     a closed engine must refuse the control-plane call outright."""

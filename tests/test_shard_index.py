@@ -31,7 +31,7 @@ def _build(n_docs=123, n_features=16, n_queries=7, seed=0):
 
 
 @pytest.mark.parametrize("engine", ["postings", "codes", "onehot",
-                                    "codes_pallas"])
+                                    "codes_pallas", "fused", "fused_int8"])
 def test_single_shard_is_identity(engine):
     """ns=1 runs in-process: one shard must already be bit-identical."""
     idx, Q = _build()
@@ -82,13 +82,15 @@ _PRELUDE = _prelude(4)
 
 def test_four_shard_parity_all_engines():
     """4-device mesh, ragged (123 % 4 != 0) AND even (120 % 4 == 0) splits:
-    ids/scores bit-identical for all three engines at page >= n_docs."""
+    ids/scores bit-identical for every engine (the fused and quantized
+    phase-1 paths included) at page >= n_docs."""
     _run_subprocess(_PRELUDE + r"""
 for n_docs in (123, 120):
     idx, Q = build(n_docs)
     sidx = idx.shard(make_shard_mesh(4))
     assert sidx.n_shards == 4 and sidx.n_docs == n_docs
-    for engine in ("postings", "codes", "onehot", "codes_pallas"):
+    for engine in ("postings", "codes", "onehot", "codes_pallas",
+                   "fused", "fused_int8"):
         ids1, s1 = idx.search(Q, k=10, page=2 * n_docs, engine=engine)
         ids2, s2 = sidx.search(Q, k=10, page=2 * n_docs, engine=engine)
         assert np.array_equal(np.asarray(ids1), np.asarray(ids2)), \
@@ -147,7 +149,8 @@ for n_docs in (123, 120):
     sidx = idx.shard(make_shard_mesh(4, 2))
     assert sidx.n_shards == 4 and sidx.n_replicas == 2
     assert sidx.n_docs == n_docs
-    for engine in ("postings", "codes", "onehot", "codes_pallas"):
+    for engine in ("postings", "codes", "onehot", "codes_pallas",
+                   "fused", "fused_int8"):
         ids1, s1 = idx.search(Q, k=10, page=2 * n_docs, engine=engine)
         for merge in ("gather", "stream"):
             ids2, s2 = sidx.search(Q, k=10, page=2 * n_docs, engine=engine,
