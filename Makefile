@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke-shard smoke-replica smoke-build smoke-cluster smoke-store smoke-obs smoke-segments smoke-kernels bench bench-full
+.PHONY: test smoke-shard smoke-replica smoke-build smoke-cluster smoke-store smoke-obs smoke-profile smoke-segments smoke-kernels bench bench-full
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -70,6 +70,22 @@ smoke-obs:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" $(PY) -m \
 	  repro.launch.serve --docs 2000 --features 32 --queries 32 \
 	  --shards 2 --replicas 2 --cluster --fail-shard 0 --stats-interval 0.5
+
+# observability v2 smoke under 4 virtual devices: the full
+# instrumentation plane at once -- _profile execution trees (asserts
+# each tree's phases tile its total and the dispatch phase reconciles
+# with the latency histogram), slow log at threshold 0 (asserts 100%
+# tail capture: captured == seen), recompile watch (asserts ZERO
+# steady-state recompiles after the warmup pass), and the JSONL
+# metrics-snapshot exporter
+smoke-profile:
+	mkdir -p artifacts
+	rm -f artifacts/metrics_smoke.jsonl
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" $(PY) -m \
+	  repro.launch.serve --docs 2000 --features 32 --queries 32 \
+	  --shards 2 --replicas 2 --cluster --stats-interval 0.5 \
+	  --profile --slow-threshold 0 --fail-on-recompile \
+	  --metrics-file artifacts/metrics_smoke.jsonl
 
 # segment-lifecycle smoke under 4 virtual devices: sealed-generation
 # ingest (flat vs seal vs seal+merge latency traces -- the no-stall

@@ -91,6 +91,7 @@ def main() -> None:
     _run_device_bench("store_scale", ["--shards", "1,4"], full)
     _run_device_bench("segment_scale", ["--shards", "1,4"], full)
     _run_device_bench("obs_overhead", [], full)
+    _run_device_bench("profile_overhead", [], full)
 
     t0 = time.perf_counter()
     roofline.main(full=full)

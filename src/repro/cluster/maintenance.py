@@ -86,6 +86,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.compile_watch import watch_region
 from repro.obs.metrics import default_registry
 
 __all__ = ["MaintenanceDaemon", "TieredMergePolicy"]
@@ -247,10 +248,14 @@ class MaintenanceDaemon:
         t0 = time.monotonic()
         try:
             if kind == "merge":
-                rebuilt = snapshot.merge_segments(plan["start"],
-                                                  plan["count"])
+                with watch_region("maintenance.merge",
+                                  sig=(plan["start"], plan["count"])):
+                    rebuilt = snapshot.merge_segments(plan["start"],
+                                                      plan["count"])
             else:
-                rebuilt = snapshot.compact()          # outside the lock
+                with watch_region("maintenance.compact",
+                                  sig=(int(getattr(snapshot, "n_ids", 0)),)):
+                    rebuilt = snapshot.compact()      # outside the lock
         except Exception as exc:  # noqa: BLE001 - recorded, not fatal
             # a failing on-device rebuild (OOM, compile error) must not
             # kill maintenance for the healthy groups -- log it and

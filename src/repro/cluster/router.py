@@ -63,6 +63,7 @@ healed groups re-admit without a manual ``mark_up``.
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
 from concurrent.futures import CancelledError, Future
 from typing import List, Optional
@@ -70,7 +71,10 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core import TrimFilter
+from repro.obs.compile_watch import active_watch
 from repro.obs.metrics import default_registry
+from repro.obs.profile import ProfileNode
+from repro.obs.slowlog import start_request_trace
 from repro.obs.tracing import NULL_TRACE
 from repro.serve.engine import BatchedSearchEngine
 
@@ -146,6 +150,8 @@ class ClusterEngine:
         probe_s: Optional[float] = None,
         metrics=None,
         tracer=None,
+        slowlog=None,
+        compile_watch=None,
     ):
         """``index`` is a ShardedVectorIndex (its R replica groups become
         the cluster's groups) or an explicit list of group indexes (full
@@ -171,6 +177,13 @@ class ClusterEngine:
             raise ValueError("need at least one replica group")
         self.metrics = metrics if metrics is not None else default_registry()
         self.tracer = tracer
+        # request-level tail capture lives at the CLUSTER seam (one
+        # skeleton per request, spanning routing + failover resubmits);
+        # per-group batchers receive traces from here, never admit their
+        # own (repro.obs.slowlog)
+        self.slowlog = slowlog
+        self.compile_watch = (compile_watch if compile_watch is not None
+                              else active_watch())
         self.store = store
         if store is not None:
             from repro.store.durable import DurableIndex
@@ -189,7 +202,8 @@ class ClusterEngine:
             BatchedSearchEngine(
                 fp, batch_size=batch_size, max_wait_s=max_wait_s, k=k,
                 page=page, trim=trim, engine=engine, merge=merge,
-                max_postings=max_postings, metrics=self.metrics, group=g)
+                max_postings=max_postings, metrics=self.metrics, group=g,
+                compile_watch=self.compile_watch)
             for g, fp in enumerate(self._failpoints)
         ]
         self._c_submitted = self.metrics.counter("cluster.requests.submitted")
@@ -298,8 +312,8 @@ class ClusterEngine:
         q = np.asarray(query_vec, np.float32)
         tried: set = set()
         marked: list = []                 # groups THIS request marked down
-        trace = (self.tracer.start("query", stream=stream)
-                 if self.tracer is not None else NULL_TRACE)
+        trace = start_request_trace(self.tracer, self.slowlog, "query",
+                                    stream=stream)
         self._c_submitted.inc()
 
         def attempt(prev_exc=None):
@@ -367,6 +381,42 @@ class ClusterEngine:
     def search(self, query_vec: np.ndarray, stream=None,
                timeout: float = 10.0):
         return self.submit(query_vec, stream=stream).result(timeout=timeout)
+
+    def profile(self, query_vec: np.ndarray, stream=None,
+                timeout: float = 10.0):
+        """ES ``_search?profile=true``: one query -> ``(ids, scores,
+        profile_dict)`` where the tree adds the cluster's routing phase
+        (group picked, healthy-copy count) on top of the chosen group's
+        engine profile (queue wait -> batch form -> dispatch -> the
+        index's phase children).  Scores are bit-identical to
+        :meth:`search` -- profiling only fences phase boundaries.
+
+        The profile path routes once and does NOT fail over (a profile
+        of a failed dispatch would profile the wrong thing); the error
+        propagates so the caller can fall back to :meth:`search`.
+        """
+        if self._closed:
+            raise RuntimeError("engine closed")
+        q = np.asarray(query_vec, np.float32)
+        t0 = time.monotonic()
+        root = ProfileNode("cluster.query", n_groups=self.n_groups,
+                           **({} if stream is None else {"stream": stream}))
+        up = len(self.health.up_groups())
+        g = self._pick(stream)
+        t_route = time.monotonic()
+        self._c_submitted.inc()
+        root.child("route", t_route - t0, group=g, up_groups=up)
+        try:
+            ids, scores, prof = self._batchers[g].submit(
+                q, profile=True).result(timeout=timeout)
+        except Exception:
+            self._c_failed.inc()
+            raise
+        self._c_completed.inc()
+        self._c_group_completed[g].inc()
+        root.children.append(prof)
+        root.duration_s = time.monotonic() - t0
+        return ids, scores, root.to_dict()
 
     # ------------------------------------------------------- control plane
     def add_documents(self, vectors) -> int:

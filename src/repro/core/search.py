@@ -26,6 +26,7 @@ paper's §5 recommendation -- with optional index-side ``best`` at build time.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional, Tuple
 
 import jax
@@ -218,6 +219,7 @@ class VectorIndex:
         engine: str = "postings",
         weighting: str = "idf",
         max_postings: Optional[int] = None,
+        profile=None,
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Two-phase search -> (ids (Q,k), cosine scores (Q,k)).
 
@@ -228,28 +230,76 @@ class VectorIndex:
         4x fewer phase-1 bytes.  Phase 2 is the same exact-fp32 rerank
         for every engine.  ``fused_int8`` reads no tokens, so
         trim/best/weighting do not apply to it.
+
+        ``profile`` is an optional :class:`repro.obs.profile.ProfileNode`
+        that receives encode / phase1 / rescore children with host-side
+        wall times (``jax.block_until_ready`` fences between phases; the
+        fences change only *when* results are observed, never their
+        values, so bit-parity pins hold with profiling on).
         """
         queries = jnp.atleast_2d(queries)
         page = min(page, self.n_docs)
         k = min(k, page)
+        t_prof = time.monotonic() if profile is not None else 0.0
         if engine in FUSED_ENGINES:
             from repro.kernels.fused_phase1 import ops as fp_ops
 
             if engine == "fused":
                 q, qcodes, w = self.encode_queries(
                     queries, trim, best, weighting)
+                if profile is not None:
+                    jax.block_until_ready((q, qcodes, w))
+                    t_now = time.monotonic()
+                    profile.child("encode", t_now - t_prof,
+                                  n_queries=int(q.shape[0]))
+                    t_prof = t_now
                 _, cand = fp_ops.fused_phase1(self.codes, qcodes, w,
                                               page=page)
             else:
                 q = normalize(jnp.asarray(queries, jnp.float32))
+                if profile is not None:
+                    jax.block_until_ready(q)
+                    t_now = time.monotonic()
+                    profile.child("encode", t_now - t_prof,
+                                  n_queries=int(q.shape[0]))
+                    t_prof = t_now
                 qt = self.quantized
                 _, cand = fp_ops.fused_phase1_quant(
                     qt.codes, qt.scale, qt.zero, q, page=page)
-            return rerank_topk(self.vectors, cand, q, k)
+            if profile is not None:
+                jax.block_until_ready(cand)
+                t_now = time.monotonic()
+                profile.child("phase1", t_now - t_prof, engine=engine,
+                              kernel=engine, page=int(page), k=int(k),
+                              candidates=int(cand.size))
+                t_prof = t_now
+            ids, scores = rerank_topk(self.vectors, cand, q, k)
+            if profile is not None:
+                jax.block_until_ready((ids, scores))
+                profile.child("rescore", time.monotonic() - t_prof,
+                              k=int(k))
+            return ids, scores
         q, qcodes, w = self.encode_queries(queries, trim, best, weighting)
+        if profile is not None:
+            jax.block_until_ready((q, qcodes, w))
+            t_now = time.monotonic()
+            profile.child("encode", t_now - t_prof,
+                          n_queries=int(q.shape[0]))
+            t_prof = t_now
         scores1 = self.phase1_scores(qcodes, w, engine, max_postings)
         _, cand = jax.lax.top_k(scores1, page)                  # (Q, page)
-        return rerank_topk(self.vectors, cand, q, k)
+        if profile is not None:
+            jax.block_until_ready(cand)
+            t_now = time.monotonic()
+            profile.child("phase1", t_now - t_prof, engine=engine,
+                          kernel="composed", page=int(page), k=int(k),
+                          candidates=int(cand.size))
+            t_prof = t_now
+        ids, scores = rerank_topk(self.vectors, cand, q, k)
+        if profile is not None:
+            jax.block_until_ready((ids, scores))
+            profile.child("rescore", time.monotonic() - t_prof, k=int(k))
+        return ids, scores
 
     # ------------------------------------------------------------------- shard
     def shard(self, mesh) -> "ShardedVectorIndex":  # noqa: F821 (lazy import)

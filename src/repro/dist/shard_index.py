@@ -127,6 +127,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import time
 from functools import partial
 from typing import Optional, Tuple
 
@@ -136,6 +137,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.encoding import Encoder, RoundingEncoder
+from repro.obs.compile_watch import watch_region
 from repro.core.filtering import (BestFilter, TrimFilter, expand_mask,
                                   feature_mask, index_best_codes)
 from repro.core.postings import (Postings, build_postings, code_df,
@@ -544,8 +546,10 @@ class ShardedVectorIndex:
         raw = _put(mesh, v.reshape(ns, dp, n_feat), _ROW)
         lv = _put(mesh, lv.reshape(ns, dp), _VEC)
 
-        vecs, codes, pdocs, pcodes = _build_program(
-            raw, lv, mesh=mesh, encoder=encoder, index_best=index_best)
+        with watch_region("build.program",
+                          sig=(int(ns), int(dp), int(n_feat))):
+            vecs, codes, pdocs, pcodes = _build_program(
+                raw, lv, mesh=mesh, encoder=encoder, index_best=index_best)
 
         return cls(
             vectors=vecs,
@@ -600,7 +604,8 @@ class ShardedVectorIndex:
         # per-shard inverted indexes in one SPMD program: the sentinel sorts
         # to the tail of every posting list, so padded docs are invisible to
         # range lookups
-        pdocs, pcodes = _postings_program(codes, mesh=mesh)
+        with watch_region("build.postings", sig=tuple(codes.shape)):
+            pdocs, pcodes = _postings_program(codes, mesh=mesh)
 
         offsets = cls._offsets(ns, dp)
         counts = np.clip(n - offsets, 0, dp)        # real rows per shard
@@ -703,9 +708,12 @@ class ShardedVectorIndex:
         sh, sl = jnp.asarray(shard_of), jnp.asarray(slot_of)
         # growth batches skip donation: the concat temporaries above are
         # uncommitted, so the aliasing would be silently dropped anyway
-        svec, scod, sgid, sliv = _append_update(self.mesh, donate and not grew)(
-            svec, scod, sgid, sliv, sh, sl, v,
-            codes.astype(scod.dtype), jnp.asarray(gids))
+        with watch_region("ingest.append",
+                          sig=(int(m), int(svec.shape[1]), bool(grew))):
+            svec, scod, sgid, sliv = _append_update(
+                self.mesh, donate and not grew)(
+                svec, scod, sgid, sliv, sh, sl, v,
+                codes.astype(scod.dtype), jnp.asarray(gids))
         out = dataclasses.replace(
             self,
             seg_vectors=svec, seg_codes=scod, seg_gids=sgid, seg_live=sliv,
@@ -736,7 +744,8 @@ class ShardedVectorIndex:
         scod = _put(self.mesh, self.seg_codes[:, :w], _ROW)
         sgid = _put(self.mesh, self.seg_gids[:, :w], _VEC)
         sliv = _put(self.mesh, self.seg_live[:, :w], _VEC)
-        pdocs, pcodes = _postings_program(scod, mesh=self.mesh)
+        with watch_region("ingest.seal", sig=(int(w), ns)):
+            pdocs, pcodes = _postings_program(scod, mesh=self.mesh)
         seg = Segment(svec, scod, sgid, sliv, pdocs, pcodes,
                       n_rows=n_act, tombstones=self.active_tombstones)
         # the sealed generation inherits the active buffer's quant cache
@@ -956,7 +965,8 @@ class ShardedVectorIndex:
         dcod = _put(self.mesh, mc, _ROW)
         dgid = _put(self.mesh, mg, _VEC)
         dliv = _put(self.mesh, ml, _VEC)
-        pdocs, pcodes = _postings_program(dcod, mesh=self.mesh)
+        with watch_region("merge.postings", sig=(int(w), ns)):
+            pdocs, pcodes = _postings_program(dcod, mesh=self.mesh)
         merged = Segment(dvec, dcod, dgid, dliv, pdocs, pcodes,
                          n_rows=n_live, tombstones=0)
         return dataclasses.replace(
@@ -976,6 +986,7 @@ class ShardedVectorIndex:
         max_postings: "Optional[int | str]" = None,
         merge: str = "gather",
         live_groups: "Optional[Tuple[int, ...]]" = None,
+        profile=None,
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Distributed two-phase search -> (ids (Q,k), cosine scores (Q,k)).
 
@@ -996,9 +1007,17 @@ class ShardedVectorIndex:
         only to the named replica columns (dead columns get zero rows,
         which can never reach a caller) -- the health-masked merge the
         cluster control plane routes through when a group is down.
+
+        ``profile`` is an optional :class:`~repro.obs.profile.
+        ProfileNode` the phases annotate themselves into (encode,
+        phase-1 with per-replica-group and per-generation candidate
+        counts, merge select, rescore).  Phase boundaries are fenced
+        with ``jax.block_until_ready`` -- host-side observation only,
+        the computed values (and bit-parity) are untouched.
         """
         if merge not in ("gather", "stream"):
             raise ValueError(f"unknown merge transport {merge!r}")
+        t_prof = time.monotonic() if profile is not None else 0.0
         R = self.n_replicas
         if live_groups is None:
             groups = tuple(range(R))
@@ -1037,6 +1056,12 @@ class ShardedVectorIndex:
         qcodes = self.encoder.encode(q)
         mask = expand_mask(feature_mask(q, trim=trim, best=best),
                            qcodes.shape[-1])
+        if profile is not None:
+            jax.block_until_ready((q, qcodes, mask))
+            t_now = time.monotonic()
+            profile.child("encode", t_now - t_prof,
+                          n_queries=int(n_q), groups=U)
+            t_prof = t_now
 
         if max_postings == "auto":
             max_postings = max(1, self.max_df)
@@ -1050,23 +1075,28 @@ class ShardedVectorIndex:
         # table (mixing quantized-cosine and idf-sum scales inside one
         # top_k would be meaningless); other engines pass no quant leaves
         quant = engine == "fused_int8"
-        gids, scores = _query_phase(
-            self.vectors, self.codes, self.post_docs, self.post_codes,
-            self.offsets, self.live,
-            self.seg_vectors if seg else None,
-            self.seg_codes if seg else None,
-            self.seg_gids if seg else None,
-            self.seg_live if seg else None,
-            sealed,
-            self._quant_base() if quant else None,
-            self._quant_active() if (quant and seg) else None,
-            tuple(s.quantized(self.mesh) for s in self.segments)
-            if quant else (),
-            q, qcodes, mask, jnp.asarray(self.n_ids, jnp.int32),
-            mesh=self.mesh, max_abs_bucket=self.encoder.max_abs_bucket,
-            page_loc=page_loc, engine=engine, weighting=weighting,
-            max_postings=L, k=k if merge == "stream" else 0, merge=merge,
-        )
+        with watch_region(
+                "search.query_phase",
+                sig=(tuple(q.shape), engine, weighting, int(page_loc),
+                     int(L), int(k) if merge == "stream" else 0, merge,
+                     len(self.segments), bool(seg))):
+            gids, scores = _query_phase(
+                self.vectors, self.codes, self.post_docs, self.post_codes,
+                self.offsets, self.live,
+                self.seg_vectors if seg else None,
+                self.seg_codes if seg else None,
+                self.seg_gids if seg else None,
+                self.seg_live if seg else None,
+                sealed,
+                self._quant_base() if quant else None,
+                self._quant_active() if (quant and seg) else None,
+                tuple(s.quantized(self.mesh) for s in self.segments)
+                if quant else (),
+                q, qcodes, mask, jnp.asarray(self.n_ids, jnp.int32),
+                mesh=self.mesh, max_abs_bucket=self.encoder.max_abs_bucket,
+                page_loc=page_loc, engine=engine, weighting=weighting,
+                max_postings=L, k=k if merge == "stream" else 0, merge=merge,
+            )
         # drop replica-pad and dead-column rows BEFORE the final reduce: the
         # rescore inside _merge_phase must run at the true (Q, k, n) shape
         # -- the canonical shape of exact_scores -- or pad rows would
@@ -1078,7 +1108,42 @@ class ShardedVectorIndex:
             gids, scores, q = gids[sel], scores[sel], q[sel]
         elif pad_real:
             gids, scores, q = gids[:n_q], scores[:n_q], q[:n_q]
-        return _merge_phase(self, gids, scores, q, k=k)
+        if profile is not None:
+            jax.block_until_ready((gids, scores))
+            t_now = time.monotonic()
+            kernel = engine if engine in FUSED_ENGINES else "composed"
+            node = profile.child(
+                "phase1", t_now - t_prof, engine=engine, kernel=kernel,
+                page=int(page), page_loc=int(page_loc), k=int(k),
+                merge=merge)
+            t_prof = t_now
+            # per-replica-group children: padded row-block j of the batch
+            # ran on live column groups[j]
+            for j, c in enumerate(groups):
+                nq_j = max(0, min(n_q, (j + 1) * B) - j * B)
+                if nq_j:
+                    node.child(f"group{c}", n_queries=int(nq_j))
+            # per-generation candidate counts, resolved host-side by gid
+            # membership (profile mode only -- this is a device readback)
+            gh = np.asarray(gids)
+            valid = gh[gh >= 0]
+            node.attrs["candidates"] = int(valid.size)
+            node.child("base", rows=int(self.n_docs),
+                       candidates=int((valid < self.n_docs).sum()))
+            appended = valid[valid >= self.n_docs]
+            for gi, s in enumerate(self.segments):
+                sg = np.asarray(s.gids).ravel()
+                node.child(f"gen{gi}", rows=int(s.n_rows),
+                           tombstones=int(s.tombstones),
+                           candidates=int(np.isin(
+                               appended, sg[sg >= 0]).sum()))
+            if seg and self.n_active:
+                ag = np.asarray(self.seg_gids).ravel()
+                node.child("active", rows=int(self.n_active),
+                           tombstones=int(self.active_tombstones),
+                           candidates=int(np.isin(
+                               appended, ag[ag >= 0]).sum()))
+        return _merge_phase(self, gids, scores, q, k=k, profile=profile)
 
 
 @partial(jax.jit, static_argnames=("mesh", "encoder", "index_best"))
@@ -1172,7 +1237,7 @@ def _postings_program(codes, *, mesh):
     return fn(codes)
 
 
-def _merge_phase(sidx, gids, scores, q, *, k):
+def _merge_phase(sidx, gids, scores, q, *, k, profile=None):
     """Coordinating-node reduce: global top-k over the exact cosines, then
     final scores recomputed at the (Q, k, n) shape shared with rerank_topk
     -- see exact_scores for why this gives bit-parity.  For the stream
@@ -1188,20 +1253,36 @@ def _merge_phase(sidx, gids, scores, q, *, k):
     Result slots whose merged score is -inf (fewer than k live candidates)
     report id -1 and keep score -inf through the rescore.
     """
+    t_prof = time.monotonic() if profile is not None else 0.0
     seg_parts = tuple((s.vectors, s.gids) for s in sidx.segments)
     if sidx.n_appended and sidx.seg_capacity:
         seg_parts += ((sidx.seg_vectors, sidx.seg_gids),)
-    if seg_parts:
-        top_ids, cvec = _merge_select_seg(
-            sidx.vectors, seg_parts, gids, scores, k=k, n_docs=sidx.n_docs)
-    else:
-        # no appended rows anywhere (fresh index, or every appended row was
-        # merged away dead): candidates are base gids only
-        top_ids, cvec = _merge_select(sidx.vectors, gids, scores, k=k)
+    with watch_region("search.merge_select",
+                      sig=(tuple(gids.shape), int(k), len(seg_parts))):
+        if seg_parts:
+            top_ids, cvec = _merge_select_seg(
+                sidx.vectors, seg_parts, gids, scores, k=k,
+                n_docs=sidx.n_docs)
+        else:
+            # no appended rows anywhere (fresh index, or every appended
+            # row was merged away dead): candidates are base gids only
+            top_ids, cvec = _merge_select(sidx.vectors, gids, scores, k=k)
+    if profile is not None:
+        jax.block_until_ready((top_ids, cvec))
+        t_now = time.monotonic()
+        profile.child("merge_select", t_now - t_prof, k=int(k),
+                      generations=len(seg_parts))
+        t_prof = t_now
     dev = jax.devices()[0]
-    return top_ids, _rescore(jax.device_put(cvec, dev),
-                             jax.device_put(q, dev),
-                             jax.device_put(top_ids, dev))
+    cvec_d = jax.device_put(cvec, dev)
+    q_d = jax.device_put(q, dev)
+    ids_d = jax.device_put(top_ids, dev)
+    with watch_region("search.rescore", sig=(tuple(q.shape), int(k))):
+        out = _rescore(cvec_d, q_d, ids_d)
+    if profile is not None:
+        jax.block_until_ready(out)
+        profile.child("rescore", time.monotonic() - t_prof, k=int(k))
+    return top_ids, out
 
 
 @partial(jax.jit, static_argnames=("k",))

@@ -48,6 +48,18 @@ per-group completions under ``--cluster``), zero failures surfaced to
 callers, and -- under ``--fail-shard`` -- exactly one health down
 transition with at least one failover resubmit.  ``make smoke-obs``
 drives both the healthy and the fail-shard variant.
+
+Observability v2 (``make smoke-profile`` drives all four together):
+``--profile`` re-serves the warmed queries with ES
+``_search?profile=true``-style execution trees and asserts the
+reconciliation contract -- each tree's phases tile its total exactly,
+and the dispatch phase sums to the dispatch-latency histogram delta;
+``--slow-threshold S`` attaches the tail-sampled slow log (S=0 asserts
+100% capture); ``--fail-on-recompile`` watches jit compiles per (entry
+point, abstract shape) and fails the run on ANY attributed compile after
+the first pass marks steady state; ``--metrics-file PATH`` writes a
+JSONL registry-snapshot history (the Prometheus text exposition comes
+from the same exporter).  See docs/OBSERVABILITY.md for the ES mapping.
 """
 
 from __future__ import annotations
@@ -125,6 +137,31 @@ def main():
                          "asserts the counters reconcile exactly with the "
                          "queries issued (and that --fail-shard recorded "
                          "exactly one down transition)")
+    ap.add_argument("--profile", action="store_true",
+                    help="after the warm serving pass, re-serve every query "
+                         "with _profile-style execution trees, assert each "
+                         "tree's phases tile its total exactly and that the "
+                         "dispatch phase reconciles with the dispatch "
+                         "latency histogram, then print one tree plus "
+                         "per-phase p50/p99")
+    ap.add_argument("--slow-threshold", type=float, default=None,
+                    metavar="S",
+                    help="attach the tail-sampled slow log: every request "
+                         "slower than S seconds (or failed) is captured at "
+                         "100%% regardless of head sampling; S=0 captures "
+                         "everything and the run asserts captured == seen")
+    ap.add_argument("--metrics-file", default=None, metavar="PATH",
+                    help="write a JSONL metrics-snapshot history to PATH "
+                         "(one registry snapshot at each serving milestone "
+                         "+ final) and print the final Prometheus text "
+                         "exposition size")
+    ap.add_argument("--fail-on-recompile", action="store_true",
+                    help="watch jit compiles per (entry point, abstract "
+                         "shape); after the first serving pass marks steady "
+                         "state, ANY further attributed compile fails the "
+                         "run (incompatible with --auto-compact and "
+                         "--kill-and-recover, whose post-warmup rebuilds "
+                         "legitimately compile)")
     args = ap.parse_args()
     if args.replicas > 1 and args.shards < 1:
         ap.error("--replicas needs --shards >= 1")
@@ -156,6 +193,15 @@ def main():
         ap.error("--kill-and-recover needs --store")
     if args.stats_interval is not None and args.stats_interval <= 0:
         ap.error("--stats-interval must be positive")
+    if args.slow_threshold is not None and args.slow_threshold < 0:
+        ap.error("--slow-threshold must be >= 0")
+    if args.fail_on_recompile and args.auto_compact is not None:
+        ap.error("--fail-on-recompile is incompatible with --auto-compact: "
+                 "post-warmup background merges legitimately compile")
+    if args.fail_on_recompile and args.kill_and_recover:
+        ap.error("--fail-on-recompile is incompatible with "
+                 "--kill-and-recover: the post-warmup recovery rebuild "
+                 "legitimately compiles")
 
     print(f"building corpus ({args.docs} docs) + LSA-{args.features} ...")
     corpus = make_corpus(n_docs=args.docs, vocab_size=max(args.docs, 8000),
@@ -213,6 +259,27 @@ def main():
         # not a steady-state service, so full traces beat low overhead
         tracer = Tracer(capacity=64, sample=1.0)
         common["tracer"] = tracer
+    slowlog = None
+    if args.slow_threshold is not None:
+        from repro.obs import SlowLog
+
+        slowlog = SlowLog(threshold_s=args.slow_threshold, capacity=256)
+        common["slowlog"] = slowlog
+    watch = None
+    if args.fail_on_recompile:
+        from repro.obs import active_watch
+
+        # the engines attribute their compiles to the process default
+        # watch automatically; host-side analytics (the gold-standard
+        # brute force above) stay <unattributed> and never count against
+        # steady state
+        watch = active_watch()
+    exporter = None
+    if args.metrics_file:
+        from repro.obs import MetricsExporter, default_registry
+
+        exporter = MetricsExporter(default_registry(),
+                                   path=args.metrics_file)
     if args.cluster:
         from repro.cluster import ClusterEngine
 
@@ -310,6 +377,81 @@ def main():
               f"batch={args.batch_size}, engine={args.engine})")
         print(f"P@10 vs brute force: {p10:.3f} "
               f"(trim={args.trim}, page={args.page})")
+
+        if exporter is not None:
+            exporter.collect()
+        if watch is not None:
+            # everything the steady-state service needs is compiled by
+            # the first pass; from here any attributed compile is a
+            # recompile bug
+            watch.mark_steady()
+            print(f"compile watch: {watch.compiles_total} compile(s) "
+                  "during warmup; steady state marked", flush=True)
+
+        if args.profile:
+            from repro.obs import format_profile_tree
+
+            def _find(node, name):
+                if node["name"] == name:
+                    return node
+                for c in node["children"]:
+                    hit = _find(c, name)
+                    if hit is not None:
+                        return hit
+                return None
+
+            hist0 = engine.metrics.snapshot()["histograms"].get(
+                "engine.dispatch.latency_s", {})
+            sum0 = sum(v["sum"] for v in hist0.values())
+            trees = []
+            t0 = time.time()
+            for i, q in enumerate(queries):
+                if args.cluster:
+                    _, _, tree = engine.profile(q, stream=i % n_streams)
+                else:
+                    _, _, tree = engine.search(q, profile=True)
+                trees.append(tree)
+            n_issued += len(trees)
+            dt = time.time() - t0
+            hist1 = engine.metrics.snapshot()["histograms"].get(
+                "engine.dispatch.latency_s", {})
+            sum1 = sum(v["sum"] for v in hist1.values())
+            phases = {}
+            disp_total = 0.0
+            for tree in trees:
+                q_node = _find(tree, "query")
+                assert q_node is not None, tree
+                kids = [c for c in q_node["children"]
+                        if c["duration_s"] is not None]
+                tiled = sum(c["duration_s"] for c in kids)
+                assert abs(q_node["duration_s"] - tiled) < 1e-6, \
+                    (q_node["duration_s"], tiled)
+                disp = _find(tree, "dispatch")
+                disp_total += disp["duration_s"]
+                for c in kids + disp["children"]:
+                    if c.get("duration_s") is not None:
+                        phases.setdefault(c["name"], []).append(
+                            c["duration_s"])
+            # the pass is sequential, so each profiled request is its own
+            # batch: the trees' dispatch phase must reconcile with the
+            # dispatch-latency histogram delta (float addition error only)
+            assert abs((sum1 - sum0) - disp_total) < 1e-6, \
+                (sum1 - sum0, disp_total)
+            print(f"profile: {len(trees)} trees in {dt:.2f}s -- phases "
+                  "tile each total exactly; dispatch reconciles with the "
+                  f"latency histogram ({disp_total * 1e3:.1f} ms)",
+                  flush=True)
+            print(format_profile_tree(trees[0]), flush=True)
+
+            def _q(vals, frac):
+                s = sorted(vals)
+                return s[min(len(s) - 1, int(frac * len(s)))] * 1e3
+
+            for name in sorted(phases):
+                vals = phases[name]
+                print(f"  phase {name:<12} p50={_q(vals, 0.5):8.3f}ms "
+                      f"p99={_q(vals, 0.99):8.3f}ms  (n={len(vals)})",
+                      flush=True)
 
         if args.fail_shard is not None:
             engine.inject_failure(args.fail_shard)
@@ -412,10 +554,35 @@ def main():
             print(f"re-served {args.queries} queries on the recovered "
                   f"index in {dt:.2f}s (P@10 {p10_rec:.3f})")
         obs_final()
+        if slowlog is not None:
+            ss = slowlog.stats()
+            print(f"slowlog: {ss['captured']}/{ss['seen']} captured "
+                  f"({ss['slow']} slow, {ss['errors']} errors, threshold "
+                  f"{ss['threshold_s'] * 1e3:.0f}ms)", flush=True)
+            if args.slow_threshold == 0:
+                assert ss["captured"] == ss["seen"], ss
+                print("slowlog: tail capture reconciles -- every request "
+                      "captured at threshold 0", flush=True)
+        if watch is not None:
+            cs = watch.stats()
+            print(f"recompile watch: {cs['compiles_total']} total, "
+                  f"{cs['compiles_steady_state']} post-warmup across "
+                  f"{len(cs['by_function'])} entry point(s)", flush=True)
+            watch.check()        # raises on any steady-state recompile
+            print("recompile watch: zero steady-state recompiles",
+                  flush=True)
+        if exporter is not None:
+            exporter.collect()
+            text = exporter.text()
+            print(f"metrics: {len(exporter.history())} snapshot(s) -> "
+                  f"{args.metrics_file}; prometheus exposition "
+                  f"{len(text.splitlines())} lines", flush=True)
     finally:
         if stats_stop is not None:
             stats_stop.set()
         engine.close()
+        if slowlog is not None:
+            slowlog.close()
         if store is not None:
             store.close()
 

@@ -38,10 +38,35 @@ Each piece against its Elasticsearch analogue:
 every S seconds and a full stats + trace dump at exit; ``make
 smoke-obs`` runs it on a 4-device cluster with an injected failure and
 asserts the counters reconcile.
+
+v2 adds the *why* layer (see ``docs/OBSERVABILITY.md`` for the full
+ES mapping):
+
+* :mod:`repro.obs.profile` -- ``_search?profile=true``: a per-query
+  :class:`~repro.obs.profile.ProfileNode` phase tree (queue wait ->
+  batch form -> encode -> phase-1 -> merge select -> rescore, with
+  per-replica-group / per-generation candidate counts and the kernel
+  path taken), via ``engine.search(..., profile=True)`` and
+  ``ClusterEngine.profile(query)``.
+* :mod:`repro.obs.slowlog` -- the search slow log with tail-based
+  capture: every request gets a span skeleton; crossing
+  ``slow_threshold_s`` (or erroring) promotes it to a full trace +
+  profile tree at 100% capture, regardless of head sampling.
+* :mod:`repro.obs.compile_watch` -- recompile telemetry: compiles
+  counted per (wrapped entry point, abstract-shape signature), compile
+  wall-time histogram, and a steady-state guard behind
+  ``serve.py --fail-on-recompile``.
+* :mod:`repro.obs.export` -- Prometheus text exposition of the
+  registry + a JSONL snapshot history ring
+  (``serve.py --metrics-file``).
 """
 
+from .compile_watch import CompileWatch, active_watch, watch_region
+from .export import MetricsExporter, prometheus_text
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       default_registry)
+from .profile import ProfileNode, format_profile_tree, profile_from_trace
+from .slowlog import SlowLog, start_request_trace
 from .stats import (cluster_stats, engine_stats, format_segments_line,
                     format_stats_line, index_stats, store_stats)
 from .tracing import NULL_TRACE, Span, Trace, Tracer, annotation
@@ -51,4 +76,8 @@ __all__ = [
     "Span", "Trace", "Tracer", "NULL_TRACE", "annotation",
     "index_stats", "engine_stats", "cluster_stats", "store_stats",
     "format_stats_line", "format_segments_line",
+    "ProfileNode", "format_profile_tree", "profile_from_trace",
+    "SlowLog", "start_request_trace",
+    "CompileWatch", "active_watch", "watch_region",
+    "MetricsExporter", "prometheus_text",
 ]

@@ -47,6 +47,32 @@ def _hist(registry, name: str, **labels) -> dict:
     return registry.histogram(name, **labels).snapshot()
 
 
+def _kernel_mix(registry, labels: dict) -> dict:
+    """Dispatch counts per phase-1 path for ONE batcher, parsed from
+    the ``engine.kernel_path`` series (labelled ``engine=<name>`` plus
+    the batcher's own labels).  A fleet registry holds every batcher's
+    series; filtering on the non-engine labels keeps each group's mix
+    its own."""
+    want = {k: str(v) for k, v in labels.items()}
+    out: dict = {}
+    for label_str, v in registry.series("engine.kernel_path").items():
+        kv = dict(part.split("=", 1) for part in label_str.split(",") if part)
+        eng = kv.pop("engine", None)
+        if eng is None or kv != want:
+            continue
+        out[eng] = out.get(eng, 0) + v
+    return out
+
+
+def _compile_stats(watch) -> dict:
+    """The compile-watch section, without the (possibly long) event
+    list -- stats lines want the totals; ``watch.stats()`` has the rest.
+    """
+    s = watch.stats()
+    return {k: s[k] for k in ("compiles_total", "compiles_steady_state",
+                              "steady", "signatures", "by_function")}
+
+
 def index_stats(index) -> dict:
     """Docs/segments section for any served index (plain VectorIndex
     reports what it has; sharded/durable indexes report the full ES
@@ -95,7 +121,13 @@ def engine_stats(engine) -> dict:
         queue_depth = len(engine._queue)
         inflight = engine._inflight
         index = engine.index
-    return {
+    # the full dispatch mix, not just this batcher's configured engine:
+    # a batcher reconfigured mid-life (or sharing a registry with its
+    # past self) reports every path it ever took, zero-seeded with the
+    # current one so the mix is never empty
+    mix = _kernel_mix(reg, labels)
+    mix.setdefault(engine.engine, 0)
+    out = {
         "queue_depth": queue_depth,
         "in_flight": inflight,
         "pending": queue_depth + inflight,
@@ -118,10 +150,16 @@ def engine_stats(engine) -> dict:
         # dispatches by phase-1 path (labelled by engine name) -- the
         # fused-kernel rollout gauge: a mixed fleet shows its
         # fused/composed split here
-        "kernel_path": {engine.engine: reg.value(
-            "engine.kernel_path", engine=engine.engine, **labels)},
+        "kernel_path": mix,
         "index": index_stats(index),
     }
+    slowlog = getattr(engine, "slowlog", None)
+    if slowlog is not None:
+        out["slowlog"] = slowlog.stats()
+    watch = getattr(engine, "compile_watch", None)
+    if watch is not None:
+        out["compile"] = _compile_stats(watch)
+    return out
 
 
 def _maintenance_stats(daemon) -> dict:
@@ -175,6 +213,12 @@ def cluster_stats(cluster) -> dict:
             "mark_ups": reg.total("health.mark_ups"),
         },
     }
+    slowlog = getattr(cluster, "slowlog", None)
+    if slowlog is not None:
+        out["slowlog"] = slowlog.stats()
+    watch = getattr(cluster, "compile_watch", None)
+    if watch is not None:
+        out["compile"] = _compile_stats(watch)
     if cluster.maintenance is not None:
         out["maintenance"] = _maintenance_stats(cluster.maintenance)
     if cluster.store is not None:
@@ -255,6 +299,12 @@ def format_segments_line(stats: dict) -> str:
     return " ".join(parts)
 
 
+def _kernel_field(mix: dict) -> str:
+    """``kernel=codes:5/fused:3`` -- the fused/composed dispatch mix,
+    sorted by path name so the rendering is deterministic."""
+    return "/".join(f"{k}:{v}" for k, v in sorted(mix.items())) or "-"
+
+
 def format_stats_line(stats: dict) -> str:
     """One compact ``_cat``-style line from a cluster OR engine stats
     dict (the ``--stats-interval`` periodic printer)."""
@@ -267,12 +317,17 @@ def format_stats_line(stats: dict) -> str:
                  if g["health"] == "up")
         p99s = [h["p99"] for h in disp if h["p99"] is not None]
         w50s = [h["p50"] for h in waits if h["p50"] is not None]
+        mix: dict = {}
+        for g in stats["groups"].values():
+            for eng, v in g.get("kernel_path", {}).items():
+                mix[eng] = mix.get(eng, 0) + v
         return (f"stats groups={up}/{stats['n_groups']}up "
                 f"pending={pend} "
                 f"done={req['completed']}/{req['submitted']} "
                 f"failed={req['failed']} "
                 f"spills={stats['routing']['spills']} "
                 f"resubmits={stats['routing']['failover_resubmits']} "
+                f"kernel={_kernel_field(mix)} "
                 f"wait_p50={_ms(max(w50s) if w50s else None)} "
                 f"dispatch_p99={_ms(max(p99s) if p99s else None)}")
     req = stats["requests"]                    # single engine
@@ -281,5 +336,6 @@ def format_stats_line(stats: dict) -> str:
             f"done={req['completed']}/{req['submitted']} "
             f"failed={req['failed']} "
             f"occupancy_p50={'-' if occ is None else format(occ, '.2f')} "
+            f"kernel={_kernel_field(stats.get('kernel_path', {}))} "
             f"wait_p50={_ms(stats['queue_wait_s']['p50'])} "
             f"dispatch_p99={_ms(stats['dispatch_latency_s']['p99'])}")

@@ -80,10 +80,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import TrimFilter, VectorIndex
+from repro.obs.compile_watch import active_watch
 from repro.obs.metrics import default_registry
-from repro.obs.tracing import NULL_TRACE, annotation
+from repro.obs.profile import ProfileNode
+from repro.obs.slowlog import start_request_trace
+from repro.obs.tracing import annotation
 
 __all__ = ["BatchedSearchEngine"]
+
+
+def _accepts_profile(index) -> bool:
+    """Whether ``index.search`` takes the ``profile`` kwarg (the engine
+    is index-polymorphic; test doubles and plain callables may not).
+    ``**kwargs`` wrappers count -- they forward to an index that does."""
+    try:
+        params = inspect.signature(index.search).parameters
+    except (TypeError, ValueError):  # pragma: no cover - builtin search
+        return False
+    return "profile" in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
 
 
 class BatchedSearchEngine:
@@ -102,6 +117,8 @@ class BatchedSearchEngine:
         tracer=None,
         group: Optional[int] = None,
         donate_ingest: bool = False,
+        slowlog=None,
+        compile_watch=None,
     ):
         self.index = index
         self.batch_size = batch_size
@@ -126,6 +143,16 @@ class BatchedSearchEngine:
         # registry lookup
         self.metrics = metrics if metrics is not None else default_registry()
         self.tracer = tracer
+        # tail-based slow-query capture (repro.obs.slowlog): with one
+        # attached, EVERY request carries a span skeleton and the slow
+        # log's threshold decides retention at finish -- independent of
+        # the tracer's head sampling
+        self.slowlog = slowlog
+        # recompile telemetry (repro.obs.compile_watch): the dispatch,
+        # ingest, and delete seams run inside watch regions so any XLA
+        # compile they trigger is attributed and counted
+        self.compile_watch = (compile_watch if compile_watch is not None
+                              else active_watch())
         self.group = group
         self._metric_labels = {} if group is None else {"group": group}
         lb = self._metric_labels
@@ -145,7 +172,8 @@ class BatchedSearchEngine:
         self._c_kernel_path = self.metrics.counter(
             "engine.kernel_path", engine=self.engine, **lb)
         self._lock = threading.Condition()
-        # queue items: (query, future, enqueue timestamp, trace)
+        # queue items: (query, future, enqueue timestamp, trace,
+        # want_profile)
         self._queue: List[tuple] = []
         self._stop = False
         self._inflight = 0
@@ -153,34 +181,38 @@ class BatchedSearchEngine:
         self._worker.start()
 
     # ------------------------------------------------------------------ API
-    def submit(self, query_vec: np.ndarray, trace=None) -> Future:
+    def submit(self, query_vec: np.ndarray, trace=None,
+               profile: bool = False) -> Future:
         """Queue one query -> Future of (ids, scores).  ``trace`` is an
         optional :class:`~repro.obs.Trace` the worker appends its spans
         to (the cluster router passes one down); without it, an engine
-        constructed with a ``tracer`` samples its own."""
+        constructed with a ``tracer``/``slowlog`` admits its own (head
+        sampling for the tracer, a retained-on-slow skeleton for the
+        slow log).  With ``profile=True`` the future resolves to
+        ``(ids, scores, profile_dict)`` -- the per-phase execution tree
+        (:mod:`repro.obs.profile`)."""
         fut: Future = Future()
         if trace is None:
-            if self.tracer is not None:
-                trace = self.tracer.start("query")
-                if trace:
-                    t = trace
-                    fut.add_done_callback(
-                        lambda f: t.finish(
-                            error=None if f.cancelled() or f.exception()
-                            is None else repr(f.exception())))
-            else:
-                trace = NULL_TRACE
+            trace = start_request_trace(self.tracer, self.slowlog, "query")
+            if trace:
+                t = trace
+                fut.add_done_callback(
+                    lambda f: t.finish(
+                        error=None if f.cancelled() or f.exception()
+                        is None else repr(f.exception())))
         with self._lock:
             if self._stop:
                 raise RuntimeError("engine closed")
             self._queue.append((np.asarray(query_vec, np.float32), fut,
-                                time.monotonic(), trace))
+                                time.monotonic(), trace, profile))
             self._lock.notify()
         self._c_submitted.inc()
         return fut
 
-    def search(self, query_vec: np.ndarray, timeout: float = 10.0):
-        return self.submit(query_vec).result(timeout=timeout)
+    def search(self, query_vec: np.ndarray, timeout: float = 10.0,
+               profile: bool = False):
+        return self.submit(query_vec, profile=profile).result(
+            timeout=timeout)
 
     @property
     def pending(self) -> int:
@@ -220,7 +252,10 @@ class BatchedSearchEngine:
                       and self.index is not self._serving
                       and "donate" in inspect.signature(add).parameters)
             t0 = time.monotonic()
-            self.index = add(vectors, donate=True) if donate else add(vectors)
+            with self.compile_watch.region(
+                    "engine.ingest", sig=(np.asarray(vectors).shape,)):
+                self.index = (add(vectors, donate=True) if donate
+                              else add(vectors))
             latency = time.monotonic() - t0
         # ingest apply latency measured inside the lock -- this is the
         # stall submits see, the number the segment story exists to bound
@@ -247,7 +282,9 @@ class BatchedSearchEngine:
                     f"{type(self.index).__name__} does not support "
                     "deletes; serve a ShardedVectorIndex")
             t0 = time.monotonic()
-            self.index = delete(ids)
+            with self.compile_watch.region(
+                    "engine.delete", sig=(len(np.atleast_1d(ids)),)):
+                self.index = delete(ids)
             latency = time.monotonic() - t0
         self.metrics.histogram("engine.ingest.latency_s",
                                **self._metric_labels).observe(latency)
@@ -324,16 +361,17 @@ class BatchedSearchEngine:
             # and trace span reports is (t_deq - enqueue), same clock read;
             # one lock acquisition for the whole batch's waits
             self._h_wait.observe_many(
-                [t_deq - t_enq for _, _, t_enq, _ in batch])
+                [t_deq - it[2] for it in batch])
             self._h_occupancy.observe(len(batch) / self.batch_size)
             # a failing search must not kill the worker: every queued and
             # in-flight future would strand (resolve only by caller
             # timeout) -- fail this batch's futures, serve the next batch
             try:
                 error = None
+                prof = None
                 t_dispatch = t_deq    # overwritten once the batch is built
                 try:
-                    qs = np.stack([q for q, _, _, _ in batch])
+                    qs = np.stack([it[0] for it in batch])
                     pad = self.batch_size - qs.shape[0]
                     if pad:
                         qs = np.concatenate(
@@ -341,31 +379,47 @@ class BatchedSearchEngine:
                     kwargs = {"merge": self.merge} if self.merge else {}
                     if self.max_postings is not None:
                         kwargs["max_postings"] = self.max_postings
+                    if any(it[4] for it in batch):
+                        # ONE dispatch subtree shared by every profiled
+                        # request in the batch (they share the dispatch);
+                        # the index annotates its phases into it when it
+                        # supports the profile kwarg
+                        prof = ProfileNode(
+                            "dispatch", batch_size=len(batch),
+                            engine=self.engine, k=self.k, page=self.page,
+                            **({} if self.group is None
+                               else {"group": self.group}))
+                        if _accepts_profile(index):
+                            kwargs["profile"] = prof
                     t_dispatch = time.monotonic()
                     with annotation("repro.engine.dispatch",
                                     self.tracer is not None
                                     and self.tracer.annotate):
-                        ids, scores = index.search(
-                            jnp.asarray(qs), k=self.k, page=self.page,
-                            trim=self.trim, engine=self.engine, **kwargs,
-                        )
-                        ids, scores = np.asarray(ids), np.asarray(scores)
+                        with self.compile_watch.region(
+                                "engine.dispatch",
+                                sig=(qs.shape, str(qs.dtype), self.engine,
+                                     self.k, self.page,
+                                     self.merge or "gather")):
+                            ids, scores = index.search(
+                                jnp.asarray(qs), k=self.k, page=self.page,
+                                trim=self.trim, engine=self.engine,
+                                **kwargs,
+                            )
+                            ids, scores = np.asarray(ids), np.asarray(scores)
                 except Exception as exc:  # noqa: BLE001 - fwd to futures
                     t_done = time.monotonic()
                     error = exc
-                    for _, fut, _, _ in batch:
-                        if not fut.done():
-                            fut.set_exception(exc)
-                    self._c_failed.inc(len(batch))
                 else:
                     t_done = time.monotonic()
-                    for i, (_, fut, _, _) in enumerate(batch):
-                        if not fut.done():  # caller may have cancelled
-                            fut.set_result((ids[i], scores[i]))
-                    self._c_completed.inc(len(batch))
-                    self._c_kernel_path.inc()   # one dispatch on `engine`
+                    if prof is not None:
+                        prof.duration_s = t_done - t_dispatch
                 self._h_dispatch.observe(t_done - t_dispatch)
-                for _, _, t_enq, tr in batch:
+                # record spans BEFORE resolving futures: resolving fires
+                # the submitter's done-callback, which finishes the trace
+                # -- and a slow log serializes the span list at finish
+                # time (the tracer ring holds live traces, so it never
+                # noticed ordering; the slow log does)
+                for _, _, t_enq, tr, _ in batch:
                     if not tr:          # NULL_TRACE: skip the kwargs builds
                         continue
                     tr.span("queue_wait", t0=t_enq, t1=t_deq,
@@ -376,6 +430,36 @@ class BatchedSearchEngine:
                             group=self.group, batch_size=len(batch),
                             **({} if error is None
                                else {"error": repr(error)}))
+                if error is not None:
+                    for _, fut, _, _, _ in batch:
+                        if not fut.done():
+                            fut.set_exception(error)
+                    self._c_failed.inc(len(batch))
+                else:
+                    for i, (_, fut, t_enq, _, want) in enumerate(batch):
+                        if fut.done():      # caller may have cancelled
+                            continue
+                        if want:
+                            # per-request root over the shared dispatch
+                            # subtree; all phase bounds are SHARED clock
+                            # reads, so queue_wait + batch_form + dispatch
+                            # tile the total exactly
+                            root = ProfileNode(
+                                "query", t_done - t_enq,
+                                engine=self.engine, k=self.k,
+                                page=self.page,
+                                **({} if self.group is None
+                                   else {"group": self.group}))
+                            root.child("queue_wait", t_deq - t_enq)
+                            root.child("batch_form", t_dispatch - t_deq,
+                                       batch_size=len(batch))
+                            root.children.append(prof)
+                            fut.set_result(
+                                (ids[i], scores[i], root.to_dict()))
+                        else:
+                            fut.set_result((ids[i], scores[i]))
+                    self._c_completed.inc(len(batch))
+                    self._c_kernel_path.inc()   # one dispatch on `engine`
             finally:
                 self._inflight = 0
                 self._serving = None

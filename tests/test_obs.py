@@ -29,8 +29,8 @@ import pytest
 from repro.cluster import ClusterEngine
 from repro.dist.shard_index import ShardedVectorIndex
 from repro.launch.mesh import make_shard_mesh
-from repro.obs import (Histogram, MetricsRegistry, Tracer, NULL_TRACE,
-                       format_stats_line)
+from repro.obs import (Histogram, MetricsRegistry, SlowLog, Tracer,
+                       NULL_TRACE, format_stats_line)
 from repro.serve.engine import BatchedSearchEngine
 from repro.store.durable import Store
 
@@ -104,6 +104,27 @@ def test_histogram_edge_buckets():
     assert h.snapshot()["max"] == 500.0           # min/max stay exact
     with pytest.raises(ValueError, match="quantile"):
         h.quantile(1.5)
+
+
+def test_histogram_single_observation_and_p999():
+    """Every quantile of a one-sample histogram collapses to that
+    sample's bucket bound -- exact, no tolerance -- and p999 (the tail
+    the slow-log threshold keys off) rides every snapshot."""
+    reg = MetricsRegistry()
+    h = reg.histogram("t.one")
+    for q in (0.0, 0.5, 1.0):
+        assert math.isnan(h.quantile(q))          # empty: NaN everywhere
+    snap = h.snapshot()
+    assert snap["count"] == 0
+    assert snap["p50"] is snap["p999"] is None
+    h.observe(0.0123)
+    b = Histogram.bucket_le(0.0123)
+    for q in (0.0, 0.25, 0.5, 0.999, 1.0):
+        assert h.quantile(q) == b
+    snap = h.snapshot()
+    assert snap["p50"] == snap["p90"] == snap["p99"] == snap["p999"] == b
+    assert snap["min"] == snap["max"] == snap["mean"] == 0.0123
+    assert snap["count"] == 1 and snap["sum"] == 0.0123
 
 
 def test_observe_many_matches_observe():
@@ -410,3 +431,177 @@ def test_concurrent_submitters_exact_totals(sidx):
         assert all(d["t1"] is not None for d in tr.dump())
     finally:
         eng.close()
+
+
+def test_tracer_dump_clear_races_retain():
+    """``dump(clear=True)`` racing concurrent ``finish()`` calls loses
+    no trace and doubles none: every retained trace appears in exactly
+    one dump, and no dump ever exceeds the ring capacity."""
+    n_threads, per_thread = 4, 200
+    total = n_threads * per_thread
+    tr = Tracer(capacity=total, sample=1.0)   # capacity == total: a lost
+    #                                           trace can't hide behind
+    #                                           ring eviction
+    stop = threading.Event()
+    collected, coll_lock = [], threading.Lock()
+    errors = []
+
+    def dumper():
+        try:
+            while not stop.is_set():
+                out = tr.dump(clear=True)
+                assert len(out) <= total
+                with coll_lock:
+                    collected.extend(out)
+        except Exception as exc:  # noqa: BLE001 - surfaced below
+            errors.append(exc)
+
+    def producer():
+        try:
+            for _ in range(per_thread):
+                t = tr.start("q")
+                t.span("work").end()
+                t.finish()
+        except Exception as exc:  # noqa: BLE001 - surfaced below
+            errors.append(exc)
+
+    dump_thread = threading.Thread(target=dumper)
+    producers = [threading.Thread(target=producer)
+                 for _ in range(n_threads)]
+    dump_thread.start()
+    for th in producers:
+        th.start()
+    for th in producers:
+        th.join()
+    stop.set()
+    dump_thread.join()
+    collected.extend(tr.dump(clear=True))
+    assert not errors
+    ids = sorted(d["trace_id"] for d in collected)
+    assert ids == list(range(1, total + 1))   # none lost, none doubled
+    assert tr.stats()["retained"] == 0
+
+
+# ---------------------------------------------------------- kernel-path mix
+def test_kernel_mix_in_stats_and_cat_line(sidx, queries):
+    """The ``kernel_path`` dispatch mix: two engines sharing one fleet
+    registry roll up into one fused/composed split, rendered
+    deterministically in the ``_cat`` line -- and the cluster branch
+    sums its groups' mixes the same way."""
+    reg = MetricsRegistry()
+    fused = BatchedSearchEngine(sidx, batch_size=2, k=5, page=N_DOCS,
+                                trim=None, engine="fused", metrics=reg)
+    comp = BatchedSearchEngine(sidx, batch_size=2, k=5, page=N_DOCS,
+                               trim=None, engine="codes", metrics=reg)
+    try:
+        for q in queries[:4]:
+            fused.search(q, timeout=60)
+        for q in queries[:2]:
+            comp.search(q, timeout=60)
+        st = fused.stats()
+        # one dispatch per (sequential) search; shared registry -> the
+        # stats of either engine show the whole fleet's mix
+        assert st["kernel_path"] == {"codes": 2, "fused": 4}
+        assert "kernel=codes:2/fused:4" in format_stats_line(st)
+    finally:
+        fused.close()
+        comp.close()
+
+    creg = MetricsRegistry()
+    cl = ClusterEngine([sidx, sidx], batch_size=2, k=5, page=N_DOCS,
+                       trim=None, engine="codes", metrics=creg)
+    try:
+        for i, q in enumerate(queries[:3]):
+            cl.search(q, stream=i % 2, timeout=60)
+        st = cl.stats()
+        assert sum(g["kernel_path"].get("codes", 0)
+                   for g in st["groups"].values()) == 3
+        assert "kernel=codes:3" in format_stats_line(st)
+    finally:
+        cl.close()
+
+
+# ----------------------------------- concurrent reconciliation, full plane
+def test_stats_reconcile_concurrent_with_profiling_and_slowlog(sidx,
+                                                               queries):
+    """The PR-6 reconciliation contract survives the v2 plane running
+    flat out: concurrent searchers (a quarter of them via the _profile
+    API) race hot ingest, deletes, and the background compaction daemon
+    -- with head-sampled tracing AND a threshold-0 slow log attached.
+    Submitted == completed == issued, group completions tile the total,
+    and the slow log captures exactly the submit-path population."""
+    import time
+
+    rng = np.random.default_rng(11)
+    W = rng.normal(size=(16, N_FEAT)).astype(np.float32)
+    reg = MetricsRegistry()
+    tr = Tracer(capacity=1024, sample=1.0 / 4)
+    slog = SlowLog(threshold_s=0.0, capacity=1024, metrics=reg)
+    cl = ClusterEngine([sidx, sidx], batch_size=4, k=5, page=10_000,
+                       trim=None, engine="codes", metrics=reg, tracer=tr,
+                       slowlog=slog, auto_compact=0.2,
+                       compact_interval_s=0.01)
+    counts, errors = [], []
+
+    def drive(t):
+        plain = prof = 0
+        try:
+            for i in range(12):
+                q = queries[(t + i) % len(queries)]
+                if i % 4 == 0:     # every 4th request asks for a profile
+                    ids, _, tree = cl.profile(q, stream=t % 2, timeout=60)
+                    assert tree["name"] == "cluster.query"
+                    assert [c["name"] for c in tree["children"]] \
+                        == ["route", "query"]
+                    prof += 1
+                else:
+                    ids, _ = cl.search(q, stream=t % 2, timeout=60)
+                    plain += 1
+                assert ids.shape == (5,)
+        except Exception as exc:  # noqa: BLE001 - surfaced below
+            errors.append(exc)
+        finally:
+            counts.append((plain, prof))
+
+    try:
+        threads = [threading.Thread(target=drive, args=(t,))
+                   for t in range(4)]
+        for th in threads:
+            th.start()
+        # race the searchers with ingest, then enough deletes to trip
+        # the 0.2 tombstone threshold and wake the compaction daemon
+        cl.add_documents(W)
+        cl.delete(list(range(15)) + [N_DOCS + 1])
+        for th in threads:
+            th.join()
+        assert not errors
+        extra = 0
+        deadline = time.monotonic() + 60
+        while cl.maintenance.compactions < 1:     # background merge ran
+            assert time.monotonic() < deadline, "daemon never compacted"
+            cl.search(queries[0], stream=0, timeout=60)
+            extra += 1
+        n_plain = sum(p for p, _ in counts) + extra
+        n_prof = sum(pr for _, pr in counts)
+        n_issued = n_plain + n_prof
+        # trace finish runs in a future done-callback that can trail the
+        # caller's wake-up by an instant -- settle before reconciling
+        deadline = time.monotonic() + 10
+        while (reg.value("slowlog.captured") < n_plain
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+        st = cl.stats()
+        req = st["requests"]
+        assert req["submitted"] == req["completed"] == n_issued
+        assert req["failed"] == 0
+        assert sum(req["group_completed"].values()) == n_issued
+        assert st["maintenance"]["compactions"] >= 1
+        # profile() bypasses submit-path admission, so the slow log's
+        # population is exactly the plain searches -- and at threshold 0
+        # tail capture means captured == seen, even mid-contention
+        assert st["slowlog"]["seen"] == n_plain
+        assert st["slowlog"]["captured"] == n_plain
+        assert tr.stats()["seen"] == n_plain
+        assert all(d["t1"] is not None for d in tr.dump())
+    finally:
+        cl.close()
