@@ -3,10 +3,13 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke-shard smoke-replica smoke-build smoke-cluster smoke-store smoke-obs smoke-profile smoke-segments smoke-kernels bench bench-full
+.PHONY: test smoke-shard smoke-replica smoke-build smoke-cluster smoke-store smoke-obs smoke-profile smoke-health smoke-segments smoke-kernels bench bench-check bench-full
 
-# tier-1 verify (ROADMAP.md)
+# tier-1 verify (ROADMAP.md); the host-seam lint runs first -- a
+# time.*/metrics call inside a jitted body fails the build before any
+# test does
 test:
+	$(PY) tools/check_host_seams.py
 	$(PY) -m pytest -x -q
 
 # tier-1 under 4 virtual host devices: exercises every mesh/shard_map path
@@ -111,8 +114,31 @@ smoke-kernels:
 	  kernel_scale(quick=True, \
 	    json_path='artifacts/BENCH_kernel_scale_quick.json')"
 
+# observability v3 smoke under 8 virtual devices (4 doc-shards x 2
+# replica groups): the ES _cluster/health verdict must walk green ->
+# yellow -> green across an injected group failure with the transition
+# ledger reconciling EXACTLY (one down event, counters match), and the
+# run auto-dumps support-diagnostics bundles (at the failover and at
+# exit) which the follow-up check reloads and validates section by
+# section
+smoke-health:
+	rm -rf artifacts/diag_smoke
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" $(PY) -m \
+	  repro.launch.serve --docs 2000 --features 32 --queries 32 \
+	  --shards 4 --replicas 2 --cluster --fail-shard 0 \
+	  --stats-interval 0.5 --slow-threshold 0 \
+	  --diagnostics-on-exit artifacts/diag_smoke
+	$(PY) tools/validate_diag_bundle.py artifacts/diag_smoke
+	rm -rf artifacts/diag_smoke
+
 bench:
 	$(PY) -m benchmarks.run
+
+# perf-regression gate over the committed artifacts/BENCH_*.json: latest
+# run vs first-committed baseline per bench, the obs-overhead bars, and
+# the fused-kernel byte claim; exits nonzero on any regression
+bench-check:
+	$(PY) -m benchmarks.run --check
 
 bench-full:
 	$(PY) -m benchmarks.run --full

@@ -1,0 +1,220 @@
+"""Perf-regression gate over the committed ``artifacts/BENCH_*.json``.
+
+The BENCH artifacts accumulate one run per bench invocation (the
+``runs`` list), which until now was write-only: a PR could halve QPS
+and nothing would notice.  This gate makes the trajectory enforced:
+
+* **ratio checks** -- for every runs-format bench, the LATEST run's
+  headline number (best QPS / docs-per-second over its rows) must stay
+  within a per-metric ratio of the FIRST run (the committed baseline).
+  A bench with a single run has no history to compare -- reported as an
+  explicit SKIP, never silently passed.
+* **absolute checks** -- numbers that are commitments rather than
+  trajectories: the obs-plane overhead rows must stay under their
+  documented bars (3% metrics-on, 5% full plane).
+* **claim checks** -- invariants the paper-facing artifacts assert:
+  ``BENCH_kernel_scale`` must show the fused kernel moving fewer HBM
+  bytes than the composed pipeline (and int8 fewer than f32) at every
+  measured size, and winning wall-clock at the largest size.
+
+Usage (also ``python -m benchmarks.run --check`` / ``make bench-check``)::
+
+    PYTHONPATH=src python -m benchmarks.check [--artifacts DIR]
+
+Exits 0 when every check passes or skips, 1 on any regression.  Pure
+stdlib -- no jax import -- so the gate itself can never perturb what it
+measures.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import List, Optional
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_ARTIFACTS = os.path.join(_ROOT, "artifacts")
+
+# Allowed regression per headline metric: latest must be >= baseline *
+# MIN_RATIO.  Generous on purpose -- the gate exists to catch structural
+# regressions (a 2x cliff from an accidental recompile or a lost fast
+# path), not scheduler noise on shared CI hardware.
+MIN_RATIO = 0.5
+
+# bench -> (headline metric, row filter, aggregate) for runs-format files
+RATIO_SUITES = {
+    "shard_scale": ("qps", None),
+    "replica_scale": ("qps", None),
+    "cluster_scale": ("qps", {"scenario": "healthy"}),
+    "obs_scale": ("qps", {"config": "off"}),
+    "profile_scale": ("qps", {"config": "off"}),
+    "segment_scale": ("docs_per_s", None),
+    "store_scale": ("docs_per_s", None),
+    "build_scale": ("ingest_docs_per_s", None),
+}
+
+# (bench, row filter, metric, max allowed value) -- documented bars
+ABS_CHECKS = [
+    ("obs_scale", {"config": "overhead"}, "relative_overhead", 0.03),
+    ("obs_scale", {"config": "overhead_full"}, "relative_overhead", 0.05),
+]
+
+
+def _load(artifacts: str, bench: str) -> Optional[dict]:
+    path = os.path.join(artifacts, f"BENCH_{bench}.json")
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        return {"_error": f"{path}: {exc}"}
+
+
+def _rows(doc: dict, run: int) -> List[dict]:
+    """Rows of run ``run`` (-1 latest, 0 baseline) for either format;
+    flat files have exactly one 'run'."""
+    if "runs" in doc:
+        runs = doc["runs"]
+        return runs[run].get("rows", []) if runs else []
+    return doc.get("rows", []) if run in (0, -1) else []
+
+
+def _n_runs(doc: dict) -> int:
+    return len(doc["runs"]) if "runs" in doc else 1
+
+
+def _best(rows: List[dict], metric: str,
+          where: Optional[dict]) -> Optional[float]:
+    vals = [r[metric] for r in rows if metric in r
+            and (where is None
+                 or all(r.get(k) == v for k, v in where.items()))]
+    # fall back to the unfiltered rows when the filter matches nothing
+    # (older runs predate the filtered config) -- comparing best-overall
+    # beats silently skipping
+    if not vals and where is not None:
+        vals = [r[metric] for r in rows if metric in r]
+    return max(vals) if vals else None
+
+
+class Gate:
+    def __init__(self):
+        self.failures: List[str] = []
+        self.lines: List[str] = []
+
+    def report(self, status: str, bench: str, detail: str):
+        line = f"GATE {bench}: {status} {detail}"
+        self.lines.append(line)
+        print(line)
+        if status == "REGRESSION" or status == "ERROR":
+            self.failures.append(line)
+
+
+def _check_ratio(gate: Gate, bench: str, doc: dict, metric: str,
+                 where: Optional[dict]) -> None:
+    if _n_runs(doc) < 2:
+        gate.report("SKIP", bench,
+                    f"no baseline history (1 run committed; {metric} "
+                    "gate arms on the next appended run)")
+        return
+    base = _best(_rows(doc, 0), metric, where)
+    cur = _best(_rows(doc, -1), metric, where)
+    if base is None or cur is None:
+        gate.report("SKIP", bench, f"metric '{metric}' absent from rows")
+        return
+    ratio = cur / base if base else float("inf")
+    detail = (f"{metric} latest={cur:.4g} baseline={base:.4g} "
+              f"ratio={ratio:.2f} (min {MIN_RATIO})")
+    if ratio < MIN_RATIO:
+        gate.report("REGRESSION", bench, detail)
+    else:
+        gate.report("OK", bench, detail)
+
+
+def _check_abs(gate: Gate, bench: str, doc: dict, where: dict,
+               metric: str, limit: float) -> None:
+    rows = _rows(doc, -1)
+    vals = [r[metric] for r in rows if metric in r
+            and all(r.get(k) == v for k, v in where.items())]
+    tag = ",".join(f"{k}={v}" for k, v in where.items())
+    if not vals:
+        gate.report("SKIP", bench, f"no {tag} row yet")
+        return
+    worst = max(vals)
+    detail = f"{tag} {metric}={worst:.4f} (max {limit})"
+    if worst > limit:
+        gate.report("REGRESSION", bench, detail)
+    else:
+        gate.report("OK", bench, detail)
+
+
+def _check_kernel_claim(gate: Gate, doc: dict) -> None:
+    rows = _rows(doc, -1)
+    by_size: dict = {}
+    for r in rows:
+        if "variant" in r and "hbm_bytes" in r:
+            by_size.setdefault(r["n_docs"], {})[r["variant"]] = r
+    if not by_size:
+        gate.report("SKIP", "kernel_scale", "no variant rows")
+        return
+    bad = []
+    for n, v in sorted(by_size.items()):
+        comp, fused, int8 = (v.get("composed"), v.get("fused"),
+                             v.get("fused_int8"))
+        if comp and fused and fused["hbm_bytes"] >= comp["hbm_bytes"]:
+            bad.append(f"n_docs={n}: fused bytes >= composed")
+        if fused and int8 and int8["hbm_bytes"] >= fused["hbm_bytes"]:
+            bad.append(f"n_docs={n}: int8 bytes >= fused")
+    top = max(by_size)
+    comp, fused = by_size[top].get("composed"), by_size[top].get("fused")
+    if comp and fused and fused["wall_s"] >= comp["wall_s"]:
+        bad.append(f"n_docs={top}: fused wall_s >= composed")
+    if bad:
+        gate.report("REGRESSION", "kernel_scale", "; ".join(bad))
+    else:
+        ratio = (fused["hbm_bytes"] / comp["hbm_bytes"]
+                 if comp and fused else float("nan"))
+        gate.report("OK", "kernel_scale",
+                    f"fused/composed bytes={ratio:.2f} at n_docs={top}; "
+                    "byte + wall ordering holds at every size")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    artifacts = DEFAULT_ARTIFACTS
+    if "--artifacts" in argv:
+        artifacts = argv[argv.index("--artifacts") + 1]
+    gate = Gate()
+    for bench, (metric, where) in RATIO_SUITES.items():
+        doc = _load(artifacts, bench)
+        if doc is None:
+            gate.report("SKIP", bench, "no committed artifact")
+            continue
+        if "_error" in doc:
+            gate.report("ERROR", bench, doc["_error"])
+            continue
+        _check_ratio(gate, bench, doc, metric, where)
+    for bench, where, metric, limit in ABS_CHECKS:
+        doc = _load(artifacts, bench)
+        if doc is None or "_error" in doc:
+            gate.report("SKIP", bench, "no committed artifact")
+            continue
+        _check_abs(gate, bench, doc, where, metric, limit)
+    doc = _load(artifacts, "kernel_scale")
+    if doc is None:
+        gate.report("SKIP", "kernel_scale", "no committed artifact")
+    elif "_error" in doc:
+        gate.report("ERROR", "kernel_scale", doc["_error"])
+    else:
+        _check_kernel_claim(gate, doc)
+    if gate.failures:
+        print(f"bench-check: {len(gate.failures)} regression(s)",
+              file=sys.stderr)
+        return 1
+    print("bench-check: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

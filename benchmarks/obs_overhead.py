@@ -19,10 +19,14 @@ shared index:
 * **full** -- everything v2 added on top of ``on``: a tail-sampled
   :class:`~repro.obs.slowlog.SlowLog` (every request gets a span
   skeleton), a :class:`~repro.obs.compile_watch.CompileWatch` wrapping
-  the dispatch seams, and ``profile=True`` on every submit (per-phase
-  ``block_until_ready`` fences + a profile tree per request).  Pinned
-  under a separate, looser ``--max-overhead-full`` bar (default 5%):
-  the _profile fences genuinely serialize the dispatch phases, so this
+  the dispatch seams (which now also captures per-program FLOP/byte
+  cost analysis at compile time), and ``profile=True`` on every submit
+  (per-phase ``block_until_ready`` fences + a profile tree per
+  request); v3 adds a concurrent 50ms poller hammering the device-side
+  surfaces while the pass serves (``device_bytes`` + ``node_stats`` +
+  ``stats()`` -- the health/telemetry scrape loop).  Pinned under a
+  separate, looser ``--max-overhead-full`` bar (default 5%): the
+  _profile fences genuinely serialize the dispatch phases, so this
   config buys attribution with a real (bounded) cost.
 
 Configs are timed interleaved (off, on, off, on, ...) over many SHORT
@@ -88,23 +92,44 @@ if __name__ == "__main__":
 import numpy as np
 
 
-def _one_pass(engine, queries, rounds=1, timeout=120.0, profile=False):
+def _one_pass(engine, queries, rounds=1, timeout=120.0, profile=False,
+              poll=None):
     """Submit the query set ``rounds`` times, wait, -> (wall_s, per-query
-    latencies)."""
-    lats = []
-    futs = []
-    t0 = time.perf_counter()
-    for _ in range(rounds):
-        for q in queries:
-            t_sub = time.perf_counter()
-            f = (engine.submit(q, profile=True) if profile
-                 else engine.submit(q))
-            f.add_done_callback(lambda _f, t_sub=t_sub: lats.append(
-                time.perf_counter() - t_sub))
-            futs.append(f)
-    for f in futs:
-        f.result(timeout=timeout)
-    wall = time.perf_counter() - t0
+    latencies).  ``poll`` (full config) is called concurrently every
+    50ms for the duration of the pass -- the stats/health/device-
+    telemetry poller a monitored deployment runs against a serving
+    engine, at ~200x a production scrape cadence."""
+    import threading
+
+    stop = poller = None
+    if poll is not None:
+        stop = threading.Event()
+
+        def _poll_loop():
+            while not stop.wait(0.05):
+                poll()
+
+        poller = threading.Thread(target=_poll_loop, daemon=True)
+        poller.start()
+    try:
+        lats = []
+        futs = []
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            for q in queries:
+                t_sub = time.perf_counter()
+                f = (engine.submit(q, profile=True) if profile
+                     else engine.submit(q))
+                f.add_done_callback(lambda _f, t_sub=t_sub: lats.append(
+                    time.perf_counter() - t_sub))
+                futs.append(f)
+        for f in futs:
+            f.result(timeout=timeout)
+        wall = time.perf_counter() - t0
+    finally:
+        if stop is not None:
+            stop.set()
+            poller.join()
     # done-callbacks land after result() unblocks; settle for a full set
     deadline = time.perf_counter() + 5.0
     while len(lats) < len(futs) and time.perf_counter() < deadline:
@@ -159,6 +184,21 @@ def run(n_docs=8000, n_features=64, n_queries=32, batch_size=16, page=320,
     profiled = {"full"}             # submits carry profile=True
     names = ("off", "on", "full")
 
+    # v3: the full config also pays the DEVICE-side plane while serving --
+    # a concurrent poller hitting the index byte accounting, the engine
+    # stats rollup, and the per-device node_stats every 50ms (still
+    # ~200x a production scrape cadence), plus compile-time cost capture
+    # riding the CompileWatch.  The <5% bar therefore covers the WHOLE
+    # plane, polled hot.
+    from repro.obs import device_bytes, node_stats
+
+    def _poll_full(_eng=engines["full"]):
+        device_bytes(_eng.index, reconcile=False)
+        node_stats(_eng)
+        _eng.stats()
+
+    pollers = {"full": _poll_full}
+
     def _measure():
         best = {name: (np.inf, []) for name in engines}
         walls = {name: [] for name in engines}
@@ -168,7 +208,8 @@ def run(n_docs=8000, n_features=64, n_queries=32, batch_size=16, page=320,
             for name in order:                        # cache-warm last
                 wall, lats = _one_pass(engines[name], queries,
                                        rounds=rounds,
-                                       profile=name in profiled)
+                                       profile=name in profiled,
+                                       poll=pollers.get(name))
                 walls[name].append(wall)
                 if wall < best[name][0]:
                     best[name] = (wall, lats)

@@ -1,10 +1,18 @@
 """Benchmark aggregator: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--check]
 
 Default is the quick grid (CPU-friendly); --full runs the complete paper
 grids.  Prints ``name,us_per_call,derived`` CSV lines per the scaffold
 contract, then the roofline summary from the dry-run artifacts.
+
+``--check`` runs the perf-regression gate (:mod:`benchmarks.check`)
+over the committed ``artifacts/BENCH_*.json`` instead of the suites:
+each bench's latest-run headline is compared against its first
+committed run (ratio thresholds per metric, explicit SKIP when only one
+run exists), the obs-overhead bars and the fused-kernel byte claim are
+re-asserted, and the process exits nonzero on any regression -- the
+``make bench-check`` entry point.
 """
 
 from __future__ import annotations
@@ -47,6 +55,10 @@ def _run_device_bench(name: str, grid_args: list, full: bool) -> None:
 
 
 def main() -> None:
+    if "--check" in sys.argv:
+        from . import check
+
+        sys.exit(check.main([a for a in sys.argv[1:] if a != "--check"]))
     full = "--full" in sys.argv
     quick = not full
     from . import (complexity_probe, fig1_page_sweep, fig2_tradeoff, roofline,

@@ -30,12 +30,25 @@ metered (:mod:`repro.obs.metrics`): ``health.down_transitions`` /
 ``health.mark_ups`` / ``health.readmits`` count per-group state CHANGES
 (a re-mark of an already-down group counts nothing), which is what lets
 the stats layer assert "one injected failure == one down/readmit pair".
+On top of the counters, a bounded in-memory ledger
+(:meth:`HealthMap.transitions`) records each transition with the
+generation it produced, so ``cluster_health()`` can reconcile its
+green/yellow/red verdict EXACTLY against the event history: the number
+of ``down`` ledger events must equal the ``health.down_transitions``
+counter total, and replaying the ledger must land on the current
+down-set (the PR 6 schema-contract style, applied to availability).
 """
 
 from __future__ import annotations
 
 import threading
+from collections import deque
 from typing import Tuple
+
+# transitions kept for reconciliation; ES keeps a similarly bounded
+# cluster-state update log.  Old entries fall off but the counters keep
+# exact lifetime totals.
+_LEDGER_CAPACITY = 1024
 
 from repro.obs.metrics import default_registry
 
@@ -52,6 +65,14 @@ class HealthMap:
         self._drained: set = set()
         self._lock = threading.Lock()
         self._generation = 0
+        self._events: deque = deque(maxlen=_LEDGER_CAPACITY)
+
+    def _log(self, event: str, group: int) -> None:
+        """Append one transition to the ledger.  Caller holds ``_lock``
+        and has already bumped ``generation`` -- the recorded generation
+        is the one this transition produced."""
+        self._events.append({"event": event, "group": group,
+                             "generation": self._generation})
 
     def _check(self, group: int) -> None:
         if not 0 <= group < self.n_groups:
@@ -69,14 +90,19 @@ class HealthMap:
         with self._lock:
             changed = False
             went_down = False
+            drained = False
             if drain and group not in self._drained:
                 self._drained.add(group)
-                changed = True
+                changed = drained = True
             if group not in self._down:
                 self._down.add(group)
                 changed = went_down = True
             if changed:
                 self._generation += 1
+            if went_down:
+                self._log("down", group)
+            if drained:
+                self._log("drain", group)
         if went_down:
             self.metrics.counter("health.down_transitions", group=group).inc()
         return changed
@@ -87,11 +113,16 @@ class HealthMap:
         state changed (a drain-only clear still bumps ``generation``)."""
         self._check(group)
         with self._lock:
-            if group in self._drained or group in self._down:
+            was_drained = group in self._drained
+            came_up = group in self._down
+            if was_drained or came_up:
                 self._generation += 1
             self._drained.discard(group)
-            came_up = group in self._down
             self._down.discard(group)
+            if came_up:
+                self._log("up", group)
+            elif was_drained:
+                self._log("undrain", group)
         if came_up:
             self.metrics.counter("health.mark_ups", group=group).inc()
         return came_up
@@ -107,8 +138,20 @@ class HealthMap:
                 return False
             self._down.discard(group)
             self._generation += 1
+            self._log("readmit", group)
         self.metrics.counter("health.readmits", group=group).inc()
         return True
+
+    def transitions(self) -> Tuple[dict, ...]:
+        """The transition ledger, oldest first: ``{"event": "down" |
+        "drain" | "up" | "undrain" | "readmit", "group": g,
+        "generation": gen}`` per state change.  ``down`` entries match
+        the ``health.down_transitions`` counter one-for-one (likewise
+        ``up``/``mark_ups`` and ``readmit``/``readmits``) until the
+        bounded ledger wraps -- the exact-reconciliation seam
+        ``cluster_health()`` checks."""
+        with self._lock:
+            return tuple(dict(e) for e in self._events)
 
     def is_drained(self, group: int) -> bool:
         """True while an operator drain (``mark_down(g, drain=True)``)

@@ -214,6 +214,19 @@ class MaintenanceDaemon:
         passes run concurrently -- replica groups are independent copies,
         each apply touches only its own device column, its own CAS, and
         the thread-safe store/metrics."""
+        plans = self._plan()
+        if not plans:
+            return 0
+        if len(plans) == 1:
+            return self._apply(*plans[0])
+        with ThreadPoolExecutor(max_workers=len(plans)) as ex:
+            return sum(ex.map(lambda p: self._apply(*p), plans))
+
+    def _plan(self) -> List[tuple]:
+        """The host-side planning pass: ``(group, batcher, snapshot,
+        plan)`` per group with work due.  Pure inspection -- no rebuild,
+        no lock, no state change -- so it doubles as the
+        ``_cluster/health`` pending-maintenance probe."""
         plans = []
         for g, batcher in enumerate(self._batchers):
             if self._health is not None and not self._health.is_up(g):
@@ -234,12 +247,14 @@ class MaintenanceDaemon:
                     plan = {"kind": "compact", "tombstone_ratio": ratio}
             if plan is not None:
                 plans.append((g, batcher, snapshot, plan))
-        if not plans:
-            return 0
-        if len(plans) == 1:
-            return self._apply(*plans[0])
-        with ThreadPoolExecutor(max_workers=len(plans)) as ex:
-            return sum(ex.map(lambda p: self._apply(*p), plans))
+        return plans
+
+    def pending_plans(self) -> List[dict]:
+        """Maintenance work currently due but not yet applied, one JSON-
+        ready dict per group with work (``{"group": g, "kind": "merge" |
+        "compact", ...}``) -- the ES ``number_of_pending_tasks`` field of
+        ``cluster_health()``.  Planning only; never applies anything."""
+        return [{"group": g, **plan} for g, _b, _s, plan in self._plan()]
 
     def _apply(self, g: int, batcher, snapshot, plan: dict) -> int:
         """Run one planned pass: rebuild outside the engine lock, install

@@ -226,6 +226,9 @@ class ClusterEngine:
         # restore_group's recover-then-swap, so a restore can never miss
         # an op that landed between its disk read and its swap
         self._ctl_lock = threading.Lock()
+        # restores in flight, for _cluster/health (guarded by _lock, not
+        # _ctl_lock: health polls must not block behind a running restore)
+        self._restores_inflight = 0
         self._closed = False
         self.maintenance: Optional[MaintenanceDaemon] = None
         if auto_compact is not None or probe_s is not None:
@@ -273,6 +276,22 @@ class ClusterEngine:
         from repro.obs.stats import cluster_stats
 
         return cluster_stats(self)
+
+    def cluster_health(self) -> dict:
+        """ES ``GET _cluster/health``: green/yellow/red from the
+        HealthMap plus queue depths, in-flight restores, pending
+        maintenance plans, and the transition ledger (see
+        :func:`repro.obs.stats.cluster_health`)."""
+        from repro.obs.stats import cluster_health
+
+        return cluster_health(self)
+
+    def node_stats(self) -> dict:
+        """ES ``GET _nodes/stats``: per-device index residency across
+        every replica group (see :func:`repro.obs.stats.node_stats`)."""
+        from repro.obs.stats import node_stats
+
+        return node_stats(self)
 
     # ------------------------------------------------------------- routing
     def _pick(self, stream, exclude=(), trace=NULL_TRACE) -> int:
@@ -460,18 +479,32 @@ class ClusterEngine:
                 f"group must be in [0, {self.n_groups}), got {group}")
         from repro.store.durable import DurableIndex
 
-        with self._ctl_lock:
-            if mesh is None:
-                mesh = self._batchers[group].index.mesh
-            index, seq = self.store.recover_index(mesh)
-            if group == 0:                # the primary keeps write-through
-                index = DurableIndex(index, self.store, seq=seq)
-            fp = _FailpointIndex(index, self._failpoints[group]._cell)
-            fp.fail = None                # restoring clears the fault
-            self._failpoints[group] = fp
-            self._batchers[group].swap_index(fp)
+        with self._lock:
+            self._restores_inflight += 1
+        try:
+            with self._ctl_lock:
+                if mesh is None:
+                    mesh = self._batchers[group].index.mesh
+                index, seq = self.store.recover_index(mesh)
+                if group == 0:            # the primary keeps write-through
+                    index = DurableIndex(index, self.store, seq=seq)
+                fp = _FailpointIndex(index, self._failpoints[group]._cell)
+                fp.fail = None            # restoring clears the fault
+                self._failpoints[group] = fp
+                self._batchers[group].swap_index(fp)
+        finally:
+            with self._lock:
+                self._restores_inflight -= 1
         self.health.mark_up(group)
+        self.metrics.counter("cluster.restores", group=group).inc()
         return seq
+
+    @property
+    def restores_in_flight(self) -> int:
+        """Disk restores currently running (ES recoveries in flight --
+        a ``_cluster/health`` field)."""
+        with self._lock:
+            return self._restores_inflight
 
     # ------------------------------------------------------------- health
     def mark_down(self, group: int) -> bool:

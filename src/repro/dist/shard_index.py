@@ -426,6 +426,40 @@ class ShardedVectorIndex:
                 out.__dict__[key] = self.__dict__[key]
         return out
 
+    # -------------------------------------------------------- obs: residency
+    def resident_leaves(self):
+        """``(path, section, array)`` for every device-resident array this
+        index holds -- the seam :func:`repro.obs.device.device_bytes` walks
+        for exact byte accounting.  Crucially this includes the lazily
+        derived quant-table caches (``_quant_base_cache`` /
+        ``_quant_active_cache`` / per-segment ``_quant_cache``), which are
+        real HBM residents but NOT pytree children, so a plain tree walk
+        would under-report the index by the full int8 table size."""
+        yield "vectors", "base", self.vectors
+        yield "codes", "base", self.codes
+        yield "post_docs", "base", self.post_docs
+        yield "post_codes", "base", self.post_codes
+        yield "offsets", "base", self.offsets
+        yield "live", "base", self.live
+        yield "seg_vectors", "active", self.seg_vectors
+        yield "seg_codes", "active", self.seg_codes
+        yield "seg_gids", "active", self.seg_gids
+        yield "seg_live", "active", self.seg_live
+        for i, seg in enumerate(self.segments):
+            for nm in ("vectors", "codes", "gids", "live",
+                       "post_docs", "post_codes"):
+                yield f"segments[{i}].{nm}", "segments", getattr(seg, nm)
+            q = seg.__dict__.get("_quant_cache")
+            if q is not None:
+                for nm, arr in zip(("codes", "scale", "zero"), q):
+                    yield f"segments[{i}].quant.{nm}", "quant", arr
+        for key, prefix in (("_quant_base_cache", "quant.base"),
+                            ("_quant_active_cache", "quant.active")):
+            q = self.__dict__.get(key)
+            if q is not None:
+                for nm, arr in zip(("codes", "scale", "zero"), q):
+                    yield f"{prefix}.{nm}", "quant", arr
+
     # ------------------------------------------------------------- replicas
     def replica_group(self, g: int) -> "ShardedVectorIndex":
         """View replica group ``g`` as an independent index on the 1-D

@@ -60,6 +60,16 @@ point, abstract shape) and fails the run on ANY attributed compile after
 the first pass marks steady state; ``--metrics-file PATH`` writes a
 JSONL registry-snapshot history (the Prometheus text exposition comes
 from the same exporter).  See docs/OBSERVABILITY.md for the ES mapping.
+
+Observability v3 (``make smoke-health`` drives it): under ``--cluster
+--fail-shard`` the run asserts the ES ``_cluster/health`` verdict walks
+green -> yellow -> green across the injected failure and that the
+transition ledger reconciles EXACTLY (one down event for the failed
+group, counters match one-for-one); ``--diagnostics-on-exit DIR``
+writes a one-call support-diagnostics bundle (stats + health + device
+byte tables + compile/cost tables + slow log + metrics history) at the
+end of the run and automatically at the moment a failover or
+kill-and-recover fires.
 """
 
 from __future__ import annotations
@@ -155,6 +165,14 @@ def main():
                          "(one registry snapshot at each serving milestone "
                          "+ final) and print the final Prometheus text "
                          "exposition size")
+    ap.add_argument("--diagnostics-on-exit", default=None, metavar="DIR",
+                    help="write a one-call diagnostics bundle (stats, "
+                         "cluster health, device/cost tables, slow log, "
+                         "compile stats, metrics history) into DIR at the "
+                         "end of the run -- and automatically at the moment "
+                         "a --fail-shard failover or --kill-and-recover "
+                         "teardown fires, so the bundle captures the state "
+                         "an operator would want from the incident")
     ap.add_argument("--fail-on-recompile", action="store_true",
                     help="watch jit compiles per (entry point, abstract "
                          "shape); after the first serving pass marks steady "
@@ -294,6 +312,19 @@ def main():
             index = store.open_index(index)
         engine = BatchedSearchEngine(index, **common)
         submit = lambda i, q: engine.submit(q)
+
+    def dump_diag(reason, eng=None):
+        """Write one diagnostics bundle for the CURRENT engine (the
+        ``engine`` local is rebound across kill/recover, and the closure
+        follows it).  No-op unless --diagnostics-on-exit is set."""
+        if not args.diagnostics_on_exit:
+            return
+        from repro.obs import write_diagnostics
+
+        path = write_diagnostics(eng if eng is not None else engine,
+                                 args.diagnostics_on_exit,
+                                 exporter=exporter, reason=reason)
+        print(f"diagnostics bundle ({reason}) -> {path}", flush=True)
 
     n_issued = 0
     stats_stop = None
@@ -454,12 +485,25 @@ def main():
                       flush=True)
 
         if args.fail_shard is not None:
+            from repro.obs import format_health_line
+
+            h0 = engine.cluster_health()
+            assert h0["status"] == "green", h0
+            gen0 = h0["generation"]
             engine.inject_failure(args.fail_shard)
             t0 = time.time()
             futs = [submit(i, q) for i, q in enumerate(queries)]
             n_issued += len(futs)
             down = [f.result(timeout=120) for f in futs]
             dt = time.time() - t0
+            # the failpoint trips on first dispatch, failover routing
+            # marks the group down mid-serve: health is yellow NOW (the
+            # injected fault is a latent failure until traffic finds it,
+            # exactly like a dying ES node)
+            h1 = engine.cluster_health()
+            assert h1["status"] == "yellow", h1
+            assert args.fail_shard in h1["down"], h1
+            print(format_health_line(h1), flush=True)
             same = all(np.array_equal(a[0], b[0])
                        and np.array_equal(a[1], b[1])
                        for a, b in zip(results, down))
@@ -468,10 +512,29 @@ def main():
                   f"re-served {args.queries} queries in {dt:.2f}s on "
                   f"groups {engine.health.up_groups()} -- results "
                   f"bit-identical to the healthy cluster")
+            dump_diag("failover")
             # recovery: clear the fault and rejoin the group (two separate
             # events, like an ES node rejoin after the fault clears)
             engine.heal(args.fail_shard)
             engine.mark_up(args.fail_shard)
+            # _cluster/health reconciliation: the verdict walked green ->
+            # yellow -> green, and the transition ledger explains it
+            # exactly -- one down event for the failed group since the
+            # pre-injection generation, matched one-for-one by the
+            # down_transitions counter, plus the recovery up/readmit
+            h2 = engine.cluster_health()
+            assert h2["status"] == "green", h2
+            events = [e for e in h2["transitions"]
+                      if e["generation"] > gen0]
+            downs = [e for e in events if e["event"] == "down"]
+            assert len(downs) == 1 and downs[0]["group"] == args.fail_shard, \
+                events
+            assert any(e["event"] in ("up", "readmit") for e in events), \
+                events
+            assert h2["counters"]["down_transitions"] == len(downs), h2
+            print(format_health_line(h2) + "  (transitions reconcile: "
+                  "green -> yellow -> green, 1 down event, counters match)",
+                  flush=True)
 
         if args.auto_compact is not None:
             # the tombstone ratio is dead / docs-ever-assigned over the
@@ -524,6 +587,7 @@ def main():
             n_ids_before = live.n_ids
             obs_final()                # before the kill: the counters and
             #                            traces belong to the dying engine
+            dump_diag("kill-and-recover")
             engine.close()
             del live, index                         # "kill": drop the RAM copy
             t0 = time.time()
@@ -577,6 +641,7 @@ def main():
             print(f"metrics: {len(exporter.history())} snapshot(s) -> "
                   f"{args.metrics_file}; prometheus exposition "
                   f"{len(text.splitlines())} lines", flush=True)
+        dump_diag("exit")
     finally:
         if stats_stop is not None:
             stats_stop.set()

@@ -59,25 +59,57 @@ ES mapping):
 * :mod:`repro.obs.export` -- Prometheus text exposition of the
   registry + a JSONL snapshot history ring
   (``serve.py --metrics-file``).
+
+v3 adds the *device* side -- what the programs and arrays actually cost:
+
+* :mod:`repro.obs.device` -- exact index-resident byte accounting per
+  shard/segment/quant-table leaf, per section and per device, reconciled
+  against ``jax.live_arrays()`` (ES ``_nodes/stats`` store bytes +
+  ``_cat/segments``).
+* :mod:`repro.obs.cost` -- XLA's static cost model captured at compile
+  time (FLOPs / bytes accessed / temp bytes per compiled program),
+  attributed to the same :func:`watch_region` stack the compile watch
+  uses; joined with measured phase latencies into a live roofline and a
+  serve-time check of the fused kernel's byte claim.
+* ``cluster_health()`` / ``node_stats()`` in :mod:`repro.obs.stats` --
+  ES ``_cluster/health`` (green/yellow/red reconciled exactly against
+  the HealthMap transition ledger) and ``_nodes/stats``.
+* :mod:`repro.obs.diagnostics` -- the one-call support-diagnostics
+  bundle (``serve.py --diagnostics-on-exit``, auto-dumped on failover
+  and ``--kill-and-recover``).
 """
 
 from .compile_watch import CompileWatch, active_watch, watch_region
-from .export import MetricsExporter, prometheus_text
+from .cost import (CostTable, ensure_cost_capture, kernel_byte_ratio,
+                   missing_cost_regions, roofline, verify_kernel_claim)
+from .device import (device_bytes, format_device_line,
+                     resident_leaf_entries)
+from .diagnostics import (BUNDLE_SECTIONS, diagnostics_bundle,
+                          write_diagnostics)
+from .export import (MetricsExporter, device_gauges, health_gauges,
+                     prometheus_text)
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       default_registry)
 from .profile import ProfileNode, format_profile_tree, profile_from_trace
 from .slowlog import SlowLog, start_request_trace
-from .stats import (cluster_stats, engine_stats, format_segments_line,
-                    format_stats_line, index_stats, store_stats)
+from .stats import (cluster_health, cluster_stats, engine_stats,
+                    format_health_line, format_segments_line,
+                    format_stats_line, index_stats, node_stats,
+                    store_stats)
 from .tracing import NULL_TRACE, Span, Trace, Tracer, annotation
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "default_registry",
     "Span", "Trace", "Tracer", "NULL_TRACE", "annotation",
     "index_stats", "engine_stats", "cluster_stats", "store_stats",
-    "format_stats_line", "format_segments_line",
+    "cluster_health", "node_stats",
+    "format_stats_line", "format_segments_line", "format_health_line",
     "ProfileNode", "format_profile_tree", "profile_from_trace",
     "SlowLog", "start_request_trace",
     "CompileWatch", "active_watch", "watch_region",
-    "MetricsExporter", "prometheus_text",
+    "MetricsExporter", "prometheus_text", "health_gauges", "device_gauges",
+    "device_bytes", "format_device_line", "resident_leaf_entries",
+    "CostTable", "ensure_cost_capture", "missing_cost_regions",
+    "roofline", "kernel_byte_ratio", "verify_kernel_claim",
+    "BUNDLE_SECTIONS", "diagnostics_bundle", "write_diagnostics",
 ]

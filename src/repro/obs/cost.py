@@ -1,0 +1,321 @@
+"""Static cost attribution at compile time: FLOPs/HBM-bytes per region.
+
+The compile watch (PR 9) tells you *that* a region compiled; this module
+records *what* it compiled: at the moment XLA hands back an executable,
+the backend's own static cost model (``Compiled.cost_analysis()`` --
+FLOPs and bytes accessed) and memory analysis
+(``get_compiled_memory_stats()`` -- argument/output/temp/code bytes) are
+captured and attributed to the innermost active :func:`~repro.obs.
+compile_watch.watch_region`, using the SAME thread-local attribution
+rule as compile counting.  That identity is the contract: every region
+the watch counts a compile for must also own a cost row (checked by
+:func:`missing_cost_regions` -- "no unattributed serving compiles").
+
+The capture seam is a process-wide wrap of JAX's single compile
+entry point (``jax._src.compiler.compile_or_get_cached``), installed
+lazily by the first enabled :class:`~repro.obs.compile_watch.
+CompileWatch`; it adds two dict lookups per *compile* (never per
+dispatch), so steady-state serving cost is zero.
+
+What the rows buy:
+
+* a live roofline view (:func:`roofline`): static bytes/FLOPs joined
+  with measured per-phase wall time from ``profile.py`` gives achieved
+  GB/s and GFLOP/s per phase -- the ES hot-threads question ("is this
+  phase bandwidth-bound or overhead-bound?") answered from telemetry
+  already on hand;
+* a serve-time check of PR 8's headline claim (:func:`kernel_byte_
+  ratio` / :func:`verify_kernel_claim`): the fused phase-1 program must
+  access fewer bytes than the composed pipeline *in the program XLA
+  actually compiled for the serving index*, reconciled against the
+  committed ``BENCH_kernel_scale.json`` byte-model ratio.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "CostTable", "ensure_cost_capture", "cost_capture_installed",
+    "missing_cost_regions", "roofline", "kernel_byte_ratio",
+    "verify_kernel_claim",
+]
+
+_install_lock = threading.Lock()
+_installed = False
+
+# engine names as they appear in dispatch sigs, by phase-1 lowering
+_FUSED_ENGINES = ("fused_int8", "fused")
+_COMPOSED_ENGINES = ("codes", "postings", "onehot")
+
+
+# --------------------------------------------------------------- the table
+class CostTable:
+    """Per-(region, signature, program) static cost rows.
+
+    One row per distinct compiled program reached from a region; repeat
+    compiles of the same key bump ``compiles`` and refresh the numbers
+    (XLA's estimate for an identical program is stable, so last-write
+    is as good as first)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._rows: Dict[Tuple[str, Tuple, str], dict] = {}
+
+    def record(self, region: str, sig: Tuple, program: str,
+               cost: Optional[dict], memory: Optional[dict]) -> None:
+        key = (region, tuple(str(s) for s in sig), program)
+        with self._lock:
+            row = self._rows.get(key)
+            if row is None:
+                row = self._rows[key] = {
+                    "region": region,
+                    "sig": list(key[1]),
+                    "program": program,
+                    "compiles": 0,
+                }
+            row["compiles"] += 1
+            if cost:
+                row["flops"] = float(cost.get("flops", 0.0))
+                row["bytes_accessed"] = float(
+                    cost.get("bytes accessed", 0.0))
+                if "transcendentals" in cost:
+                    row["transcendentals"] = float(cost["transcendentals"])
+            if memory:
+                row.update(memory)
+
+    # ------------------------------------------------------------- queries
+    def rows(self) -> List[dict]:
+        with self._lock:
+            return [dict(r) for r in self._rows.values()]
+
+    def regions(self) -> set:
+        with self._lock:
+            return {region for region, _sig, _prog in self._rows}
+
+    def stats(self) -> dict:
+        """Stats-section dict: row count plus per-region rollups (program
+        count, compiles, summed FLOPs/bytes, peak temp bytes) and the
+        raw rows for the diagnostics bundle."""
+        rows = self.rows()
+        by_region: Dict[str, dict] = {}
+        for r in rows:
+            agg = by_region.setdefault(r["region"], {
+                "programs": 0, "compiles": 0, "flops": 0.0,
+                "bytes_accessed": 0.0, "peak_temp_bytes": 0,
+            })
+            agg["programs"] += 1
+            agg["compiles"] += r["compiles"]
+            agg["flops"] += r.get("flops", 0.0)
+            agg["bytes_accessed"] += r.get("bytes_accessed", 0.0)
+            agg["peak_temp_bytes"] = max(agg["peak_temp_bytes"],
+                                         int(r.get("temp_bytes", 0)))
+        return {"n_rows": len(rows), "by_region": by_region, "rows": rows}
+
+
+# ------------------------------------------------------------ capture seam
+def _module_name(computation) -> str:
+    """The compiled module's symbol name (``jit__query_phase``-style)
+    without serializing the module text."""
+    try:
+        attr = computation.operation.attributes["sym_name"]
+        name = getattr(attr, "value", None)
+        if name:
+            return str(name)
+        return str(attr).strip('"')
+    except Exception:
+        return "<module>"
+
+
+def _executable_costs(executable):
+    """(cost dict, memory dict) from a LoadedExecutable, tolerating the
+    backends that expose neither (both become None, the row still
+    counts the compile)."""
+    cost = None
+    try:
+        c = executable.cost_analysis()
+        if isinstance(c, (list, tuple)):
+            c = c[0] if c else None
+        if isinstance(c, dict):
+            cost = c
+    except Exception:
+        pass
+    memory = None
+    try:
+        ms = executable.get_compiled_memory_stats()
+        memory = {
+            "argument_bytes": int(ms.argument_size_in_bytes),
+            "output_bytes": int(ms.output_size_in_bytes),
+            "temp_bytes": int(ms.temp_size_in_bytes),
+            "code_bytes": int(ms.generated_code_size_in_bytes),
+        }
+    except Exception:
+        pass
+    return cost, memory
+
+
+def _attribute(computation, executable) -> None:
+    from repro.obs import compile_watch as cw
+
+    stack = getattr(cw._TLS, "stack", None)
+    if stack:
+        watch, region, sig = stack[-1]
+    else:
+        watch, region, sig = cw.active_watch(), cw._UNATTRIBUTED, ()
+    cost, memory = _executable_costs(executable)
+    watch.costs.record(region, sig, _module_name(computation), cost, memory)
+
+
+def ensure_cost_capture() -> None:
+    """Install the (one, process-wide) compile-time cost hook: wrap
+    ``jax._src.compiler.compile_or_get_cached`` -- the single funnel
+    every jit compile goes through -- and attribute each returned
+    executable's cost/memory analysis to the active watch region.
+    The wrap MUST be ``*args`` -- the funnel takes six positional
+    parameters (``pgle_profiler`` is passed positionally) and private
+    signatures drift between jax versions."""
+    global _installed
+    if _installed:
+        return
+    with _install_lock:
+        if _installed:
+            return
+        try:
+            from jax._src import compiler as _compiler
+
+            orig = _compiler.compile_or_get_cached
+
+            def _wrap(*args, **kwargs):
+                executable = orig(*args, **kwargs)
+                try:
+                    _attribute(args[1], executable)
+                except Exception:   # never perturb compilation itself
+                    pass
+                return executable
+
+            _wrap.__wrapped__ = orig
+            _compiler.compile_or_get_cached = _wrap
+        except Exception:  # pragma: no cover - jax always present in-repo
+            pass
+        _installed = True
+
+
+def cost_capture_installed() -> bool:
+    return _installed
+
+
+# ------------------------------------------------------------- derived views
+def missing_cost_regions(watch) -> List[str]:
+    """Regions the watch counted a compile for that own NO cost row --
+    the "no unattributed serving compiles" contract; empty when every
+    compiled region is accounted.  (Cost rows are a superset of counted
+    compiles: the hook also fires on compilation-cache hits.)"""
+    compiled = set(watch.stats()["by_function"])
+    compiled.discard("<unattributed>")
+    return sorted(compiled - watch.costs.regions())
+
+
+def roofline(watch, phase_seconds: Dict[str, float]) -> List[dict]:
+    """Join static per-region costs with measured per-phase wall time
+    into achieved-bandwidth rows.
+
+    ``phase_seconds`` maps region name -> measured seconds for ONE
+    execution of that region (e.g. a per-phase mean from
+    ``profile.profile_search``).  For regions that compiled several
+    programs (shape growth, engine variants) the row with the most
+    bytes accessed is taken as the phase's main program; ``programs``
+    reports how many were folded away."""
+    by_region: Dict[str, List[dict]] = {}
+    for r in watch.costs.rows():
+        by_region.setdefault(r["region"], []).append(r)
+    out = []
+    for region, seconds in sorted(phase_seconds.items()):
+        rows = by_region.get(region)
+        if not rows or seconds <= 0:
+            continue
+        main = max(rows, key=lambda r: r.get("bytes_accessed", 0.0))
+        flops = main.get("flops", 0.0)
+        nbytes = main.get("bytes_accessed", 0.0)
+        out.append({
+            "region": region,
+            "program": main["program"],
+            "programs": len(rows),
+            "measured_s": float(seconds),
+            "flops": flops,
+            "bytes_accessed": nbytes,
+            "achieved_gflops": flops / seconds / 1e9,
+            "achieved_gbps": nbytes / seconds / 1e9,
+            # bytes per FLOP > ~1 reads memory-bound on any current part
+            "bytes_per_flop": nbytes / flops if flops else None,
+        })
+    return out
+
+
+def _phase1_rows_by_variant(watch, region: str = "search.query_phase"):
+    fused: List[dict] = []
+    composed: List[dict] = []
+    for r in watch.costs.rows():
+        if r["region"] != region or not r.get("bytes_accessed"):
+            continue
+        sig = r.get("sig", ())
+        if any(e in sig for e in _FUSED_ENGINES):
+            fused.append(r)
+        elif any(e in sig for e in _COMPOSED_ENGINES):
+            composed.append(r)
+    return fused, composed
+
+
+def kernel_byte_ratio(watch) -> Optional[dict]:
+    """Fused-vs-composed byte ratio of the phase-1 programs XLA actually
+    compiled for the serving index: max bytes-accessed among fused rows
+    over max among composed rows (max = the largest shapes reached,
+    which both variants reach together).  None until both variants have
+    compiled under ``search.query_phase``."""
+    fused, composed = _phase1_rows_by_variant(watch)
+    if not fused or not composed:
+        return None
+    fb = max(r["bytes_accessed"] for r in fused)
+    cb = max(r["bytes_accessed"] for r in composed)
+    return {
+        "fused_bytes": fb,
+        "composed_bytes": cb,
+        "ratio": fb / cb if cb else None,
+        "fused_rows": len(fused),
+        "composed_rows": len(composed),
+    }
+
+
+def verify_kernel_claim(watch, artifact_path: str,
+                        slack: float = 1.5) -> dict:
+    """Assert PR 8's ``BENCH_kernel_scale`` bandwidth claim against the
+    live compiled programs: the fused phase-1 program must access fewer
+    bytes than the composed pipeline (ratio < 1), and the live ratio
+    must not exceed the committed byte-model claim by more than
+    ``slack``x (the hand byte model and XLA's cost model count slightly
+    different things; the *claim* is the direction and rough magnitude).
+    Returns ``{"live": ..., "claimed_ratio": ...}``; raises
+    ``AssertionError`` when the claim fails to hold live."""
+    live = kernel_byte_ratio(watch)
+    if live is None:
+        raise AssertionError(
+            "kernel claim check needs both a fused and a composed "
+            "phase-1 compile under search.query_phase")
+    with open(artifact_path) as f:
+        bench = json.load(f)
+    rows = bench.get("rows", [])
+    top = max((r.get("n_docs", 0) for r in rows), default=0)
+    hbm = {r["variant"]: r["hbm_bytes"] for r in rows
+           if r.get("n_docs") == top and "hbm_bytes" in r}
+    claimed = None
+    if "fused" in hbm and "composed" in hbm and hbm["composed"]:
+        claimed = hbm["fused"] / hbm["composed"]
+    assert live["ratio"] is not None and live["ratio"] < 1.0, (
+        f"fused phase-1 accesses MORE bytes than composed live: "
+        f"{live['fused_bytes']:.3g} vs {live['composed_bytes']:.3g}")
+    if claimed is not None:
+        assert live["ratio"] <= claimed * slack, (
+            f"live fused/composed byte ratio {live['ratio']:.3f} exceeds "
+            f"the committed claim {claimed:.3f} by more than {slack}x")
+    return {"live": live, "claimed_ratio": claimed, "n_docs": top}

@@ -27,18 +27,37 @@ from __future__ import annotations
 
 import json
 import math
+import re
 import threading
 import time
 from collections import deque
 from typing import List, Optional
 
-__all__ = ["prometheus_text", "MetricsExporter"]
+__all__ = ["prometheus_text", "MetricsExporter", "health_gauges",
+           "device_gauges"]
 
 _QUANTILES = ("p50", "p90", "p99", "p999")
 
+# exposition grammar: metric names are [a-zA-Z_:][a-zA-Z0-9_:]*, label
+# names [a-zA-Z_][a-zA-Z0-9_]*.  Registry names are dotted and benign by
+# convention, but nothing stops a caller labelling with arbitrary
+# strings -- sanitize at the seam so the output always parses.
+_NAME_BAD = re.compile(r"[^a-zA-Z0-9_:]")
+_LABEL_BAD = re.compile(r"[^a-zA-Z0-9_]")
+
 
 def _name(prefix: str, name: str, suffix: str = "") -> str:
-    return prefix + name.replace(".", "_").replace("-", "_") + suffix
+    n = _NAME_BAD.sub("_", name)
+    if n and n[0].isdigit():
+        n = "_" + n
+    return prefix + n + suffix
+
+
+def _label_name(k: str) -> str:
+    k = _LABEL_BAD.sub("_", k)
+    if not k or k[0].isdigit():
+        k = "_" + k
+    return k
 
 
 def _escape(v: str) -> str:
@@ -47,15 +66,26 @@ def _escape(v: str) -> str:
 
 def _labelset(label_str: str, extra: str = "") -> str:
     """Registry ``"k=v,k=v"`` label identity -> ``{k="v",...}`` (plus an
-    optional pre-rendered extra pair, for quantile labels)."""
+    optional pre-rendered extra pair, for quantile labels).  Label
+    values may themselves contain ``,``/``=`` (device names, paths);
+    splitting on the FIRST ``=`` of each comma part and gluing valueless
+    parts back onto the previous value keeps such identities lossless
+    enough for exposition, and ``_escape`` guarantees the rendered text
+    always parses."""
     pairs = []
     if label_str:
         for part in label_str.split(","):
-            k, _, v = part.partition("=")
-            pairs.append(f'{k}="{_escape(v)}"')
+            k, eq, v = part.partition("=")
+            if not eq and pairs:
+                # a comma inside the previous value: re-attach
+                prev_k, prev_v = pairs[-1]
+                pairs[-1] = (prev_k, prev_v + "," + part)
+                continue
+            pairs.append((k, v))
+    rendered = [f'{_label_name(k)}="{_escape(v)}"' for k, v in pairs]
     if extra:
-        pairs.append(extra)
-    return "{" + ",".join(pairs) + "}" if pairs else ""
+        rendered.append(extra)
+    return "{" + ",".join(rendered) + "}" if rendered else ""
 
 
 def _num(v) -> str:
@@ -175,3 +205,39 @@ class MetricsExporter:
             if self._file is not None:
                 self._file.close()
                 self._file = None
+
+
+# -------------------------------------------------- derived gauge series
+_STATUS_CODE = {"green": 0, "yellow": 1, "red": 2}
+
+
+def health_gauges(registry, health: dict) -> None:
+    """Mirror a :func:`~repro.obs.stats.cluster_health` dict into gauge
+    series (``cluster.health.*``), so scrapers get the ``_cluster/
+    health`` verdict without parsing stats JSON.  Status encodes
+    green=0 / yellow=1 / red=2 -- alert on ``> 0``."""
+    registry.gauge("cluster.health.status").set(
+        _STATUS_CODE.get(health["status"], 2))
+    registry.gauge("cluster.health.up_groups").set(health["up_groups"])
+    registry.gauge("cluster.health.n_groups").set(health["n_groups"])
+    registry.gauge("cluster.health.pending_requests").set(
+        health["pending_requests"])
+    registry.gauge("cluster.health.in_flight_restores").set(
+        health["in_flight_restores"])
+    registry.gauge("cluster.health.pending_maintenance").set(
+        len(health["pending_maintenance"]))
+    registry.gauge("cluster.health.generation").set(health["generation"])
+
+
+def device_gauges(registry, device: dict, **labels) -> None:
+    """Mirror a :func:`~repro.obs.device.device_bytes` dict into gauge
+    series: total index bytes (plus any caller labels, e.g.
+    ``group=g``), one labelled series per section, one per device."""
+    registry.gauge("device.index_bytes", **labels).set(
+        device["total_bytes"])
+    for section, b in device["sections"].items():
+        registry.gauge("device.index_section_bytes", section=section,
+                       **labels).set(b)
+    for dev, b in device.get("per_device", {}).items():
+        registry.gauge("device.resident_bytes", device=dev,
+                       **labels).set(b)

@@ -40,7 +40,8 @@ import os
 from typing import Optional
 
 __all__ = ["index_stats", "engine_stats", "cluster_stats", "store_stats",
-           "format_stats_line", "format_segments_line"]
+           "cluster_health", "node_stats", "format_stats_line",
+           "format_segments_line", "format_health_line"]
 
 
 def _hist(registry, name: str, **labels) -> dict:
@@ -69,8 +70,13 @@ def _compile_stats(watch) -> dict:
     list -- stats lines want the totals; ``watch.stats()`` has the rest.
     """
     s = watch.stats()
-    return {k: s[k] for k in ("compiles_total", "compiles_steady_state",
-                              "steady", "signatures", "by_function")}
+    out = {k: s[k] for k in ("compiles_total", "compiles_steady_state",
+                             "steady", "signatures", "by_function")}
+    # the static-cost rollup (FLOPs/bytes per region) rides the same
+    # section; raw rows stay on watch.costs for the diagnostics bundle
+    cost = watch.costs.stats()
+    out["cost"] = {"n_rows": cost["n_rows"], "by_region": cost["by_region"]}
+    return out
 
 
 def index_stats(index) -> dict:
@@ -224,6 +230,123 @@ def cluster_stats(cluster) -> dict:
     if cluster.store is not None:
         out["store"] = store_stats(cluster.store)
     return out
+
+
+def cluster_health(cluster) -> dict:
+    """ES ``GET _cluster/health``: one green/yellow/red verdict derived
+    from the HealthMap, plus everything an operator triages with --
+    queue depths, in-flight restores, pending maintenance plans, and
+    the transition ledger the verdict must reconcile against.
+
+    Status derivation (the ES shard-allocation analogy, per replica
+    group): **green** = every group routable; **yellow** = some groups
+    down but at least one copy still serving (reduced redundancy, full
+    availability -- exactly ES yellow); **red** = no routable group.
+
+    Reconciliation contract (pinned by tests + ``make smoke-health``):
+    the ledger's ``down`` events equal the ``health.down_transitions``
+    counter total one-for-one (likewise ``up``/``readmit``), and
+    replaying the ledger lands on the reported down-set -- the verdict
+    can never drift from the events that produced it."""
+    reg = cluster.metrics
+    h = cluster.health.snapshot()
+    down = set(h["down"])
+    up_groups = h["n_groups"] - len(down)
+    status = ("green" if not down
+              else "yellow" if up_groups else "red")
+    queue_depths = {}
+    for g, b in enumerate(cluster.batchers):
+        with b._lock:
+            queue_depths[g] = len(b._queue) + b._inflight
+    maint = (cluster.maintenance.pending_plans()
+             if cluster.maintenance is not None else [])
+    return {
+        "status": status,
+        "n_groups": h["n_groups"],
+        "up_groups": up_groups,
+        "down": h["down"],
+        "drained": h["drained"],
+        "generation": h["generation"],
+        "queue_depths": queue_depths,
+        "pending_requests": sum(queue_depths.values()),
+        "in_flight_restores": getattr(cluster, "restores_in_flight", 0),
+        "restores_completed": reg.total("cluster.restores"),
+        "pending_maintenance": maint,
+        "transitions": list(cluster.health.transitions()),
+        "counters": {
+            "down_transitions": reg.total("health.down_transitions"),
+            "readmits": reg.total("health.readmits"),
+            "mark_ups": reg.total("health.mark_ups"),
+        },
+    }
+
+
+def format_health_line(health: dict) -> str:
+    """One ``_cat/health``-style line from a :func:`cluster_health`
+    dict: status, routable groups, pending work, restore/maintenance
+    activity, cluster-state generation."""
+    parts = [f"health {health['status']} "
+             f"groups={health['up_groups']}/{health['n_groups']}up"]
+    if health["down"]:
+        parts.append("down=" + ",".join(str(g) for g in health["down"]))
+    if health["drained"]:
+        parts.append("drained="
+                     + ",".join(str(g) for g in health["drained"]))
+    parts.append(f"pending={health['pending_requests']}")
+    parts.append(f"restores={health['in_flight_restores']}")
+    parts.append(f"maint={len(health['pending_maintenance'])}")
+    parts.append(f"gen={health['generation']}")
+    return " ".join(parts)
+
+
+def node_stats(engine) -> dict:
+    """ES ``GET _nodes/stats``: per-device residency for everything the
+    engine serves.  Every backend device gets a node entry (platform,
+    process, backend ``memory_stats()`` where exposed -- None on CPU);
+    index bytes are attributed per device through each leaf's physical
+    shards (:func:`repro.obs.device.device_bytes`), split per replica
+    group for a cluster."""
+    import jax
+
+    from repro.obs.device import device_bytes
+
+    nodes: dict = {}
+    for dev in jax.devices():
+        ms = None
+        try:
+            ms = dev.memory_stats()
+        except Exception:
+            pass
+        nodes[str(dev)] = {
+            "platform": dev.platform,
+            "process_index": int(dev.process_index),
+            "index_bytes": 0,
+            "index_bytes_by_group": {},
+            "memory_stats": ms,
+        }
+    batchers = getattr(engine, "batchers", None)
+    if batchers is not None:
+        indexes = [(g, b.index) for g, b in enumerate(batchers)]
+    else:
+        indexes = [(0, engine.index)]
+    total = 0
+    for g, idx in indexes:
+        db = device_bytes(idx, reconcile=False)
+        total += db["total_bytes"]
+        for dstr, b in db["per_device"].items():
+            node = nodes.setdefault(dstr, {
+                "platform": "?", "process_index": 0, "index_bytes": 0,
+                "index_bytes_by_group": {}, "memory_stats": None})
+            node["index_bytes"] += b
+            node["index_bytes_by_group"][g] = (
+                node["index_bytes_by_group"].get(g, 0) + b)
+    return {
+        "n_devices": len(nodes),
+        "total_index_bytes": total,
+        "device_resident_bytes": sum(n["index_bytes"]
+                                     for n in nodes.values()),
+        "nodes": nodes,
+    }
 
 
 def store_stats(store) -> dict:

@@ -316,6 +316,22 @@ class BatchedSearchEngine:
 
         return engine_stats(self)
 
+    def node_stats(self) -> dict:
+        """ES ``GET _nodes/stats``: per-device residency of the served
+        index (see :func:`repro.obs.stats.node_stats`)."""
+        from repro.obs.stats import node_stats
+
+        return node_stats(self)
+
+    def device_stats(self) -> dict:
+        """Exact index-resident byte accounting for the served index --
+        per leaf, per section, per device, reconciled against
+        ``jax.live_arrays()`` (see :func:`repro.obs.device.
+        device_bytes`)."""
+        from repro.obs.device import device_bytes
+
+        return device_bytes(self.index)
+
     def close(self):
         with self._lock:
             self._stop = True

@@ -142,7 +142,11 @@ def test_engine_profile_tree_reconciles(sidx, queries):
 def test_full_instrumentation_bit_parity_all_engines(sidx, queries):
     """THE acceptance pin: every engine, segments + tombstones live,
     metrics + tracer + slow log + compile watch + profile trees ON --
-    results bit-identical to a bare engine."""
+    and the v3 plane polled between requests (device byte accounting +
+    node stats + cost capture) -- results bit-identical to a bare
+    engine, and every region the watch saw compile has a cost row."""
+    from repro.obs import device_bytes, missing_cost_regions, node_stats
+
     for engine in ALL_ENGINES:
         bare = BatchedSearchEngine(
             sidx, batch_size=4, k=5, page=N_DOCS, trim=None,
@@ -153,9 +157,16 @@ def test_full_instrumentation_bit_parity_all_engines(sidx, queries):
                 bi, bs = bare.search(q, timeout=60)
                 ii, iscore, tree = inst.search(q, timeout=60,
                                                profile=True)
+                # poll the telemetry plane mid-serve, exactly like the
+                # smoke-health poller thread does
+                dev = device_bytes(sidx, reconcile=False)
+                assert dev["total_bytes"] > 0
+                node_stats(inst)
                 assert np.array_equal(bi, ii), engine
                 assert np.array_equal(bs, iscore), engine
                 assert tree["children"], engine
+            # cost attribution: no serving compile left unattributed
+            assert missing_cost_regions(inst.compile_watch) == [], engine
         finally:
             bare.close()
             inst.close()

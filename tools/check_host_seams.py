@@ -1,0 +1,189 @@
+#!/usr/bin/env python3
+"""Static lint: no host-side observability calls inside jitted bodies.
+
+The entire obs plane (PRs 6-9) rests on one convention: instrumentation
+records timestamps and metrics AROUND jitted program dispatch, never
+inside it.  A ``time.monotonic()`` or ``MetricsRegistry`` call that
+drifts into a traced function body would either burn a constant into
+the compiled program (silently wrong telemetry) or force a host
+callback (silently slow kernels) -- and nothing enforced the convention
+mechanically.  This lint does:
+
+1. parse every module under ``src/repro`` and collect the *jit roots*:
+   function defs decorated with ``jax.jit`` / ``partial(jax.jit, ...)``,
+   plus any local ``def``/``lambda`` passed positionally to ``jax.jit``
+   or ``shard_map`` (name lookup is by simple module-wide match -- an
+   over-approximation, which for a lint is the right direction);
+2. walk each root's body INCLUDING nested defs (inner functions run
+   traced too) and fail on:
+   - any ``time.*`` call (or a call to a name imported from ``time``),
+   - any reference to ``MetricsRegistry`` / ``default_registry`` or a
+     method call on an attribute named ``metrics``.
+
+Exit 0 when clean, 1 with ``file:line`` diagnostics otherwise.  Wired
+into ``make test`` so the seam invariant fails the build, not a code
+review.  No JAX import, no repo import -- pure ``ast``, so it runs in
+milliseconds anywhere.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from typing import List, Optional, Tuple
+
+DEFAULT_ROOT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src", "repro")
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    d = _dotted(node)
+    return d in ("jax.jit", "jit")
+
+
+def _is_partial_jit(call: ast.Call) -> bool:
+    """``partial(jax.jit, ...)`` / ``functools.partial(jax.jit, ...)``."""
+    if _dotted(call.func) not in ("partial", "functools.partial"):
+        return False
+    return any(_is_jit_ref(a) for a in call.args)
+
+
+def _is_jitted_def(fn) -> bool:
+    for dec in fn.decorator_list:
+        if _is_jit_ref(dec):
+            return True
+        if isinstance(dec, ast.Call) and (_is_jit_ref(dec.func)
+                                          or _is_partial_jit(dec)):
+            return True
+    return False
+
+
+class _RootCollector(ast.NodeVisitor):
+    """Names passed to jax.jit/shard_map + inline lambdas/defs."""
+
+    def __init__(self):
+        self.jitted_names: set = set()
+        self.inline_roots: List[ast.AST] = []
+
+    def visit_Call(self, call: ast.Call):
+        callee = _dotted(call.func)
+        if _is_jit_ref(call.func) or callee in ("shard_map",
+                                                "jax.shard_map"):
+            for arg in call.args[:1]:     # the traced callable is arg 0
+                if isinstance(arg, ast.Name):
+                    self.jitted_names.add(arg.id)
+                elif isinstance(arg, (ast.Lambda, ast.Call)):
+                    self.inline_roots.append(arg)
+        self.generic_visit(call)
+
+
+class _SeamChecker(ast.NodeVisitor):
+    """Walk one jitted body; record host-seam violations."""
+
+    def __init__(self, path: str, root_name: str, time_names: set):
+        self.path = path
+        self.root_name = root_name
+        self.time_names = time_names
+        self.violations: List[Tuple[str, int, str]] = []
+
+    def _flag(self, node: ast.AST, what: str):
+        self.violations.append(
+            (self.path, node.lineno,
+             f"{what} inside jitted body of '{self.root_name}'"))
+
+    def visit_Call(self, call: ast.Call):
+        d = _dotted(call.func)
+        if d is not None:
+            head, _, _rest = d.partition(".")
+            if head == "time" and "." in d:
+                self._flag(call, f"'{d}()' (host clock)")
+            elif d in self.time_names:
+                self._flag(call, f"'{d}()' (imported from time)")
+            elif "metrics." in d or d.startswith("metrics."):
+                self._flag(call, f"'{d}()' (metrics record)")
+        self.generic_visit(call)
+
+    def visit_Name(self, name: ast.Name):
+        if name.id in ("MetricsRegistry", "default_registry"):
+            self._flag(name, f"'{name.id}' reference")
+        self.generic_visit(name)
+
+
+def _time_imports(tree: ast.Module) -> set:
+    """Names bound from ``from time import ...`` at module level."""
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "time":
+            for alias in node.names:
+                names.add(alias.asname or alias.name)
+    return names
+
+
+def check_file(path: str) -> List[Tuple[str, int, str]]:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as exc:
+        return [(path, exc.lineno or 0, f"syntax error: {exc.msg}")]
+    time_names = _time_imports(tree)
+
+    collector = _RootCollector()
+    collector.visit(tree)
+
+    roots: List[Tuple[str, ast.AST]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _is_jitted_def(node) or node.name in collector.jitted_names:
+                roots.append((node.name, node))
+    for node in collector.inline_roots:
+        roots.append(("<lambda>", node))
+
+    violations: List[Tuple[str, int, str]] = []
+    for name, root in roots:
+        checker = _SeamChecker(path, name, time_names)
+        body = root.body if hasattr(root, "body") else [root]
+        if isinstance(body, list):
+            for stmt in body:
+                checker.visit(stmt)
+        else:                               # lambda body: an expression
+            checker.visit(body)
+        violations.extend(checker.violations)
+    return violations
+
+
+def main(argv: List[str]) -> int:
+    root = argv[1] if len(argv) > 1 else DEFAULT_ROOT
+    files = []
+    for dirpath, _dirs, fnames in os.walk(root):
+        files.extend(os.path.join(dirpath, fn)
+                     for fn in fnames if fn.endswith(".py"))
+    violations = []
+    for path in sorted(files):
+        violations.extend(check_file(path))
+    if violations:
+        for path, line, msg in violations:
+            print(f"{path}:{line}: {msg}", file=sys.stderr)
+        print(f"check_host_seams: {len(violations)} violation(s) in "
+              f"{root}", file=sys.stderr)
+        return 1
+    print(f"check_host_seams: OK ({len(files)} files, "
+          f"no host calls in jitted bodies)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
